@@ -1,0 +1,33 @@
+"""Shared benchmark plumbing: wall-clock timing, CSV emission."""
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable, Dict, Iterable, List
+
+
+def timed(fn: Callable, *args, repeats: int = 1, **kw):
+    """Run fn, return (result, seconds). jax results are block_until_ready'd."""
+    import jax
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+        jax.block_until_ready(jax.tree.leaves(
+            out.W if hasattr(out, "W") else out))
+    return out, (time.perf_counter() - t0) / repeats
+
+
+def write_csv(path: str, header: List[str], rows: Iterable[Iterable]):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(",".join(header) + "\n")
+        for r in rows:
+            f.write(",".join(str(x) for x in r) + "\n")
+    return path
+
+
+def emit(name: str, seconds: float, derived: Dict[str, float]):
+    """One stdout CSV line per benchmark: name,us_per_call,derived..."""
+    d = ";".join(f"{k}={v:.6g}" for k, v in derived.items())
+    print(f"{name},{seconds * 1e6:.1f},{d}", flush=True)

@@ -1,0 +1,37 @@
+"""Fig 2 — excess prediction error vs rounds, multi-task CLASSIFICATION
+(logistic loss, labels in {-1,+1}). Reuses the Fig-1 harness."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.data.synthetic import SimSpec, excess_risk_classification, \
+    generate
+
+from .fig1_regression import check_claims, run_config
+
+CONFIGS = {
+    "base": SimSpec(p=60, m=20, r=4, n=120, task="classification"),
+    "more_tasks": SimSpec(p=60, m=40, r=4, n=120, task="classification"),
+}
+
+
+def main(out_dir: str = "results/bench") -> None:
+    for i, (name, spec) in enumerate(CONFIGS.items()):
+        key = jax.random.PRNGKey(100 + i)
+        _, _, Wstar, Sigma = generate(key, spec)   # same key -> same W*
+        risk = functools.partial(excess_risk_classification,
+                                 jax.random.PRNGKey(999))
+
+        def risk_fn(W, Wstar=Wstar, Sigma=Sigma):
+            return float(risk(W, Wstar, Sigma))
+
+        curves = run_config(key, name, spec, out_dir,
+                            task="classification", loss="logistic",
+                            risk_fn=risk_fn)
+        check_claims(curves, f"fig2/{name}")
+
+
+if __name__ == "__main__":
+    main()

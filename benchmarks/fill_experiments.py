@@ -1,0 +1,94 @@
+"""Inject the §Dry-run and §Roofline tables into EXPERIMENTS.md from the
+sweep artifacts (idempotent: replaces the placeholder/previous blocks)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+
+from .roofline_table import load_rows
+
+START_D = "<!-- DRYRUN-TABLE -->"
+START_R = "<!-- ROOFLINE-TABLE -->"
+START_READ = "<!-- ROOFLINE-READING -->"
+
+
+def dryrun_table(dryrun_dir="results/dryrun") -> str:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        d = json.load(open(path))
+        if d.get("status") == "SKIP":
+            continue
+        mem = d.get("memory", {})
+        rows.append((d["arch"], d["shape"], d["mesh"],
+                     d.get("layout", "?"), d.get("fsdp", "?"),
+                     f"{mem.get('argument_size_in_bytes', 0)/2**30:.1f}",
+                     f"{mem.get('temp_size_in_bytes', 0)/2**30:.1f}",
+                     d.get("collectives", {}).get("count", 0)))
+    out = [START_D, "",
+           "| arch | shape | mesh | layout | fsdp | args GiB/dev | "
+           "temp GiB/dev | #collectives |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append("| " + " | ".join(str(x) for x in r) + " |")
+    out.append("")
+    return "\n".join(out)
+
+
+def roofline_table() -> str:
+    rows = load_rows()
+    out = [START_R, "",
+           "| arch | shape | layout | dominant | compute ms | memory ms | "
+           "collective ms | useful |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(f"| {r[0]} | {r[1]} | {r[2]} | {r[3]} | {r[4]} | "
+                   f"{r[5]} | {r[6]} | {r[7]} |")
+    out.append("")
+    return "\n".join(out)
+
+
+def reading() -> str:
+    rows = [r for r in load_rows() if r[-1] == "OK"]
+    by_dom = {}
+    for r in rows:
+        by_dom.setdefault(r[3], []).append(f"{r[0]}/{r[1]}")
+    lines = [START_READ, ""]
+    lines.append("* **decode** is memory-bound everywhere (weight + "
+                 "KV/state reads; batch amortizes poorly at 1 token/seq) "
+                 "— the classic serving roofline.")
+    lines.append("* **train/prefill** splits by layout: dp/cp pairs are "
+                 "compute-bound (attention quadratic term at 32k; honest "
+                 "work), tp pairs are collective-bound (megatron "
+                 "partial-sum all-reduces; §Perf H1/H2 drive them down).")
+    for dom in ("compute", "memory", "collective"):
+        pairs = by_dom.get(dom, [])
+        lines.append(f"* {dom}-bound ({len(pairs)}): "
+                     + ", ".join(pairs))
+    lines.append("* per-pair one-liners on what would move the dominant "
+                 "term live in the JSON artifacts' `per_layer` breakdown "
+                 "+ §Perf; the three hillclimbed pairs are annotated "
+                 "below.")
+    lines.append("")
+    return "\n".join(lines)
+
+
+def main(out_dir: str = "results/bench") -> None:
+    path = "EXPERIMENTS.md"
+    s = open(path).read()
+    for marker, block in [(START_D, dryrun_table()),
+                          (START_R, roofline_table()),
+                          (START_READ, reading())]:
+        # replace from marker to the next blank-line-followed-by-# or
+        # next marker; simplest: if marker still bare, swap it; else
+        # replace the previously injected block
+        pat = re.compile(re.escape(marker) + r"(?:\n(?:\|[^\n]*\n|[^\n#<]"
+                         r"[^\n]*\n|\n)*)?")
+        s = pat.sub(block + "\n", s, count=1)
+    open(path, "w").write(s)
+    print("EXPERIMENTS.md tables refreshed")
+
+
+if __name__ == "__main__":
+    main()

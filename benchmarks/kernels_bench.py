@@ -1,0 +1,79 @@
+"""Kernel micro-benchmarks: Pallas (interpret on CPU — correctness-path
+timing only; TPU numbers come from real hardware) vs the XLA reference,
+plus the analytic VMEM working set per BlockSpec tile."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.mtl_grad import task_gradients
+from repro.kernels.mtl_grad.ref import task_gradients_ref
+from repro.kernels.ssm_scan import selective_scan
+from repro.kernels.ssm_scan.ref import selective_scan_ref
+
+from .common import emit, timed, write_csv
+
+
+def vmem_bytes_flash(bq, bk, hd):
+    # q + k + v tiles + scores + acc/m/l scratch, f32
+    return 4 * (bq * hd + 2 * bk * hd + bq * bk + bq * hd + 2 * bq)
+
+
+def vmem_bytes_ssm(chunk, I, N):
+    return 4 * (2 * chunk * I + 2 * chunk * N + I * N)
+
+
+def vmem_bytes_mtl(br, p):
+    return 4 * (br * p + br + 2 * p)
+
+
+def main(out_dir: str = "results/bench") -> None:
+    rows = []
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+
+    B, S, H, Hkv, hd = 1, 512, 4, 2, 64
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd))
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd))
+    _, t_pl = timed(lambda: flash_attention(q, k, v), repeats=2)
+    qt = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kt = k.transpose(0, 2, 1, 3).reshape(B * Hkv, S, hd)
+    vt = v.transpose(0, 2, 1, 3).reshape(B * Hkv, S, hd)
+    _, t_ref = timed(lambda: attention_ref(qt, kt, vt), repeats=2)
+    vm = vmem_bytes_flash(128, 128, hd)
+    emit("kernels/flash_attention", t_pl,
+         {"ref_s": t_ref, "vmem_tile_bytes": vm})
+    rows.append(["flash_attention", t_pl, t_ref, vm])
+
+    B, S, I, N = 2, 256, 64, 16
+    x = jax.random.normal(ks[0], (B, S, I))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, I)))
+    Bc = jax.random.normal(ks[2], (B, S, N))
+    Cc = jax.random.normal(ks[3], (B, S, N))
+    A = -jnp.exp(jax.random.normal(ks[4], (I, N)))
+    _, t_pl = timed(lambda: selective_scan(x, dt, Bc, Cc, A), repeats=2)
+    _, t_ref = timed(lambda: selective_scan_ref(x, dt, Bc, Cc, A),
+                     repeats=2)
+    vm = vmem_bytes_ssm(64, I, N)
+    emit("kernels/ssm_scan", t_pl, {"ref_s": t_ref, "vmem_tile_bytes": vm})
+    rows.append(["ssm_scan", t_pl, t_ref, vm])
+
+    m, n, p = 16, 512, 64
+    X = jax.random.normal(ks[0], (m, n, p))
+    W = jax.random.normal(ks[1], (m, p))
+    y = jax.random.normal(ks[2], (m, n))
+    _, t_pl = timed(lambda: task_gradients(X, y, W), repeats=2)
+    _, t_ref = timed(lambda: task_gradients_ref(X, y, W), repeats=2)
+    vm = vmem_bytes_mtl(256, p)
+    emit("kernels/mtl_grad", t_pl, {"ref_s": t_ref, "vmem_tile_bytes": vm})
+    rows.append(["mtl_grad", t_pl, t_ref, vm])
+
+    write_csv(f"{out_dir}/kernels.csv",
+              ["kernel", "pallas_interpret_s", "xla_ref_s",
+               "vmem_tile_bytes"], rows)
+
+
+if __name__ == "__main__":
+    main()

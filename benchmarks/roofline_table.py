@@ -1,0 +1,54 @@
+"""Render the §Roofline table from the sweep artifacts
+(results/roofline/*.json from launch/roofline_sweep.py and
+results/dryrun/*.json from launch/dryrun.py)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import write_csv
+
+HEADER = ["arch", "shape", "layout", "dominant", "t_compute_ms",
+          "t_memory_ms", "t_collective_ms", "useful_flops_ratio",
+          "flops_per_dev", "hbm_bytes", "coll_bytes", "status"]
+
+
+def load_rows(roofline_dir: str = "results/roofline"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(roofline_dir, "*.json"))):
+        d = json.load(open(path))
+        if d.get("status") == "SKIP":
+            rows.append([d["arch"], d["shape"], "-", "SKIP", 0, 0, 0, 0,
+                         0, 0, 0, "SKIP"])
+            continue
+        if d.get("status") != "OK":
+            rows.append([d["arch"], d["shape"], "-", "FAIL", 0, 0, 0, 0,
+                         0, 0, 0, "FAIL"])
+            continue
+        useful = d["model_flops_per_device"] / max(d["flops"], 1.0)
+        rows.append([
+            d["arch"], d["shape"], d.get("layout", "?"), d["dominant"],
+            round(d["t_compute_s"] * 1e3, 3),
+            round(d["t_memory_s"] * 1e3, 3),
+            round(d["t_collective_s"] * 1e3, 3),
+            round(useful, 3), f"{d['flops']:.4g}",
+            f"{d['hbm_bytes']:.4g}", f"{d['collective_bytes']:.4g}", "OK"])
+    return rows
+
+
+def main(out_dir: str = "results/bench") -> None:
+    rows = load_rows()
+    if not rows:
+        print("roofline_table: no sweep artifacts yet "
+              "(run repro.launch.roofline_sweep)")
+        return
+    write_csv(f"{out_dir}/roofline_table.csv", HEADER, rows)
+    colw = [max(len(str(r[i])) for r in [HEADER] + rows)
+            for i in range(len(HEADER))]
+    for r in [HEADER] + rows:
+        print("  ".join(str(v).ljust(w) for v, w in zip(r, colw)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only NAME] [--out DIR]
+
+Emits one CSV line per benchmark to stdout (name,us_per_call,derived)
+and writes per-table CSVs under --out (default results/bench). The
+roofline table additionally requires the dry-run sweep artifacts.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+BENCHES = [
+    ("table1_comm", "Table 1: rounds/communication per method"),
+    ("fig1_regression", "Fig 1: regression sims, error vs rounds"),
+    ("fig2_classification", "Fig 2: classification sims"),
+    ("fig3_correlated", "Fig 3: correlated features, SVD-trunc failure"),
+    ("fig4_real", "Fig 4/8: real-data surrogates"),
+    ("distributed_bench", "shard_map vs simulated equivalence + traffic"),
+    ("kernels_bench", "Pallas kernel micro-benchmarks"),
+    ("roofline_table", "roofline terms per (arch x shape) from dry-run"),
+]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--out", default="results/bench")
+    args = ap.parse_args()
+
+    failures = []
+    for mod_name, desc in BENCHES:
+        if args.only and args.only != mod_name:
+            continue
+        print(f"== {mod_name}: {desc}", flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{mod_name}",
+                             fromlist=["main"])
+            mod.main(args.out)
+            print(f"== {mod_name} done in {time.time() - t0:.1f}s",
+                  flush=True)
+        except Exception:
+            failures.append(mod_name)
+            print(f"== {mod_name} FAILED\n{traceback.format_exc()}",
+                  flush=True)
+    if failures:
+        print("BENCHMARKS FAILED:", ", ".join(failures))
+        return 1
+    print("BENCHMARKS: ALL OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

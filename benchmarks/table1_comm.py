@@ -1,0 +1,65 @@
+"""Table 1 — resources per approach (measured vs theory).
+
+Runs every solver on a common simulated problem and reports, per method:
+  rounds          measured master<->worker rounds
+  vectors/machine measured p-dim vectors communicated per machine
+  theory          the Table-1 communication expression evaluated at the
+                  run's (m, p, H, A, eps) for the iterative methods
+The measured ledger comes from core/comm.py (the paper's own unit of
+account: p-dimensional real vectors per machine).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.methods import MTLProblem, get_solver
+from repro.data.synthetic import SimSpec, generate
+
+from .common import emit, timed, write_csv
+
+# (solver, kwargs, theory-communication-per-machine in vectors,
+#  master-computation label) — Table 1 rows
+ROWS = [
+    ("local", {}, lambda c: 0, "0"),
+    ("centralize", {"lam": 0.01}, lambda c: c["n"], "NuclearNormMin"),
+    ("proxgd", {"lam": 0.01, "rounds": 60}, lambda c: 2 * c["rounds"],
+     "SV shrinkage"),
+    ("accproxgd", {"lam": 0.01, "rounds": 60}, lambda c: 2 * c["rounds"],
+     "SV shrinkage"),
+    ("admm", {"lam": 0.01, "rho": 0.5, "rounds": 60},
+     lambda c: 3 * c["rounds"], "SV shrinkage"),
+    ("dfw", {"rounds": 60}, lambda c: 2 * c["rounds"], "leading SV"),
+    ("dgsp", {"rounds": 8}, lambda c: 2 * c["rounds"], "leading SV"),
+    ("dnsp", {"rounds": 8, "damping": 0.5, "l2": 1e-3},
+     lambda c: 2 * c["rounds"], "leading SV"),
+]
+
+
+def main(out_dir: str = "results/bench") -> None:
+    spec = SimSpec(p=60, m=16, r=4, n=100)
+    Xs, ys, Wstar, Sigma = generate(jax.random.PRNGKey(0), spec)
+    prob = MTLProblem.make(Xs, ys, "squared", A=2.0, r=4)
+
+    rows = []
+    for name, kw, theory, master in ROWS:
+        res, secs = timed(get_solver(name), prob, **kw)
+        ctx = {"rounds": kw.get("rounds", 1), "n": spec.n, "m": spec.m,
+               "p": spec.p}
+        meas_vec = res.comm.vectors_per_machine() \
+            if hasattr(res.comm, "vectors_per_machine") else \
+            sum(e.vectors for e in res.comm.events)
+        rows.append([name, res.comm.rounds, meas_vec, theory(ctx),
+                     master, f"{secs:.3f}"])
+        emit(f"table1/{name}", secs,
+             {"rounds": res.comm.rounds, "vectors": meas_vec,
+              "theory_vectors": theory(ctx)})
+        # measured == theoretical accounting (the ledger IS the check)
+        assert meas_vec == theory(ctx) or name in ("local", "centralize"), \
+            f"{name}: measured {meas_vec} != theory {theory(ctx)}"
+    write_csv(f"{out_dir}/table1_comm.csv",
+              ["method", "rounds", "vectors_per_machine", "theory",
+               "master_comp", "seconds"], rows)
+
+
+if __name__ == "__main__":
+    main()

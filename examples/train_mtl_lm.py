@@ -1,0 +1,154 @@
+"""End-to-end driver: pretrain an LM backbone, then learn a multi-task
+head with the paper's communication-efficient solvers.
+
+Pipeline (the paper's "two-layer network" reading, §1):
+  1. train a decoder-only backbone (reduced gemma-style config) on a
+     synthetic token stream with the full training stack — AdamW,
+     cosine schedule, grad clip, remat, checkpointing;
+  2. freeze it, extract pooled features for m synthetic "machines"
+     (tasks), and fit the shared-subspace MTLHead with DGSP/DNSP;
+  3. compare against Local heads — the multi-task gain on top of a
+     REAL backbone.
+
+Defaults are CPU-friendly (~9M params, 120 steps, a few minutes).
+``--preset 100m --steps 300`` reproduces the deliverable-scale run on
+real hardware (the code path is identical; only dims change).
+
+  PYTHONPATH=src python examples/train_mtl_lm.py [--steps N]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.head import MTLHead, MTLHeadConfig
+from repro.data.tokens import SyntheticTokenStream, TokenPipelineSpec
+from repro.models import forward, init_params
+from repro.train.loop import train_loop
+from repro.train.steps import TrainConfig, init_train_state, \
+    make_train_step
+
+PRESETS = {
+    "tiny": ModelConfig(arch_id="tiny-lm", n_layers=4, d_model=256,
+                        n_heads=4, n_kv_heads=2, d_ff=1024,
+                        vocab_size=2048, dtype="float32", remat=False,
+                        rope=True),
+    "100m": ModelConfig(arch_id="lm-100m", n_layers=12, d_model=768,
+                        n_heads=12, n_kv_heads=4, d_ff=3072,
+                        vocab_size=32768, dtype="bfloat16", remat=True,
+                        rope=True),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=PRESETS)
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--tasks", type=int, default=16)
+    ap.add_argument("--ckpt", default="results/ckpt_quickstart")
+    args = ap.parse_args()
+
+    cfg = PRESETS[args.preset]
+    n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(
+        jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))))
+    print(f"[1/3] pretraining {cfg.arch_id} ({n_params/1e6:.1f}M params) "
+          f"for {args.steps} steps")
+    tcfg = TrainConfig(total_steps=args.steps, warmup_steps=10)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+    stream = SyntheticTokenStream(TokenPipelineSpec(
+        vocab_size=cfg.vocab_size, seq_len=args.seq, global_batch=args.batch))
+    hist = train_loop(make_train_step(cfg, tcfg), state, iter(stream),
+                      args.steps, log_every=20, ckpt_dir=args.ckpt,
+                      ckpt_every=max(args.steps // 2, 1))
+    assert hist["loss"][-1] < hist["loss"][0], "loss should decrease"
+    state_params = None  # final params live inside the loop's state; refit
+    # NOTE: train_loop donates state; re-init a fresh forward copy from the
+    # checkpoint for feature extraction
+    from repro.train.checkpoint import load_checkpoint
+    _, state = load_checkpoint(args.ckpt)
+    params = state["params"]
+
+    print("[2/3] extracting pooled features for "
+          f"{args.tasks} tasks")
+    m, n_per, p = args.tasks, 64, cfg.d_model
+
+    # features = mean-pooled final hidden states (trunk output)
+    from repro.models.model import _embed_inputs, _trunk
+
+    @jax.jit
+    def pooled(tokens):
+        x, positions, pl_, xkv, npre = _embed_inputs(params, cfg,
+                                                     {"tokens": tokens})
+        h, _, _ = _trunk(params, cfg, x, positions)
+        return jnp.mean(h.astype(jnp.float32), axis=1)    # (B, D)
+
+    key = jax.random.PRNGKey(7)
+    # shared subspace drawn from the FEATURES' top principal directions —
+    # tasks depend on directions the backbone actually varies along
+    # (a random direction in R^p is nearly orthogonal to the feature
+    # span and would make every task pure noise)
+    pool = pooled(jax.random.randint(key, (256, args.seq), 0,
+                                     cfg.vocab_size))
+    mu = jnp.mean(pool, 0)
+    sd = jnp.std(pool, 0) + 1e-6
+    _, _, Vt = jnp.linalg.svd((pool - mu) / sd, full_matrices=False)
+    U_true = Vt[:4].T                                    # (p, 4)
+    V_true = 0.5 * jax.random.normal(key, (4, m))
+
+    def featurize(tokens):
+        F = (pooled(tokens) - mu) / sd                   # standardize
+        return F / (jnp.linalg.norm(F, axis=1, keepdims=True) + 1e-6)
+
+    # few samples per task (n << p = d_model): exactly the regime where
+    # the shared subspace pays — Local overfits, DGSP/DNSP generalize
+    n_train = max(p // 16, 12)
+
+    def task_data(j, n, salt):
+        toks = jax.random.randint(jax.random.fold_in(key, salt + j),
+                                  (n, args.seq), 0, cfg.vocab_size)
+        F = featurize(toks)
+        y = F @ (U_true @ V_true[:, j]) + 0.1 * jax.random.normal(
+            jax.random.fold_in(key, salt + 500 + j), (n,))
+        return F, y
+
+    def stack(pairs):
+        return (jnp.stack([a for a, _ in pairs]),
+                jnp.stack([b for _, b in pairs]))
+
+    Xs, ys = stack([task_data(j, n_train, 0) for j in range(m)])
+    Xv, yv = stack([task_data(j, n_train, 20_000) for j in range(m)])
+    Xt, yt = stack([task_data(j, 4 * n_train, 10_000) for j in range(m)])
+
+    def mse(W, X, y):
+        return float(jnp.mean((jnp.einsum("mnp,pm->mn", X, W) - y) ** 2))
+
+    print(f"[3/3] fitting shared-subspace heads "
+          f"(n={n_train} << p={p} per task; round selected on a "
+          f"held-out validation split — the paper's §5 protocol)")
+    results = {}
+    for solver, kwargs in [("local", {}), ("dgsp", {}),
+                           ("dnsp", {"solver_kwargs": {"damping": 0.5}})]:
+        head = MTLHead(MTLHeadConfig(solver=solver, rounds=8, rank=4,
+                                     l2=1e-3, **kwargs))
+        head.fit_features(Xs, ys)
+        iters = head.result.iterates or [head.W]
+        best = min(range(len(iters)), key=lambda i: mse(iters[i], Xv, yv))
+        results[solver] = mse(iters[best], Xt, yt)
+        comm = head.result.comm
+        print(f"  {solver:<6} TEST-mse {results[solver]:.5f}  "
+              f"(val-selected round {best})  rounds {comm.rounds}  "
+              f"vectors/machine {comm.vectors_per_machine()}")
+    assert min(results["dnsp"], results["dgsp"]) < results["local"], \
+        "shared subspace should beat per-task heads out of sample"
+    print("done: shared-subspace head trained with "
+          "communication-efficient solvers on a real backbone — "
+          f"{results['local'] / results['dnsp']:.2f}x lower test MSE "
+          "than Local.")
+
+
+if __name__ == "__main__":
+    main()

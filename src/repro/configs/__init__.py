@@ -1,0 +1,52 @@
+"""Config registry: the 10 assigned architectures + the paper's own MTL
+config, and the 4 assigned input shapes."""
+from __future__ import annotations
+
+from typing import Dict
+
+from .base import INPUT_SHAPES, InputShape, ModelConfig
+from . import (deepseek_v3_671b, falcon_mamba_7b, gemma2_2b, gemma_7b,
+               granite_moe_3b, paligemma_3b, starcoder2_3b, starcoder2_7b,
+               whisper_large_v3, zamba2_7b)
+
+_MODULES = {
+    "falcon-mamba-7b": falcon_mamba_7b,
+    "zamba2-7b": zamba2_7b,
+    "granite-moe-3b-a800m": granite_moe_3b,
+    "starcoder2-7b": starcoder2_7b,
+    "starcoder2-3b": starcoder2_3b,
+    "whisper-large-v3": whisper_large_v3,
+    "deepseek-v3-671b": deepseek_v3_671b,
+    "paligemma-3b": paligemma_3b,
+    "gemma-7b": gemma_7b,
+    "gemma2-2b": gemma2_2b,
+}
+
+ARCH_IDS = sorted(_MODULES)
+
+
+def get_config(arch_id: str, *, shape: str | None = None) -> ModelConfig:
+    """Full config; for long_500k some archs swap in their documented
+    sub-quadratic variant."""
+    mod = _MODULES[arch_id]
+    cfg = mod.FULL
+    if shape == "long_500k" and hasattr(mod, "long_context"):
+        cfg = mod.long_context()
+    return cfg
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    return _MODULES[arch_id].smoke()
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+# which (arch, shape) pairs run vs. skip (documented in DESIGN.md §5)
+def shape_supported(arch_id: str, shape_name: str) -> bool:
+    shape = INPUT_SHAPES[shape_name]
+    cfg = get_config(arch_id, shape=shape_name)
+    if shape_name == "long_500k":
+        return cfg.sub_quadratic
+    return True

@@ -1,0 +1,26 @@
+"""deepseek-v3-671b — MLA + fine-grained MoE (1 shared + 256 routed,
+top-8) + MTP [arXiv:2412.19437]."""
+from .base import ModelConfig
+
+FULL = ModelConfig(
+    arch_id="deepseek-v3-671b", family="moe",
+    source="arXiv:2412.19437 (DeepSeek-V3)",
+    n_layers=61, d_model=7168, vocab_size=129280,
+    n_heads=128, n_kv_heads=128,
+    mla=True, q_lora_rank=1536, kv_lora_rank=512,
+    qk_nope_head_dim=128, qk_rope_head_dim=64, v_head_dim=128,
+    d_ff=18432,              # dense layers (first 3)
+    moe_d_ff=2048, n_experts=256, n_experts_per_token=8,
+    n_shared_experts=1, first_k_dense=3,
+    act="silu", glu=True, router_aux_coef=0.001, mtp=True,
+)
+
+
+def smoke() -> ModelConfig:
+    return FULL.replace(n_layers=3, d_model=256, vocab_size=512,
+                        n_heads=4, n_kv_heads=4,
+                        q_lora_rank=64, kv_lora_rank=64,
+                        qk_nope_head_dim=32, qk_rope_head_dim=16,
+                        v_head_dim=32, d_ff=512, moe_d_ff=128,
+                        n_experts=4, n_experts_per_token=2, first_k_dense=1,
+                        dtype="float32", remat=False)

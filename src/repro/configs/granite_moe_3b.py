@@ -1,0 +1,19 @@
+"""granite-moe-3b-a800m — fine-grained MoE, 40 experts top-8
+[hf:ibm-granite/granite-3.0-1b-a400m-base family]."""
+from .base import ModelConfig
+
+FULL = ModelConfig(
+    arch_id="granite-moe-3b-a800m", family="moe",
+    source="hf:ibm-granite/granite-3.0 MoE family",
+    n_layers=32, d_model=1536, vocab_size=49155,
+    n_heads=24, n_kv_heads=8, head_dim=64,
+    d_ff=512, moe_d_ff=512, n_experts=40, n_experts_per_token=8,
+    act="silu", glu=True, router_aux_coef=0.01,
+)
+
+
+def smoke() -> ModelConfig:
+    return FULL.replace(n_layers=2, d_model=128, vocab_size=512,
+                        n_heads=4, n_kv_heads=2, head_dim=32,
+                        d_ff=128, moe_d_ff=128, n_experts=4,
+                        n_experts_per_token=2, dtype="float32", remat=False)

@@ -1,0 +1,23 @@
+"""paligemma-3b — SigLIP + gemma VLM [arXiv:2407.07726].
+
+The SigLIP vision tower + projector are STUBBED per the brief:
+input_specs() provides precomputed patch embeddings (B, 256, d_model).
+Prefix-LM attention: bidirectional over image+prefix tokens.
+"""
+from .base import ModelConfig
+
+FULL = ModelConfig(
+    arch_id="paligemma-3b", family="vlm",
+    source="arXiv:2407.07726 (PaliGemma); SigLIP tower stubbed",
+    n_layers=18, d_model=2048, vocab_size=257216,
+    n_heads=8, n_kv_heads=1, head_dim=256,       # MQA
+    d_ff=16384, act="gelu", glu=True,            # GeGLU
+    tie_embeddings=True, scale_embeddings=True,
+    n_patches=256, prefix_lm=True,
+)
+
+
+def smoke() -> ModelConfig:
+    return FULL.replace(n_layers=2, d_model=256, vocab_size=512,
+                        n_heads=4, n_kv_heads=1, head_dim=64, d_ff=512,
+                        n_patches=16, dtype="float32", remat=False)

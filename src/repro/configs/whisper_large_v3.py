@@ -1,0 +1,23 @@
+"""whisper-large-v3 — encoder-decoder ASR backbone [arXiv:2212.04356].
+
+The mel-spectrogram + conv frontend is STUBBED per the brief:
+input_specs() provides precomputed frame embeddings (B, 1500, d_model).
+"""
+from .base import ModelConfig
+
+FULL = ModelConfig(
+    arch_id="whisper-large-v3", family="encdec",
+    source="arXiv:2212.04356 (Whisper); conv/mel frontend stubbed",
+    n_layers=32, n_enc_layers=32, d_model=1280, vocab_size=51866,
+    n_heads=20, n_kv_heads=20, head_dim=64,
+    d_ff=5120, act="gelu", glu=False, norm="layernorm",
+    rope=False, learned_pos_embed=True,
+    n_frames=1500, max_target_positions=448,
+)
+
+
+def smoke() -> ModelConfig:
+    return FULL.replace(n_layers=2, n_enc_layers=2, d_model=256,
+                        vocab_size=512, n_heads=4, n_kv_heads=4, head_dim=64,
+                        d_ff=512, n_frames=64, max_target_positions=64,
+                        dtype="float32", remat=False)

@@ -1,0 +1,30 @@
+"""zamba2-7b — Mamba-2 trunk + shared attention block [arXiv:2411.15242].
+
+81 mamba2 layers; ONE full attention+MLP block (params shared) applied
+after every 6 SSM layers (13 applications, remainder 3 SSM layers).
+"""
+from .base import ModelConfig
+
+FULL = ModelConfig(
+    arch_id="zamba2-7b", family="hybrid",
+    source="arXiv:2411.15242 (Zamba2: Mamba2 + shared attn blocks)",
+    n_layers=81, d_model=3584, vocab_size=32000,
+    n_heads=32, n_kv_heads=32, head_dim=112, d_ff=14336,
+    ssm_state=64, ssm_conv=4, ssm_expand=2, mamba_version=2,
+    mamba_headdim=64, attn_period=6, ssm_chunk=1024,
+    act="gelu",
+)
+
+
+def long_context() -> ModelConfig:
+    """long_500k variant: the shared attention block uses a 4096-token
+    sliding window so its KV cache stays O(window) at 524k context
+    (DESIGN.md §5 — documented deviation; the SSM trunk is O(1) anyway)."""
+    return FULL.replace(sliding_window=4096)
+
+
+def smoke() -> ModelConfig:
+    return FULL.replace(n_layers=5, d_model=256, vocab_size=512,
+                        n_heads=4, n_kv_heads=4, head_dim=64, d_ff=512,
+                        ssm_state=16, mamba_headdim=32, attn_period=2,
+                        dtype="float32", remat=False)

@@ -1,0 +1,99 @@
+"""MTLHead — the paper's technique as a first-class framework feature.
+
+Attaches per-task linear heads to ANY backbone's features and trains
+them with the paper's communication-efficient solvers. Two modes:
+
+  * ``fit_features``: backbone frozen (or pre-trained); features
+    phi(x) in R^p are extracted once per task and the head problem is
+    EXACTLY the paper's problem — every solver in ``core.methods``
+    applies unchanged. This is the shared-representation reading the
+    paper itself gives ("a two-layer network, bottom layer learned
+    jointly, top layer task-specific"): the backbone provides the
+    bottom layer, the paper's algorithms learn the top.
+
+  * ``joint`` (see train/mtl_trainer.py): backbone unfrozen; the head's
+    shared-subspace structure W = U V^T is maintained by DGSP-style
+    rounds interleaved with backbone SGD steps.
+
+The head also exposes ``as_low_rank`` to freeze the learned subspace,
+which deployment can fuse into the backbone's final projection.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .methods import MTLProblem, MTLResult, get_solver
+
+
+@dataclasses.dataclass
+class MTLHeadConfig:
+    solver: str = "dgsp"          # any name in core.methods.solver_names()
+    rounds: int = 10
+    rank: int = 8                 # assumed shared-subspace rank r
+    A: float = 10.0               # per-task norm bound
+    loss: str = "squared"
+    l2: float = 1e-4
+    solver_kwargs: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class MTLHead:
+    config: MTLHeadConfig
+    W: Optional[jnp.ndarray] = None          # (p, m)
+    U: Optional[jnp.ndarray] = None          # (p, k) learned shared basis
+    result: Optional[MTLResult] = None
+
+    def fit_features(self, feats: jnp.ndarray, labels: jnp.ndarray
+                     ) -> "MTLHead":
+        """feats: (m, n, p) per-task feature matrices; labels: (m, n)."""
+        cfg = self.config
+        prob = MTLProblem.make(feats, labels, cfg.loss, A=cfg.A,
+                               r=cfg.rank, l2=cfg.l2)
+        kwargs = dict(cfg.solver_kwargs)
+        if cfg.solver in ("dgsp", "dnsp", "proxgd", "accproxgd", "admm",
+                          "dfw", "altmin"):
+            kwargs.setdefault("rounds", cfg.rounds)
+        res = get_solver(cfg.solver)(prob, **kwargs)
+        self.result = res
+        self.W = res.W
+        U = res.extras.get("U")
+        if U is not None and "mask" in res.extras:
+            U = U * res.extras["mask"][None, :]
+        self.U = U
+        return self
+
+    def predict(self, feats: jnp.ndarray) -> jnp.ndarray:
+        """feats: (m, n, p) -> margins (m, n)."""
+        if self.W is None:
+            raise RuntimeError("head not fitted")
+        return jnp.einsum("mnp,pm->mn", feats, self.W)
+
+    def as_low_rank(self) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Return (U, V) with W ~= U V^T for deployment fusion."""
+        if self.U is not None:
+            mask = jnp.linalg.norm(self.U, axis=0) > 0
+            U = self.U[:, mask]
+            V = jnp.linalg.lstsq(U, self.W)[0]
+            return U, V
+        Uf, S, Vt = jnp.linalg.svd(self.W, full_matrices=False)
+        k = self.config.rank
+        return Uf[:, :k] * S[None, :k], Vt[:k, :]
+
+
+def extract_features(apply_fn: Callable, params, inputs_per_task,
+                     batch_size: int = 64) -> jnp.ndarray:
+    """Run a backbone over per-task inputs -> (m, n, p) feature tensor.
+
+    apply_fn(params, batch) must return (batch, p) pooled features.
+    """
+    outs = []
+    for task_inputs in inputs_per_task:
+        chunks = []
+        for i in range(0, task_inputs.shape[0], batch_size):
+            chunks.append(apply_fn(params, task_inputs[i:i + batch_size]))
+        outs.append(jnp.concatenate(chunks, 0))
+    return jnp.stack(outs, 0)

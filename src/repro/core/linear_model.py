@@ -1,0 +1,160 @@
+"""Per-task linear-model primitives.
+
+Everything here is written for a SINGLE task (X: (n, p), y: (n,)) and is
+lifted over the task axis with ``jax.vmap`` (simulated cluster) or
+``shard_map`` (distributed cluster) by the callers in ``methods/`` and
+``distributed.py``.
+
+The paper's loss normalization: the global empirical objective is
+    L_n(W) = (1/m) sum_j L_nj(w_j),   L_nj(w) = (1/n) sum_i l(<w, x_ji>, y_ji)
+and the per-task gradient the workers communicate is
+    grad L_nj(w_j) = (1/(n m)) sum_i l'(<w_j, x_ji>, y_ji) x_ji
+(i.e. it carries the 1/m factor, matching Algorithm 4/5 in the paper).
+We keep the 1/m factor OUT of the per-task helpers and let callers apply
+it, so the same helpers serve both the global objective and the purely
+local ERM solves.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .losses import Loss
+
+
+def predict(w: jnp.ndarray, X: jnp.ndarray) -> jnp.ndarray:
+    return X @ w
+
+
+def task_loss(loss: Loss, w: jnp.ndarray, X: jnp.ndarray, y: jnp.ndarray,
+              l2: float = 0.0) -> jnp.ndarray:
+    """L_nj(w) (+ optional ridge term used for real-data experiments)."""
+    val = jnp.mean(loss.value(X @ w, y))
+    if l2:
+        val = val + 0.5 * l2 * jnp.sum(w * w)
+    return val
+
+
+def task_grad(loss: Loss, w: jnp.ndarray, X: jnp.ndarray, y: jnp.ndarray,
+              l2: float = 0.0) -> jnp.ndarray:
+    """grad_w L_nj(w) = (1/n) X^T l'(Xw, y) (+ l2 w)."""
+    n = X.shape[0]
+    g = X.T @ loss.d1(X @ w, y) / n
+    if l2:
+        g = g + l2 * w
+    return g
+
+
+def task_hessian(loss: Loss, w: jnp.ndarray, X: jnp.ndarray, y: jnp.ndarray,
+                 l2: float = 0.0) -> jnp.ndarray:
+    """hess_w L_nj(w) = (1/n) X^T diag(l''(Xw,y)) X (+ l2 I)."""
+    n, p = X.shape
+    d2 = loss.d2(X @ w, y)
+    Hm = (X * d2[:, None]).T @ X / n
+    if l2:
+        Hm = Hm + l2 * jnp.eye(p, dtype=X.dtype)
+    return Hm
+
+
+def newton_direction(loss: Loss, w: jnp.ndarray, X: jnp.ndarray, y: jnp.ndarray,
+                     l2: float = 0.0, damping: float = 1e-6) -> jnp.ndarray:
+    """(hess)^-1 grad — the DNSP worker message (Algorithm 6)."""
+    p = w.shape[0]
+    H = task_hessian(loss, w, X, y, l2) + damping * jnp.eye(p, dtype=X.dtype)
+    g = task_grad(loss, w, X, y, l2)
+    return jnp.linalg.solve(H, g)
+
+
+# ---------------------------------------------------------------------------
+# Per-task ERM solvers (the paper's atomic "Worker Comp. = ERM" step)
+# ---------------------------------------------------------------------------
+
+def solve_ridge(X: jnp.ndarray, y: jnp.ndarray, l2: float) -> jnp.ndarray:
+    """argmin_w (1/2n)||Xw - y||^2 + (l2/2)||w||^2, closed form."""
+    n, p = X.shape
+    A = X.T @ X / n + l2 * jnp.eye(p, dtype=X.dtype)
+    b = X.T @ y / n
+    return jnp.linalg.solve(A, b)
+
+
+def erm_newton(loss: Loss, X: jnp.ndarray, y: jnp.ndarray, l2: float = 1e-4,
+               iters: int = 25, w0: Optional[jnp.ndarray] = None,
+               damping: float = 1e-8) -> jnp.ndarray:
+    """Damped Newton for smooth ERM; exact for squared loss in one step.
+
+    Small-p regime (paper experiments use p <= ~500) so direct solves are
+    the right tool; this is the per-machine atomic step, not a bottleneck
+    we optimize. jax.lax control flow keeps it jit/vmap friendly.
+    """
+    p = X.shape[1]
+    w_init = jnp.zeros((p,), X.dtype) if w0 is None else w0
+
+    def body(_, w):
+        g = task_grad(loss, w, X, y, l2)
+        H = task_hessian(loss, w, X, y, l2) + damping * jnp.eye(p, dtype=X.dtype)
+        return w - jnp.linalg.solve(H, g)
+
+    return jax.lax.fori_loop(0, iters, body, w_init)
+
+
+def erm(loss: Loss, X: jnp.ndarray, y: jnp.ndarray, l2: float = 1e-4,
+        iters: int = 25) -> jnp.ndarray:
+    if loss.name == "squared":
+        return solve_ridge(X, y, l2)
+    return erm_newton(loss, X, y, l2, iters)
+
+
+def projected_erm(loss: Loss, U: jnp.ndarray, X: jnp.ndarray, y: jnp.ndarray,
+                  l2: float = 0.0, iters: int = 25) -> jnp.ndarray:
+    """The DGSP/DNSP re-fit: v = argmin_v L_nj(U v); returns w = U v.
+
+    Solved exactly in the k-dim subspace via the projected design XU.
+    ``U`` may contain zero-padded columns (jit-static width with a mask);
+    zero columns contribute zero features so ridge still works with a tiny
+    l2 floor.
+    """
+    XU = X @ U  # (n, k)
+    k = XU.shape[1]
+    if loss.name == "squared":
+        n = X.shape[0]
+        A = XU.T @ XU / n + max(l2, 1e-9) * jnp.eye(k, dtype=X.dtype)
+        b = XU.T @ y / n
+        v = jnp.linalg.solve(A, b)
+    else:
+        v = erm_newton(loss, XU, y, max(l2, 1e-9), iters)
+    return U @ v, v
+
+
+def project_l2_ball(w: jnp.ndarray, radius: float) -> jnp.ndarray:
+    nrm = jnp.linalg.norm(w)
+    scale = jnp.minimum(1.0, radius / jnp.maximum(nrm, 1e-12))
+    return w * scale
+
+
+# Batched (all-tasks) conveniences used by the simulated cluster -------------
+
+def batched(fn, *, in_axes):
+    """vmap a per-task helper over the task axis."""
+    return jax.vmap(fn, in_axes=in_axes)
+
+
+def all_task_grads(loss: Loss, W: jnp.ndarray, Xs: jnp.ndarray, ys: jnp.ndarray,
+                   l2: float = 0.0) -> jnp.ndarray:
+    """Gradient matrix of the GLOBAL objective: columns (1/m) grad L_nj(w_j).
+
+    W: (p, m); Xs: (m, n, p); ys: (m, n)  ->  (p, m)
+    """
+    m = W.shape[1]
+    per_task = jax.vmap(lambda w, X, y: task_grad(loss, w, X, y, l2),
+                        in_axes=(1, 0, 0), out_axes=1)
+    return per_task(W, Xs, ys) / m
+
+
+def global_loss(loss: Loss, W: jnp.ndarray, Xs: jnp.ndarray, ys: jnp.ndarray,
+                l2: float = 0.0) -> jnp.ndarray:
+    per_task = jax.vmap(lambda w, X, y: task_loss(loss, w, X, y, l2),
+                        in_axes=(1, 0, 0))
+    return jnp.mean(per_task(W, Xs, ys))

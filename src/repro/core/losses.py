@@ -1,0 +1,70 @@
+"""Instantaneous losses from the paper (Assumption 2.1 family).
+
+Each loss exposes value / first / second derivative w.r.t. the margin
+``a = <w, x>`` so that workers can form gradients and (for DNSP/ADMM
+Newton refits) Hessians without materializing anything but Gram blocks.
+
+Conventions match the paper:
+  squared:   l(a, y) = 0.5 (a - y)^2          H = 1
+  logistic:  l(a, y) = log(1 + exp(-y a)),    y in {-1, +1},   H = 1/4
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Loss:
+    name: str
+    smoothness: float  # H in the paper's Assumption 2.1
+    value: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+    d1: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+    d2: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+    def mean_loss(self, preds: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+        return jnp.mean(self.value(preds, y))
+
+
+def _sq_value(a, y):
+    return 0.5 * (a - y) ** 2
+
+
+def _sq_d1(a, y):
+    return a - y
+
+
+def _sq_d2(a, y):
+    return jnp.ones_like(a)
+
+
+squared = Loss("squared", 1.0, _sq_value, _sq_d1, _sq_d2)
+
+
+def _logistic_value(a, y):
+    # log(1 + exp(-y a)), numerically stable via softplus.
+    return jax.nn.softplus(-y * a)
+
+
+def _logistic_d1(a, y):
+    return -y * jax.nn.sigmoid(-y * a)
+
+
+def _logistic_d2(a, y):
+    s = jax.nn.sigmoid(y * a)
+    return s * (1.0 - s)
+
+
+logistic = Loss("logistic", 0.25, _logistic_value, _logistic_d1, _logistic_d2)
+
+LOSSES = {"squared": squared, "logistic": logistic}
+
+
+def get_loss(name: str) -> Loss:
+    try:
+        return LOSSES[name]
+    except KeyError:  # pragma: no cover - config error
+        raise ValueError(f"unknown loss {name!r}; have {sorted(LOSSES)}")

@@ -1,0 +1,88 @@
+"""Common API for the paper's multi-task solvers.
+
+A problem instance bundles the per-task datasets (stacked over the task
+axis — the "machines") plus the structural constants of Assumption 2.1 /
+2.3. Every solver returns an MTLResult carrying the final predictor
+matrix, the per-round iterates (for the excess-error-vs-communication
+plots of Figs 1-3), and the communication ledger.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax.numpy as jnp
+
+from ..comm import CommLog
+from ..losses import Loss, get_loss
+
+
+@dataclasses.dataclass
+class MTLProblem:
+    Xs: jnp.ndarray            # (m, n, p) per-machine designs
+    ys: jnp.ndarray            # (m, n)    per-machine labels
+    loss: Loss
+    A: float = 1.0             # predictor-norm bound, Assumption 2.1
+    r: int = 5                 # assumed rank bound, Assumption 2.3
+    l2: float = 0.0            # optional ridge (real-data experiments, App. H)
+
+    @property
+    def m(self) -> int:
+        return self.Xs.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.Xs.shape[1]
+
+    @property
+    def p(self) -> int:
+        return self.Xs.shape[2]
+
+    @property
+    def nuclear_radius(self) -> float:
+        # ||W*||_* <= sqrt(r m) A, eq. (2.2)
+        return float(jnp.sqrt(self.r * self.m) * self.A)
+
+    @classmethod
+    def make(cls, Xs, ys, loss_name: str = "squared", **kw) -> "MTLProblem":
+        return cls(Xs=jnp.asarray(Xs), ys=jnp.asarray(ys),
+                   loss=get_loss(loss_name), **kw)
+
+
+@dataclasses.dataclass
+class MTLResult:
+    name: str
+    W: jnp.ndarray                     # (p, m) final predictors
+    comm: CommLog
+    # iterates[k] = W after round rounds_axis[k]; one-shot methods have a
+    # single entry at round 0 (Local) or 1 (Centralize / SVD-trunc).
+    iterates: List[jnp.ndarray] = dataclasses.field(default_factory=list)
+    rounds_axis: List[int] = dataclasses.field(default_factory=list)
+    extras: Dict = dataclasses.field(default_factory=dict)
+
+    def record(self, rnd: int, W: jnp.ndarray) -> None:
+        self.rounds_axis.append(rnd)
+        self.iterates.append(W)
+
+
+SolverFn = Callable[..., MTLResult]
+_REGISTRY: Dict[str, SolverFn] = {}
+
+
+def register(name: str):
+    def deco(fn: SolverFn) -> SolverFn:
+        _REGISTRY[name] = fn
+        fn.solver_name = name
+        return fn
+    return deco
+
+
+def get_solver(name: str) -> SolverFn:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown solver {name!r}; have {sorted(_REGISTRY)}")
+
+
+def solver_names() -> List[str]:
+    return sorted(_REGISTRY)

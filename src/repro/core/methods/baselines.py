@@ -1,0 +1,113 @@
+"""One-shot baselines: Local, Centralize, BestRep, one-shot SVD truncation.
+
+These are the brackets the iterative methods are measured against
+(Propositions 2.2 / 2.5 and the §5 "One-shot SVD truncation" discussion).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .. import linear_model as lm
+from ..comm import CommLog
+from ..svd_ops import sv_shrink, svd_truncate, nuclear_norm
+from .base import MTLProblem, MTLResult, register
+
+
+def _local_W(prob: MTLProblem, l2: float) -> jnp.ndarray:
+    solve = jax.vmap(lambda X, y: lm.erm(prob.loss, X, y, l2), in_axes=(0, 0))
+    W = solve(prob.Xs, prob.ys).T                       # (p, m)
+    # Norm constraint ||w_j|| <= A (Prop 2.2 defines Local via constrained ERM)
+    W = jax.vmap(lambda w: lm.project_l2_ball(w, prob.A), in_axes=1,
+                 out_axes=1)(W)
+    return W
+
+
+@register("local")
+def local(prob: MTLProblem, l2: float = 1e-6, **_) -> MTLResult:
+    """Per-machine ERM; zero communication."""
+    W = _local_W(prob, max(l2, prob.l2))
+    comm = CommLog(m=prob.m)
+    res = MTLResult("local", W, comm)
+    res.record(0, W)
+    return res
+
+
+@register("svd_trunc")
+def svd_trunc(prob: MTLProblem, l2: float = 1e-6, rank: int | None = None,
+              **_) -> MTLResult:
+    """One-shot SVD truncation of the Local solution (§5).
+
+    Each worker ships its local w_hat (1 vector of dim p) to the master,
+    which truncates to rank r and ships each column back (1 vector).
+    """
+    W_local = _local_W(prob, max(l2, prob.l2))
+    r = int(rank if rank is not None else prob.r)
+    W = svd_truncate(W_local, r)
+    comm = CommLog(m=prob.m)
+    comm.begin_round()
+    comm.send("worker->master", 1, prob.p, "local solution")
+    comm.send("master->worker", 1, prob.p, "truncated column")
+    res = MTLResult("svd_trunc", W, comm)
+    res.record(1, W)
+    return res
+
+
+@register("bestrep")
+def bestrep(prob: MTLProblem, U_star: jnp.ndarray = None, **_) -> MTLResult:
+    """Oracle: fit in the TRUE subspace U* (not realizable in practice)."""
+    if U_star is None:
+        raise ValueError("bestrep needs the oracle U_star")
+    refit = jax.vmap(
+        lambda X, y: lm.projected_erm(prob.loss, U_star, X, y, prob.l2)[0],
+        in_axes=(0, 0))
+    W = refit(prob.Xs, prob.ys).T
+    comm = CommLog(m=prob.m)
+    res = MTLResult("bestrep", W, comm)
+    res.record(0, W)
+    return res
+
+
+@register("centralize")
+def centralize(prob: MTLProblem, lam: float = None, iters: int = 400,
+               tol: float = 1e-9, **_) -> MTLResult:
+    """Nuclear-norm regularized ERM with all data on the master (eq. 2.3).
+
+    Solved to optimality with FISTA (accelerated prox gradient) — the
+    master has all the data so rounds are free; the communication charge
+    is the one-time shipment of the n local samples per machine.
+    """
+    loss, Xs, ys, m = prob.loss, prob.Xs, prob.ys, prob.m
+    if lam is None:
+        # heuristic in the scale of the gradient spectral norm
+        lam = 0.1 / jnp.sqrt(prob.n * m)
+    from .convex import data_smoothness
+    eta = 1.0 / data_smoothness(prob)
+
+    @partial(jax.jit, static_argnames=("iters_",))
+    def fista(Xs_, ys_, iters_):
+        def step(carry, _):
+            W, Z, t = carry
+            G = lm.all_task_grads(loss, Z, Xs_, ys_, prob.l2)
+            W_new = sv_shrink(Z - eta * m * G, eta * m * lam)
+            t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+            Z_new = W_new + ((t - 1.0) / t_new) * (W_new - W)
+            return (W_new, Z_new, t_new), None
+
+        W0 = jnp.zeros((prob.p, m), Xs_.dtype)
+        (W, _, _), _ = jax.lax.scan(step, (W0, W0, jnp.array(1.0, Xs_.dtype)),
+                                    None, length=iters_)
+        return W
+
+    W = fista(Xs, ys, iters)
+    comm = CommLog(m=prob.m)
+    comm.begin_round()
+    comm.send("worker->master", prob.n, prob.p, "ship all local data")
+    comm.send("master->worker", 1, prob.p, "final predictor")
+    res = MTLResult("centralize", W, comm,
+                    extras={"lam": float(lam),
+                            "nuclear_norm": float(nuclear_norm(W))})
+    res.record(1, W)
+    return res

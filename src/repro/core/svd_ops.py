@@ -1,0 +1,107 @@
+"""SVD primitives used by the master node.
+
+Three operations appear in the paper:
+  * leading singular vectors (u, v) = SV(G)      — DFW / DGSP / DNSP master step
+  * singular-value shrinkage prox_{eta*lam ||.||_*}  — ProxGD / AccProxGD / ADMM
+  * rank-r truncation                             — one-shot SVD truncation
+
+``leading_sv`` is a power iteration on G G^T: only matvecs, which is the
+TPU-friendly choice (MXU work, no LAPACK) and mirrors the paper's remark
+that Frank–Wolfe-style methods avoid full SVDs. The full-SVD path uses
+jnp.linalg.svd and is reserved for master-side shrinkage.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=("iters",))
+def leading_sv(G: jnp.ndarray, iters: int = 60, seed: int = 0
+               ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Top singular triplet (u, s, v) of G (p, m) by power iteration.
+
+    Deterministic start (fixed fold-in key) so every replica of the
+    "replicated master" computes bit-identical vectors without extra
+    communication.
+    """
+    p, m = G.shape
+    # Deterministic, data-derived init (no PRNG): one Krylov step applied
+    # to a fixed dense probe. Derived from G so shard_map's varying-axis
+    # tracking propagates correctly under collectives.
+    probe = (1.0 + 0.1 * jnp.cos(jnp.arange(m, dtype=G.dtype))) / jnp.sqrt(m)
+    v0 = G.T @ (G @ probe) + 1e-12 * probe
+    v0 = v0 / jnp.maximum(jnp.linalg.norm(v0), 1e-30)
+
+    def body(_, v):
+        u = G @ v
+        u = u / jnp.maximum(jnp.linalg.norm(u), 1e-30)
+        v = G.T @ u
+        return v / jnp.maximum(jnp.linalg.norm(v), 1e-30)
+
+    v = jax.lax.fori_loop(0, iters, body, v0)
+    u = G @ v
+    s = jnp.linalg.norm(u)
+    u = u / jnp.maximum(s, 1e-30)
+    # Sign convention: first nonzero-ish entry of u positive (determinism).
+    sign = jnp.where(jnp.sum(u) >= 0, 1.0, -1.0).astype(G.dtype)
+    return u * sign, s, v * sign
+
+
+@jax.jit
+def sv_shrink(M: jnp.ndarray, tau: float) -> jnp.ndarray:
+    """prox_{tau ||.||_*}(M) = U (S - tau)_+ V^T  (Cai-Candes-Shen SVT)."""
+    U, S, Vt = jnp.linalg.svd(M, full_matrices=False)
+    S = jnp.maximum(S - tau, 0.0)
+    return (U * S[None, :]) @ Vt
+
+
+@jax.jit
+def nuclear_norm(M: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum(jnp.linalg.svd(M, compute_uv=False))
+
+
+@partial(jax.jit, static_argnames=("r",))
+def svd_truncate(M: jnp.ndarray, r: int) -> jnp.ndarray:
+    """Best rank-r approximation (the one-shot estimator of §5)."""
+    U, S, Vt = jnp.linalg.svd(M, full_matrices=False)
+    return (U[:, :r] * S[None, :r]) @ Vt[:r, :]
+
+
+@jax.jit
+def project_nuclear_ball(M: jnp.ndarray, radius: float) -> jnp.ndarray:
+    """Euclidean projection onto {||M||_* <= radius} (simplex proj on spectrum)."""
+    U, S, Vt = jnp.linalg.svd(M, full_matrices=False)
+
+    def needs_proj(S):
+        # project S onto the l1 ball of given radius (Duchi et al.)
+        k = S.shape[0]
+        mu = jnp.sort(S)[::-1]
+        css = jnp.cumsum(mu)
+        idx = jnp.arange(1, k + 1)
+        cond = mu - (css - radius) / idx > 0
+        rho = jnp.max(jnp.where(cond, idx, 0))
+        theta = (css[rho - 1] - radius) / rho
+        return jnp.maximum(S - theta, 0.0)
+
+    S_proj = jax.lax.cond(jnp.sum(S) > radius, needs_proj, lambda S: S, S)
+    return (U * S_proj[None, :]) @ Vt
+
+
+def gram_schmidt_append(U: jnp.ndarray, u: jnp.ndarray,
+                        mask: jnp.ndarray) -> jnp.ndarray:
+    """Orthogonalize u against the masked active columns of U and normalize.
+
+    U: (p, K) with column-validity mask (K,). Used by DNSP (Alg. 6 lines 7-9);
+    DGSP gets orthogonality for free (Prop 4.1) but we reuse this helper to
+    guard numerics.
+    """
+    coeffs = (U.T @ u) * mask
+    u = u - U @ coeffs
+    # second pass for numerical stability (classic twice-is-enough GS)
+    coeffs = (U.T @ u) * mask
+    u = u - U @ coeffs
+    return u / jnp.maximum(jnp.linalg.norm(u), 1e-30)

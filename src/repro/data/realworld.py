@@ -1,0 +1,101 @@
+"""Synthetic surrogates for the paper's six real-world datasets (App. H).
+
+The originals (School, Computer Survey, ATP, Protein, Landmine, Cal500)
+are not redistributable in this offline container; per the reproduction
+brief we simulate the gate. Each surrogate matches the published
+dimensions (m tasks, p features, n per task), the label type, and the
+qualitative task-relatedness (predictors drawn near a shared low-rank
+subspace with task-specific deviation + feature correlation), so the
+*relative* behaviour of the methods — the quantity Fig 4 plots — is
+meaningful. Absolute numbers are NOT comparable to the paper's and are
+labeled "(surrogate)" wherever reported.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .synthetic import feature_cov
+
+
+@dataclasses.dataclass(frozen=True)
+class RealSpec:
+    name: str
+    m: int            # tasks
+    p: int            # features
+    n: int            # training samples per task (post 20% split, approx)
+    task: str         # regression | classification
+    r: int            # latent shared rank used by the surrogate
+    deviation: float  # per-task deviation off the shared subspace
+    corr_decay: float
+    noise: float
+
+
+# Dimensions follow App. H descriptions.
+REAL_SPECS: Dict[str, RealSpec] = {
+    "school": RealSpec("school", m=72, p=27, n=40, task="regression",
+                       r=3, deviation=0.3, corr_decay=0.5, noise=1.0),
+    "computer": RealSpec("computer", m=180, p=14, n=8, task="regression",
+                         r=3, deviation=0.2, corr_decay=0.8, noise=0.8),
+    "atp": RealSpec("atp", m=6, p=411, n=67, task="regression",
+                    r=2, deviation=0.15, corr_decay=0.05, noise=0.5),
+    "protein": RealSpec("protein", m=3, p=357, n=1600, task="classification",
+                        r=2, deviation=0.2, corr_decay=0.2, noise=0.0),
+    "landmine": RealSpec("landmine", m=19, p=9, n=100, task="classification",
+                         r=2, deviation=0.25, corr_decay=0.6, noise=0.0),
+    "cal500": RealSpec("cal500", m=78, p=68, n=100, task="classification",
+                       r=4, deviation=0.3, corr_decay=0.3, noise=0.0),
+}
+
+
+def generate_surrogate(key: jax.Array, spec: RealSpec
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                  jnp.ndarray, jnp.ndarray]:
+    """Returns (Xs, ys, Xs_test, ys_test); test = 3x train size (paper: 60%)."""
+    ku, kv, kd, kx, ky, kxt, kyt = jax.random.split(key, 7)
+    U = jnp.linalg.qr(jax.random.normal(ku, (spec.p, spec.r)))[0]
+    V = jax.random.normal(kv, (spec.r, spec.m)) / jnp.sqrt(spec.r)
+    W = U @ V + spec.deviation * jax.random.normal(kd, (spec.p, spec.m)) \
+        / jnp.sqrt(spec.p)
+    Sigma = feature_cov(spec.p, spec.corr_decay)
+    chol = jnp.linalg.cholesky(Sigma + 1e-9 * jnp.eye(spec.p))
+
+    def draw(kx_, ky_, n):
+        X = jax.random.normal(kx_, (spec.m, n, spec.p)) @ chol.T
+        marg = jnp.einsum("mnp,pm->mn", X, W)
+        if spec.task == "regression":
+            y = marg + spec.noise * jax.random.normal(ky_, marg.shape)
+        else:
+            pr = jax.nn.sigmoid(marg)
+            y = jnp.where(jax.random.uniform(ky_, marg.shape) < pr, 1.0, -1.0)
+        return X, y
+
+    Xs, ys = draw(kx, ky, spec.n)
+    Xt, yt = draw(kxt, kyt, 3 * spec.n)
+    return Xs, ys, Xt, yt
+
+
+def test_metric(task: str, W: jnp.ndarray, Xt: jnp.ndarray, yt: jnp.ndarray
+                ) -> jnp.ndarray:
+    """RMSE for regression, averaged AUC for classification (as in Fig 4)."""
+    preds = jnp.einsum("mnp,pm->mn", Xt, W)
+    if task == "regression":
+        return jnp.sqrt(jnp.mean((preds - yt) ** 2))
+    return 1.0 - jnp.mean(jax.vmap(_auc)(preds, yt))   # report 1-AUC (error)
+
+
+def _auc(scores: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Rank-based AUC: P(score_pos > score_neg) with tie correction."""
+    pos = labels > 0
+    order = jnp.argsort(scores)
+    ranks = jnp.empty_like(scores).at[order].set(
+        jnp.arange(1, scores.shape[0] + 1, dtype=scores.dtype))
+    n_pos = jnp.sum(pos)
+    n_neg = scores.shape[0] - n_pos
+    sum_pos = jnp.sum(jnp.where(pos, ranks, 0.0))
+    auc = (sum_pos - n_pos * (n_pos + 1) / 2.0) / jnp.maximum(n_pos * n_neg, 1)
+    # degenerate single-class fold -> 0.5
+    return jnp.where((n_pos == 0) | (n_neg == 0), 0.5, auc)

@@ -1,0 +1,7 @@
+# Pallas TPU kernels (validated in interpret mode on CPU):
+#   flash_attention — q-block x kv-block streaming, online softmax
+#   ssm_scan        — mamba-1 selective scan, VMEM-resident state
+#   mtl_grad        — fused per-task X^T l'(Xw, y) (paper worker hot spot)
+# Each package: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+# wrapper), ref.py (pure-jnp oracle for assert_allclose tests).
+from . import flash_attention, mtl_grad, ssm_scan  # noqa: F401

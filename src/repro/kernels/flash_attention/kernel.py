@@ -1,0 +1,127 @@
+"""Flash attention Pallas-TPU kernel.
+
+TPU adaptation of the flash-attention pattern (DESIGN.md §4/§7):
+stream KV blocks through VMEM against a resident Q block with an online
+softmax; the (bq, bk) score tile lives only in VMEM/VREGs, so HBM
+traffic is O(S) per head instead of O(S^2).
+
+Grid: (batch*heads, n_q_blocks, n_kv_blocks) — the LAST axis is the
+sequential one on a TensorCore, so the online-softmax carry
+(m, l, acc) lives in VMEM scratch across the kv iteration.
+
+Supports: GQA (kv-head = q-head // group), causal masking, sliding
+window, gemma-style logit softcap. Assumes contiguous positions
+0..S-1 (train/prefill); ring-buffer decode takes the XLA path.
+
+Block sizes default to MXU-aligned (128, 128); hd rides along whole.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: Optional[int],
+            softcap: Optional[float], bq: int, bk: int, n_kv: int,
+            seq_q: int, seq_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                  # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)                  # (bk, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    ok = (k_pos < seq_k) & (q_pos < seq_q)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window is not None:
+        ok &= k_pos > q_pos - window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_scr[...]                                # (bq,)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    # rows with every slot masked: p rows are exp(NEG_INF-NEG_INF)=1;
+    # zero them via the mask so l stays 0 and the final o is 0
+    p = jnp.where(ok, p, 0.0)
+    l_new = l_scr[...] * alpha + jnp.sum(p, axis=1)
+    v = v_ref[0].astype(jnp.float32)                  # (bk, hd)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] \
+        + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == n_kv - 1)
+    def _fin():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "scale", "bq", "bk",
+                     "group", "interpret"))
+def flash_attention_bhsd(q, k, v, *, causal: bool = True,
+                         window: Optional[int] = None,
+                         softcap: Optional[float] = None,
+                         scale: Optional[float] = None,
+                         bq: int = 128, bk: int = 128, group: int = 1,
+                         interpret: bool = False):
+    """q: (BH, Sq, hd); k/v: (BHkv, Sk, hd) with BH = BHkv * group."""
+    BH, Sq, hd = q.shape
+    _, Sk, _ = k.shape
+    scale = hd ** -0.5 if scale is None else scale
+    nq = -(-Sq // bq)
+    nk = -(-Sk // bk)
+    Sq_p, Sk_p = nq * bq, nk * bk
+    if Sq_p != Sq:
+        q = jnp.pad(q, ((0, 0), (0, Sq_p - Sq), (0, 0)))
+    if Sk_p != Sk:
+        k = jnp.pad(k, ((0, 0), (0, Sk_p - Sk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Sk_p - Sk), (0, 0)))
+
+    kern = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, bq=bq, bk=bk, n_kv=nk, seq_q=Sq, seq_k=Sk)
+    out = pl.pallas_call(
+        kern,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, hd),
+                         lambda bh, qi, ki, g=group: (bh // g, ki, 0)),
+            pl.BlockSpec((1, bk, hd),
+                         lambda bh, qi, ki, g=group: (bh // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq_p, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :Sq, :]

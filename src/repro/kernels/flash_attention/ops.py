@@ -1,0 +1,43 @@
+"""jit'd public wrapper: (B, S, H, hd) layout <-> kernel layout, GQA
+head grouping, and the CPU/interpret switch.
+
+Selected by ``cfg.attn_impl == "pallas"``. Assumes contiguous positions
+0..S-1 (train / prefill); the ring-buffer decode path stays on XLA.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_bhsd
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def flash_attention(q, k, v, *, q_pos=None, k_pos=None, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None,
+                    bq: int = 128, bk: int = 128,
+                    interpret: Optional[bool] = None):
+    """q: (B, Sq, H, hd); k/v: (B, Sk, Hkv, hd). Returns (B, Sq, H, hd).
+
+    q_pos/k_pos are accepted for signature parity with the XLA paths but
+    must be the contiguous 0..S-1 layout this kernel assumes.
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, Hkv, _ = k.shape
+    group = H // Hkv
+    interpret = _on_cpu() if interpret is None else interpret
+
+    qt = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kt = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, hd)
+    vt = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, hd)
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                               softcap=softcap, scale=scale, bq=bq, bk=bk,
+                               group=group, interpret=interpret)
+    return out.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the flash-attention kernel (tests compare
+against this with assert_allclose over shape/dtype sweeps)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: Optional[int] = None,
+                  softcap: Optional[float] = None,
+                  scale: Optional[float] = None):
+    """q: (BH, Sq, hd); k/v: (BHkv, Sk, hd); BH = BHkv * group."""
+    BH, Sq, hd = q.shape
+    BHkv, Sk, _ = k.shape
+    group = BH // BHkv
+    scale = hd ** -0.5 if scale is None else scale
+    k = jnp.repeat(k, group, axis=0)
+    v = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Sk)[None, :]
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok &= kp <= qp
+    if window is not None:
+        ok &= kp > qp - window
+    s = jnp.where(ok[None], s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(ok[None], p, 0.0)
+    denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bqk,bkd->bqd", p / denom, v.astype(jnp.float32))
+    return o.astype(q.dtype)

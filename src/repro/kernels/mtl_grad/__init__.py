@@ -1,0 +1,2 @@
+from . import ops, ref  # noqa: F401
+from .ops import task_gradients  # noqa: F401

@@ -1,0 +1,19 @@
+"""jit'd wrapper for the per-task gradient kernel (CPU -> interpret)."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import task_gradients_mnp
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def task_gradients(X, y, W, *, loss: str = "squared", br: int = 256,
+                   interpret=None):
+    """X: (m,n,p); y: (m,n); W: (m,p) -> per-task gradient matrix
+    columns G (m, p), f32."""
+    interpret = _on_cpu() if interpret is None else interpret
+    return task_gradients_mnp(X, y, W, loss=loss, br=br,
+                              interpret=interpret)

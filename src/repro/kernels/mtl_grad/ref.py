@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the per-task gradient kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def task_gradients_ref(X, y, W, *, loss: str = "squared"):
+    """X: (m,n,p); y: (m,n); W: (m,p) -> (m,p) f32."""
+    Xf = X.astype(jnp.float32)
+    yf = y.astype(jnp.float32)
+    Wf = W.astype(jnp.float32)
+    pred = jnp.einsum("mnp,mp->mn", Xf, Wf)
+    if loss == "squared":
+        r = pred - yf
+    elif loss == "logistic":
+        r = -yf * jax.nn.sigmoid(-yf * pred)
+    else:
+        raise ValueError(loss)
+    return jnp.einsum("mnp,mn->mp", Xf, r) / X.shape[1]

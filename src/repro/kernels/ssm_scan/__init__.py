@@ -1,0 +1,2 @@
+from . import ops, ref  # noqa: F401
+from .ops import selective_scan  # noqa: F401

@@ -1,0 +1,99 @@
+"""Mamba-1 selective-scan Pallas-TPU kernel.
+
+TPU adaptation of the CUDA selective-scan (DESIGN.md §4): the CUDA
+kernel keeps h in registers and fuses the discretization; the TPU
+analogue keeps the (I, N) state in VMEM scratch and streams the
+sequence through in chunks — grid (B, n_chunks), chunk axis sequential,
+state carried across chunks in scratch. Compared to the pure-XLA
+associative scan (log-depth but materializes (B,S,I,N) in HBM), this
+never writes the (I, N)-per-step state tensor to HBM at all:
+HBM traffic drops from O(S*I*N) to O(S*(I+N)).
+
+Inputs (per batch row):
+  x   (S, I)   conv+silu'd activations
+  dt  (S, I)   softplus'd step sizes
+  Bc  (S, N)   input projections  B_t
+  Cc  (S, N)   output projections C_t
+  A   (I, N)   negative-definite state matrix
+Outputs:
+  y   (S, I)   y_t = C_t . h_t   (+ x D handled by the caller)
+  h_final (I, N)
+
+Recurrence: h_t = exp(dt_t A) * h_{t-1} + (dt_t x_t) B_t.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, y_ref, hout_ref, h_scr, *,
+            chunk: int, n_chunks: int, seq: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    a = a_ref[...].astype(jnp.float32)                 # (I, N)
+
+    def step(t, h):
+        xt = x_ref[0, t, :].astype(jnp.float32)        # (I,)
+        dtt = dt_ref[0, t, :].astype(jnp.float32)      # (I,)
+        bt = b_ref[0, t, :].astype(jnp.float32)        # (N,)
+        ct = c_ref[0, t, :].astype(jnp.float32)        # (N,)
+        decay = jnp.exp(dtt[:, None] * a)              # (I, N)
+        h = decay * h + (dtt * xt)[:, None] * bt[None, :]
+        y_ref[0, t, :] = (h @ ct).astype(y_ref.dtype)  # (I,)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_scr[...])
+    h_scr[...] = h
+
+    @pl.when(ci == n_chunks - 1)
+    def _fin():
+        hout_ref[0] = h.astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def selective_scan_bsin(x, dt, Bc, Cc, A, *, chunk: int = 64,
+                        interpret: bool = False):
+    """x/dt: (B, S, I); Bc/Cc: (B, S, N); A: (I, N).
+    Returns (y (B, S, I) f32, h_final (B, I, N) f32)."""
+    B, S, I = x.shape
+    N = Bc.shape[-1]
+    n_chunks = -(-S // chunk)
+    Sp = n_chunks * chunk
+    if Sp != S:
+        pad = ((0, 0), (0, Sp - S), (0, 0))
+        x, dt, Bc, Cc = (jnp.pad(t, pad) for t in (x, dt, Bc, Cc))
+        # padded steps: dt=0 -> decay=1, input=0 -> state unchanged
+
+    kern = functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks,
+                             seq=S)
+    y, h = pl.pallas_call(
+        kern,
+        grid=(B, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, I), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, I), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((I, N), lambda b, c: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, I), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, I, N), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Sp, I), jnp.float32),
+            jax.ShapeDtypeStruct((B, I, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((I, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, Bc, Cc, A)
+    return y[:, :S, :], h

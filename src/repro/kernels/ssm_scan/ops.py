@@ -1,0 +1,21 @@
+"""jit'd wrapper for the selective-scan kernel with the CPU/interpret
+switch. ``models/ssm.py`` calls this when cfg.attn_impl == "pallas"
+(the flag doubles as the kernel-path selector for SSM blocks)."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import selective_scan_bsin
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def selective_scan(x, dt, Bc, Cc, A, *, chunk: int = 64,
+                   interpret=None):
+    """x/dt: (B,S,I); Bc/Cc: (B,S,N); A: (I,N) ->
+    (y (B,S,I) f32, h_final (B,I,N) f32)."""
+    interpret = _on_cpu() if interpret is None else interpret
+    return selective_scan_bsin(x, dt, Bc, Cc, A, chunk=chunk,
+                               interpret=interpret)

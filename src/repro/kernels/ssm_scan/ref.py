@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the selective-scan kernel: the direct
+(sequential) recurrence in float32."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(x, dt, Bc, Cc, A):
+    """x/dt: (B,S,I); Bc/Cc: (B,S,N); A: (I,N) ->
+    (y (B,S,I) f32, h_final (B,I,N) f32)."""
+    B, S, I = x.shape
+    N = Bc.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = Bc.astype(jnp.float32)
+    Cf = Cc.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        h = jnp.exp(dtt[:, :, None] * Af[None]) * h \
+            + (dtt * xt)[:, :, None] * bt[:, None, :]
+        y = jnp.einsum("bin,bn->bi", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((B, I, N), jnp.float32)
+    hf, ys = jax.lax.scan(
+        step, h0, (xf.transpose(1, 0, 2), dtf.transpose(1, 0, 2),
+                   Bf.transpose(1, 0, 2), Cf.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2), hf

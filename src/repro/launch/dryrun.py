@@ -1,0 +1,126 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines, before ANY jax-touching import: jax locks
+# the device count on first init. 512 placeholder host devices back both
+# the single-pod (16,16) mesh and the 2-pod (2,16,16) mesh. This flag is
+# set ONLY here — smoke tests and benchmarks see the real 1-device view.
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture x input shape) — 10 x 4 = 40 pairs minus the
+documented long_500k skips — lower + compile train_step / prefill /
+serve_step on the production mesh, print memory_analysis()/cost_analysis()
+and persist the roofline terms. Failures here (sharding mismatch, OOM at
+compile, unsupported collective) are bugs in the system.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma-7b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results/dryrun]
+  python -m repro.launch.dryrun --all --both-meshes     # e) requirement
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool, out_dir: str,
+            fsdp=None, extra_cfg=None, tag: str = "", verbose: bool = True,
+            skip_existing: bool = False) -> bool:
+    # imports deferred so XLA_FLAGS is set before jax initializes
+    from repro.configs import shape_supported
+    from repro.launch.lowering import lower_pair
+    from repro.launch.mesh import make_production_mesh
+
+    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    name = f"{arch}__{shape_name}__{mesh_tag}{tag}"
+    path = os.path.join(out_dir, name + ".json")
+    if skip_existing and os.path.exists(path):
+        print(f"[skip-existing] {name}")
+        return True
+
+    if not shape_supported(arch, shape_name):
+        os.makedirs(out_dir, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump({"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                       "status": "SKIP",
+                       "reason": "long_500k unsupported for pure "
+                                 "full-attention arch (DESIGN.md §5)"}, f,
+                      indent=1)
+        print(f"[SKIP] {name} (documented in DESIGN.md §5)")
+        return True
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        res, compiled = lower_pair(arch, shape_name, mesh, fsdp=fsdp,
+                                   extra_cfg=extra_cfg)
+    except Exception:
+        print(f"[FAIL] {name}\n{traceback.format_exc()}")
+        os.makedirs(out_dir, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump({"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                       "status": "FAIL",
+                       "error": traceback.format_exc()}, f, indent=1)
+        return False
+    dt = time.time() - t0
+
+    d = res.as_dict()
+    d["status"] = "OK"
+    d["compile_seconds"] = dt
+    os.makedirs(out_dir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(d, f, indent=1)
+
+    if verbose:
+        t = res.terms
+        mem = res.memory_analysis
+        print(f"[OK] {name}  ({dt:.0f}s compile)")
+        print(f"  memory_analysis: args={mem.get('argument_size_in_bytes', 0)/2**30:.2f}GiB "
+              f"out={mem.get('output_size_in_bytes', 0)/2**30:.2f}GiB "
+              f"temp={mem.get('temp_size_in_bytes', 0)/2**30:.2f}GiB / device")
+        print(f"  cost_analysis:   flops={t.flops:.3e} bytes={t.hbm_bytes:.3e} "
+              f"coll_bytes={t.collective_bytes:.3e} ({t.collectives['count']} ops)")
+        print(f"  roofline:        compute={t.t_compute*1e3:.2f}ms "
+              f"memory={t.t_memory*1e3:.2f}ms "
+              f"collective={t.t_collective*1e3:.2f}ms -> {t.dominant}-bound")
+        print(f"  model_flops/HLO_flops = "
+              f"{res.model_flops / max(t.flops * res.n_devices, 1):.3f}")
+    return True
+
+
+def main() -> int:
+    from repro.configs import ARCH_IDS
+    from repro.configs.base import INPUT_SHAPES
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--fsdp", choices=["auto", "on", "off"], default="auto")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    fsdp = {"auto": None, "on": True, "off": False}[args.fsdp]
+    archs = ARCH_IDS if args.all else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.all or args.shape is None \
+        else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    ok = True
+    for multi_pod in meshes:
+        for arch in archs:
+            for shape in shapes:
+                ok &= run_one(arch, shape, multi_pod=multi_pod,
+                              out_dir=args.out, fsdp=fsdp,
+                              skip_existing=args.skip_existing)
+    print("DRY-RUN:", "ALL OK" if ok else "FAILURES (see above)")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,267 @@
+"""Mesh-aware lowering of train_step / serve_step for the dry-run.
+
+Everything here works on ``jax.ShapeDtypeStruct`` stand-ins — no device
+allocation ever happens. ``lower_pair`` is the single entry point: it
+builds input specs for one (architecture x input-shape), attaches
+shardings for the given mesh, lowers, compiles, and extracts the
+roofline terms from the compiled artifact.
+
+Sharding layout (baseline; §Perf iterates on this):
+  * params: megatron TP on "model" (models/sharding.py), optional FSDP
+    over "data" (+"pod") for archs whose replicated state would not fit
+    a 16 GB v5e chip.
+  * batch: leading dim over ("pod","data").
+  * decode caches: batch dim over ("pod","data"); long_500k (batch=1)
+    shards the cache SEQUENCE dim over the data axes instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs import get_config
+from ..configs.base import INPUT_SHAPES, InputShape, ModelConfig
+from ..models import model as model_mod
+from ..models.sharding import batch_specs, cache_specs, choose_layout, \
+    param_specs
+from ..train.steps import TrainConfig, init_train_state, make_serve_step, \
+    make_train_step
+from . import roofline as roofline_mod
+from .mesh import data_axes
+
+
+# =============================================================================
+# ShapeDtypeStruct builders
+# =============================================================================
+
+def train_batch_sds(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """Batch stand-ins for train / prefill shapes."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.dtype)
+    batch: Dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((B, S), i32),
+        "targets": jax.ShapeDtypeStruct((B, S), i32),
+    }
+    if cfg.family == "encdec":
+        batch["frames"] = jax.ShapeDtypeStruct((B, cfg.n_frames,
+                                                cfg.d_model), dt)
+    if cfg.family == "vlm":
+        batch["patches"] = jax.ShapeDtypeStruct((B, cfg.n_patches,
+                                                 cfg.d_model), dt)
+    return batch
+
+
+def _sds_tree(fn):
+    """eval_shape a thunk -> pytree of ShapeDtypeStruct."""
+    return jax.eval_shape(fn)
+
+
+def state_sds(cfg: ModelConfig, tcfg: TrainConfig):
+    key = jax.random.PRNGKey(0)
+    return _sds_tree(lambda: init_train_state(key, cfg, tcfg))
+
+
+def params_sds(cfg: ModelConfig):
+    key = jax.random.PRNGKey(0)
+    return _sds_tree(lambda: model_mod.init_params(key, cfg))
+
+
+def cache_sds(cfg: ModelConfig, batch: int, max_len: int):
+    return _sds_tree(lambda: model_mod.init_cache(cfg, batch, max_len))
+
+
+def decode_args_sds(cfg: ModelConfig, shape: InputShape):
+    """(cache, token, pos, xattn_kv|None) stand-ins for a decode step
+    against a cache of shape.seq_len tokens."""
+    B, S = shape.global_batch, shape.seq_len
+    cache = cache_sds(cfg, B, S)
+    token = jax.ShapeDtypeStruct((B,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((B,), jnp.int32)
+    xattn = None
+    if cfg.family == "encdec":
+        xattn = jax.ShapeDtypeStruct((B, cfg.n_frames, cfg.d_model),
+                                     jnp.dtype(cfg.dtype))
+    return cache, token, pos, xattn
+
+
+# =============================================================================
+# PartitionSpecs for caches (batch/seq dims found structurally)
+# =============================================================================
+
+def cache_partition_specs(cfg: ModelConfig, batch: int, max_len: int,
+                          data_ax: Tuple[str, ...], model_axis_size: int,
+                          layout: str):
+    """Spec tree matching init_cache's pytree (models.sharding rules)."""
+    return cache_specs(cfg, batch, max_len, data_ax, model_axis_size,
+                       layout=layout)
+
+
+# =============================================================================
+# Lower + compile one (arch x shape x mesh)
+# =============================================================================
+
+@dataclasses.dataclass
+class LowerResult:
+    arch: str
+    shape: str
+    mesh_desc: str
+    n_devices: int
+    kind: str                    # train | prefill | decode
+    terms: roofline_mod.RooflineTerms
+    memory_analysis: Dict[str, float]
+    model_flops: float
+    fsdp: bool
+    layout: str = "tp"
+
+    def as_dict(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh_desc,
+            "n_devices": self.n_devices, "kind": self.kind,
+            "fsdp": self.fsdp, "layout": self.layout,
+            "model_flops": self.model_flops,
+            "memory": self.memory_analysis, **self.terms.as_dict(),
+        }
+
+
+def _mem_dict(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = float(v)
+    return out
+
+
+def _needs_fsdp(cfg: ModelConfig, model_axis: int, kind: str,
+                n_devices: int, layout: str = "tp") -> bool:
+    """Replicated (non-TP) param+opt state must fit ~16GB HBM; otherwise
+    shard weights over the data axes too (FSDP)."""
+    n = roofline_mod.total_param_count(cfg)
+    per_param = 10.0 if kind == "train" else 2.0   # bf16 + fp32 mu/nu
+    tp_fold = model_axis if layout == "tp" else 1
+    per_chip = n * per_param / tp_fold
+    return per_chip > 12e9                          # leave activation room
+
+
+def lower_pair(arch: str, shape_name: str, mesh, *,
+               fsdp: Optional[bool] = None,
+               layout: Optional[str] = None,
+               tcfg: Optional[TrainConfig] = None,
+               donate: bool = True,
+               extra_cfg: Optional[Dict[str, Any]] = None) -> Tuple[
+                   LowerResult, Any]:
+    """Lower + compile one pair on ``mesh``. Returns (result, compiled)."""
+    shape = INPUT_SHAPES[shape_name]
+    cfg = get_config(arch, shape=shape_name)
+    if extra_cfg:
+        cfg = cfg.replace(**extra_cfg)
+    data_ax = data_axes(mesh)
+    model_axis = mesh.shape["model"]
+    n_dev = mesh.size
+    if layout is None:
+        layout = choose_layout(cfg, model_axis, shape.kind,
+                               shape.global_batch, n_dev)
+    if fsdp is None:
+        fsdp = _needs_fsdp(cfg, model_axis, shape.kind, n_dev, layout)
+    # cp/dp layouts FSDP-shard over data AND model axes (no TP)
+    fsdp_ax_tuple = data_ax + ("model",) if layout in ("cp", "dp") \
+        else data_ax
+    fsdp_axis = None
+    fsdp_size = 1
+    if fsdp:
+        for a in fsdp_ax_tuple:
+            fsdp_size *= mesh.shape[a]
+        fsdp_axis = fsdp_ax_tuple if len(fsdp_ax_tuple) > 1 \
+            else fsdp_ax_tuple[0]
+    # cp layout: the model axis shards the sequence dim of activations;
+    # dp layout: the model axis joins the BATCH axes instead
+    seq_axis = "model" if (layout == "cp" and shape.kind != "decode") \
+        else None
+    batch_ax = data_ax + ("model",) if layout == "dp" else data_ax
+
+    def shard(spec_tree):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                            is_leaf=lambda s: isinstance(s, P))
+
+    def pspecs_of(params):
+        return param_specs(cfg, params, model_axis_size=model_axis,
+                           fsdp_axis=fsdp_axis, fsdp_axis_size=fsdp_size,
+                           layout=layout)
+
+    if shape.kind == "train":
+        tcfg = tcfg or TrainConfig()
+        step = make_train_step(cfg, tcfg)
+        state = state_sds(cfg, tcfg)
+        batch = train_batch_sds(cfg, shape)
+        pspecs = pspecs_of(state["params"])
+        opt_specs = {"mu": pspecs, "nu": pspecs, "count": P()}
+        state_specs = {"params": pspecs, "opt": opt_specs}
+        bspecs = batch_specs(cfg, batch, batch_ax, seq_axis=seq_axis,
+                             mesh=mesh)
+        jitted = jax.jit(
+            step,
+            in_shardings=(shard(state_specs), shard(bspecs)),
+            out_shardings=(shard(state_specs), None),
+            donate_argnums=(0,) if donate else ())
+        lowered = jitted.lower(state, batch)
+    elif shape.kind == "prefill":
+        from ..train.steps import make_prefill_step
+        pre = make_prefill_step(cfg)
+        params = params_sds(cfg)
+        batch = train_batch_sds(cfg, shape)
+        batch.pop("targets")
+        cache = cache_sds(cfg, shape.global_batch, shape.seq_len)
+        pspecs = pspecs_of(params)
+        bspecs = batch_specs(cfg, batch, batch_ax, seq_axis=seq_axis,
+                             mesh=mesh)
+        cspecs = cache_partition_specs(cfg, shape.global_batch,
+                                       shape.seq_len, data_ax, model_axis,
+                                       layout)
+        jitted = jax.jit(
+            pre,
+            in_shardings=(shard(pspecs), shard(bspecs), shard(cspecs)),
+            out_shardings=(None, shard(cspecs)),
+            donate_argnums=(2,) if donate else ())
+        lowered = jitted.lower(params, batch, cache)
+    else:  # decode
+        step = make_serve_step(cfg)
+        params = params_sds(cfg)
+        cache, token, pos, xattn = decode_args_sds(cfg, shape)
+        pspecs = pspecs_of(params)
+        cspecs = cache_partition_specs(cfg, shape.global_batch,
+                                       shape.seq_len, data_ax, model_axis,
+                                       layout)
+        tspec = P(data_ax if shape.global_batch > 1 else None)
+        in_sh = (shard(pspecs), shard(cspecs),
+                 NamedSharding(mesh, tspec), NamedSharding(mesh, tspec))
+        args = (params, cache, token, pos)
+        if xattn is not None:
+            in_sh = in_sh + (NamedSharding(
+                mesh, P(data_ax if shape.global_batch > 1 else None,
+                        None, None)),)
+            args = args + (xattn,)
+        jitted = jax.jit(
+            step, in_shardings=in_sh,
+            out_shardings=(None, shard(cspecs)),
+            donate_argnums=(1,) if donate else ())
+        lowered = jitted.lower(*args)
+
+    compiled = lowered.compile()
+    hlo = compiled.as_text()
+    terms = roofline_mod.terms_from_compiled(compiled, hlo)
+    mesh_desc = "x".join(str(mesh.shape[a]) for a in mesh.axis_names)
+    res = LowerResult(
+        arch=arch, shape=shape_name, mesh_desc=mesh_desc, n_devices=n_dev,
+        kind=shape.kind, terms=terms, memory_analysis=_mem_dict(compiled),
+        model_flops=roofline_mod.model_flops(cfg, shape), fsdp=fsdp,
+        layout=layout)
+    return res, compiled

@@ -1,0 +1,30 @@
+"""Production meshes.
+
+Functions, NOT module-level constants: importing this module must never
+touch jax device state (jax locks the device count on first init, and
+smoke tests need the real 1-device view while dryrun forces 512).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod (v5e pod); 2 pods -> (2, 16, 16)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple:
+    """Mesh axes carrying the batch dimension."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axis_size(mesh) -> int:
+    return mesh.shape["model"]
+
+
+def make_host_mesh():
+    """Single-device mesh for CPU smoke runs of the same code path."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,268 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds:
+
+  compute    = HLO_FLOPs / (peak_FLOP/s)          per chip
+  memory     = HLO_bytes / HBM_bw                 per chip
+  collective = collective_bytes / link_bw         per chip
+
+HLO_FLOPs / HLO_bytes come from compiled.cost_analysis() (post-SPMD,
+i.e. per-device). collective_bytes is NOT in cost_analysis: we parse the
+post-partitioning HLO text and sum OPERAND byte-sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction (operand size == bytes each chip injects
+into the fabric; ring algorithms move ~(n-1)/n of the gathered volume,
+so this is the standard first-order estimate).
+
+Hardware constants (TPU v5e, per the brief): 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+"
+                     r"([\w\-]+)")
+
+
+def shape_bytes(type_str: str) -> int:
+    """bytes of 'bf16[2,128]{1,0}' or tuple '(f32[4], f32[4,8])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes per collective kind over the (post-partitioning)
+    HLO module text.
+
+    CPU-host artifact correction: the CPU backend's FloatNormalization
+    pass upcasts bf16 collectives to f32 (no native bf16 on host) —
+    operands arrive through pure-convert fusions named ``convert_*``
+    (verified on deepseek-v3 train_4k: every big f32 all-reduce operand
+    is ``f32[...] fusion(%bf16_param)`` with a convert-only body). A
+    real TPU reduces in bf16, so those operands are counted at HALF the
+    f32 size.
+    """
+    # symbol table: instruction name -> (result type, op name)
+    types: Dict[str, str] = {}
+    op_of: Dict[str, str] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            types[m.group(1)] = m.group(2)
+            op_of[m.group(1)] = m.group(3)
+
+    out = {k: 0 for k in COLLECTIVE_OPS}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        op = m.group(3)
+        kind = None
+        for c in COLLECTIVE_OPS:
+            if op == c or op.startswith(c + "-"):  # *-start variants
+                kind = c
+                break
+        if kind is None or op.endswith("-done"):
+            continue
+        # operand list inside the first (...) after the op name
+        rest = line[m.end():]
+        paren = rest.find("(")
+        if paren < 0:
+            continue
+        depth, j = 0, paren
+        for j in range(paren, len(rest)):
+            if rest[j] == "(":
+                depth += 1
+            elif rest[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        args = rest[paren + 1:j]
+        bytes_ = 0
+        for opnd in re.finditer(r"%?([\w.\-]+)", args):
+            name = opnd.group(1)
+            if name in types:
+                b = shape_bytes(types[name])
+                # host float-normalization artifact: bf16 value upcast
+                # to f32 just for the reduce -> count at bf16 width
+                if (types[name].startswith("f32")
+                        and (name.startswith("convert")
+                             or op_of.get(name) == "convert")):
+                    b //= 2
+                bytes_ += b
+        if bytes_ == 0:
+            # fall back to result size (covers inlined operand styles)
+            bytes_ = shape_bytes(m.group(2))
+        out[kind] += bytes_
+        out["count"] += 1
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    collectives: Dict[str, int]
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective, "dominant": self.dominant,
+            "collectives": self.collectives,
+        }
+
+
+def terms_from_compiled(compiled, hlo_text: Optional[str] = None
+                        ) -> RooflineTerms:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):          # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = parse_collectives(text)
+    cbytes = sum(v for k, v in coll.items()
+                 if k in COLLECTIVE_OPS)
+    return RooflineTerms(flops=flops, hbm_bytes=hbm,
+                         collective_bytes=float(cbytes), collectives=coll)
+
+
+def model_flops(cfg, shape, n_tokens: Optional[int] = None) -> float:
+    """MODEL_FLOPS = 6 N D (dense) / 6 N_active D (MoE), N = active params
+    (counting backward 2x fwd). Decode steps process ONE token per
+    sequence, so n_tokens = global_batch."""
+    n_active = active_param_count(cfg)
+    if n_tokens is None:
+        n_tokens = (shape.global_batch if shape.kind == "decode"
+                    else shape.seq_len * shape.global_batch)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * n_tokens
+
+
+def total_param_count(cfg) -> float:
+    """TOTAL parameter count (all experts), for memory-footprint checks."""
+    if not getattr(cfg, "is_moe", False):
+        return active_param_count(cfg)
+    D = cfg.d_model
+    dff = cfg.moe_d_ff or cfg.d_ff
+    factor = 3 if cfg.glu else 2
+    active_e = cfg.n_experts_per_token + cfg.n_shared_experts
+    extra_experts = (cfg.n_experts - cfg.n_experts_per_token)
+    per_layer_extra = factor * D * dff * extra_experts
+    n_moe_layers = cfg.n_layers - cfg.first_k_dense
+    return active_param_count(cfg) + n_moe_layers * per_layer_extra
+
+
+def active_param_count(cfg) -> float:
+    """Active (per-token) parameter count from config dims."""
+    D = cfg.d_model
+    V = cfg.vocab_size
+    emb = V * D * (1 if cfg.tie_embeddings else 2)
+    per_layer = 0.0
+    # attention
+    if cfg.family not in ("ssm",):
+        if cfg.mla:
+            qk = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+            q = (cfg.q_lora_rank * (D + cfg.n_heads * qk)
+                 if cfg.q_lora_rank else D * cfg.n_heads * qk)
+            kv = D * (cfg.kv_lora_rank + cfg.qk_rope_head_dim) \
+                + cfg.kv_lora_rank * cfg.n_heads * (cfg.qk_nope_head_dim
+                                                    + cfg.v_head_dim)
+            o = cfg.n_heads * cfg.v_head_dim * D
+            attn = q + kv + o
+        else:
+            hd = cfg.resolved_head_dim
+            attn = D * hd * (cfg.n_heads * 2 + cfg.n_kv_heads * 2)
+    else:
+        attn = 0.0
+    # mlp / moe active
+    if cfg.is_moe:
+        dff = cfg.moe_d_ff or cfg.d_ff
+        factor = 3 if cfg.glu else 2
+        active_e = cfg.n_experts_per_token + cfg.n_shared_experts
+        moe = factor * D * dff * active_e + D * cfg.n_experts
+        dense_mlp = factor * D * cfg.d_ff
+        k_dense = cfg.first_k_dense
+        per_layer_moe = attn + moe
+        per_layer_dense = attn + dense_mlp
+        layers = (cfg.n_layers - k_dense) * per_layer_moe \
+            + k_dense * per_layer_dense
+        return emb + layers
+    if cfg.is_ssm:
+        I, N = cfg.d_inner, cfg.ssm_state
+        if cfg.mamba_version == 2:
+            H = I // cfg.mamba_headdim
+            m1 = D * (2 * I + 2 * N + H) + I * D
+        else:
+            R = max(1, -(-D // 16))
+            m1 = D * 2 * I + I * (R + 2 * N) + R * I + I * D
+        per_layer = m1
+        n_shared_apps = (cfg.n_layers // cfg.attn_period
+                         if cfg.attn_period else 0)
+        shared = 0.0
+        if cfg.family == "hybrid":
+            hd = cfg.resolved_head_dim
+            shared_block = D * hd * (cfg.n_heads * 2 + cfg.n_kv_heads * 2) \
+                + (3 if cfg.glu else 2) * D * cfg.d_ff
+            shared = shared_block  # params counted once; FLOPs below scale
+            per_layer_flops_extra = n_shared_apps  # noqa - documented
+        total = emb + cfg.n_layers * per_layer + shared
+        return total
+    factor = 3 if cfg.glu else 2
+    per_layer = attn + factor * D * cfg.d_ff
+    layers = cfg.n_layers * per_layer
+    if cfg.family == "encdec":
+        hd = cfg.resolved_head_dim
+        xattn = D * hd * (cfg.n_heads * 2 + cfg.n_kv_heads * 2)
+        layers += cfg.n_layers * xattn
+        layers += cfg.n_enc_layers * per_layer
+    return emb + layers

@@ -1,0 +1,97 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ first two lines — see dryrun.py. Placeholder devices for the
+# production meshes; this entry point is never imported by tests.
+
+"""Roofline sweep (deliverable g): scan-corrected roofline terms for
+every (arch x shape) on the single-pod mesh, via launch/costmodel.py.
+
+  python -m repro.launch.roofline_sweep [--arch A] [--shape S]
+         [--out results/roofline] [--skip-existing]
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+
+def run_one(arch: str, shape_name: str, out_dir: str, *,
+            skip_existing: bool = False, fsdp=None, extra_cfg=None,
+            tag: str = "") -> bool:
+    from repro.configs import get_config, shape_supported
+    from repro.configs.base import INPUT_SHAPES
+    from repro.launch import roofline as rf
+    from repro.launch.costmodel import corrected_terms
+    from repro.launch.mesh import make_production_mesh
+
+    name = f"{arch}__{shape_name}{tag}"
+    path = os.path.join(out_dir, name + ".json")
+    if skip_existing and os.path.exists(path):
+        print(f"[skip-existing] {name}")
+        return True
+    if not shape_supported(arch, shape_name):
+        os.makedirs(out_dir, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump({"arch": arch, "shape": shape_name, "status": "SKIP",
+                       "reason": "DESIGN.md §5 long_500k skip"}, f, indent=1)
+        print(f"[SKIP] {name}")
+        return True
+
+    mesh = make_production_mesh(multi_pod=False)
+    try:
+        ct = corrected_terms(arch, shape_name, mesh, fsdp=fsdp,
+                             extra_cfg=extra_cfg)
+    except Exception:
+        print(f"[FAIL] {name}\n{traceback.format_exc()}")
+        os.makedirs(out_dir, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump({"arch": arch, "shape": shape_name, "status": "FAIL",
+                       "error": traceback.format_exc()}, f, indent=1)
+        return False
+
+    cfg = get_config(arch, shape=shape_name)
+    if extra_cfg:
+        cfg = cfg.replace(**extra_cfg)
+    shape = INPUT_SHAPES[shape_name]
+    d = ct.as_dict()
+    d.update(arch=arch, shape=shape_name, status="OK",
+             n_devices=mesh.size,
+             model_flops=rf.model_flops(cfg, shape),
+             model_flops_per_device=rf.model_flops(cfg, shape) / mesh.size)
+    os.makedirs(out_dir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(d, f, indent=1)
+    t = ct.terms
+    useful = d["model_flops_per_device"] / max(t.flops, 1.0)
+    print(f"[OK] {name} ({ct.compile_seconds:.0f}s): "
+          f"compute={t.t_compute*1e3:.2f}ms memory={t.t_memory*1e3:.2f}ms "
+          f"collective={t.t_collective*1e3:.2f}ms -> {t.dominant}-bound; "
+          f"useful-flops={useful:.2f}")
+    return True
+
+
+def main() -> int:
+    from repro.configs import ARCH_IDS
+    from repro.configs.base import INPUT_SHAPES
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--out", default="results/roofline")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    ok = True
+    for arch in archs:
+        for shape in shapes:
+            ok &= run_one(arch, shape, args.out,
+                          skip_existing=args.skip_existing)
+    print("ROOFLINE SWEEP:", "ALL OK" if ok else "FAILURES (see above)")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

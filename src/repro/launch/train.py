@@ -1,0 +1,89 @@
+"""Training launcher: any registered arch, any mesh that fits the host.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma2-2b \
+        [--smoke] [--steps N] [--batch B] [--seq S] [--ckpt DIR]
+
+On the real pod this runs the FULL config on make_production_mesh();
+on a CPU host use --smoke (reduced config, host mesh) — same code path:
+jit with the same in/out shardings from models/sharding.py, the same
+layout selection, the same train_step.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs import ARCH_IDS, get_config, get_smoke_config
+from ..data.tokens import SyntheticTokenStream, TokenPipelineSpec
+from ..models.sharding import batch_specs, choose_layout, param_specs
+from ..train.loop import train_loop
+from ..train.steps import TrainConfig, init_train_state, make_train_step
+from .mesh import data_axes, make_host_mesh, make_production_mesh
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b", choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config + host mesh (CPU-runnable)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    if args.smoke:
+        cfg = get_smoke_config(args.arch)
+        mesh = make_host_mesh()
+    else:
+        cfg = get_config(args.arch)
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+
+    layout = choose_layout(cfg, mesh.shape["model"], "train",
+                           args.batch, mesh.size)
+    tcfg = TrainConfig(total_steps=args.steps, warmup_steps=5,
+                       microbatch=args.microbatch)
+    print(f"arch={cfg.arch_id} layout={layout} mesh={dict(mesh.shape)} "
+          f"steps={args.steps} batch={args.batch}x{args.seq}")
+
+    state = init_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+    pspecs = param_specs(cfg, state["params"],
+                         model_axis_size=mesh.shape["model"],
+                         layout=layout)
+    state_specs = {"params": pspecs,
+                   "opt": {"mu": pspecs, "nu": pspecs, "count": P()}}
+
+    def shard(tree):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                            is_leaf=lambda s: isinstance(s, P))
+
+    state = jax.device_put(state, shard(state_specs))
+    d_ax = data_axes(mesh)
+    bspec = shard(P(d_ax))
+
+    stream = SyntheticTokenStream(TokenPipelineSpec(
+        vocab_size=cfg.vocab_size, seq_len=args.seq,
+        global_batch=args.batch))
+
+    def feed():
+        for toks, tgts in stream:
+            yield {"tokens": jax.device_put(toks, bspec),
+                   "targets": jax.device_put(tgts, bspec)}
+
+    hist = train_loop(make_train_step(cfg, tcfg), state, feed(),
+                      args.steps, log_every=10, ckpt_dir=args.ckpt)
+    final = hist["loss"][-1]
+    print(f"final loss {final:.4f} "
+          f"({'improved' if final < hist['loss'][0] else 'NOT improved'} "
+          f"from {hist['loss'][0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

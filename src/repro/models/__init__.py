@@ -1,0 +1,3 @@
+from . import attention, blocks, common, mlp, model, moe, ssm  # noqa: F401
+from .model import (decode_step, encode, forward, init_cache, init_params,
+                    lm_loss, prefill)  # noqa: F401

@@ -1,0 +1,350 @@
+"""Attention: GQA/MQA, RoPE, sliding window, logit softcap, MLA, cross-attn.
+
+Three execution paths share one math definition:
+  naive   — materialize (q, k) scores; right choice for short seq / decode.
+  chunked — lax.scan over KV chunks with online softmax (flash-style in
+            pure XLA); bounds activation memory for 32k prefill.
+  pallas  — kernels/flash_attention (TPU target; validated in interpret
+            mode). Selected via cfg.attn_impl.
+
+KV caches are dicts so the serve engine can treat them uniformly:
+  standard: {"k": (B, S, Hkv, hd), "v": ..., "pos": scalar}
+  MLA:      {"ckv": (B, S, kv_lora), "k_rope": (B, S, rope_hd), "pos": ...}
+Sliding-window layers allocate min(window, S) cache slots (ring buffer).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import apply_rope, dtype_of, init_dense
+
+NEG_INF = -2.0 ** 30  # large-negative instead of -inf: avoids NaN in
+                      # fully-masked softmax rows (they renormalize to 0)
+
+
+# =============================================================================
+# Parameter init
+# =============================================================================
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False):
+    if cfg.mla and not cross:
+        return _init_mla(key, cfg)
+    hd = cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    dt = dtype_of(cfg)
+    return {
+        "wq": init_dense(kq, cfg.d_model, cfg.n_heads * hd, dt),
+        "wk": init_dense(kk, cfg.d_model, cfg.n_kv_heads * hd, dt),
+        "wv": init_dense(kv, cfg.d_model, cfg.n_kv_heads * hd, dt),
+        "wo": init_dense(ko, cfg.n_heads * hd, cfg.d_model, dt,
+                         std=(cfg.n_heads * hd) ** -0.5),
+    }
+
+
+def _init_mla(key, cfg: ModelConfig):
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 7)
+    qk_hd = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    p = {}
+    if cfg.q_lora_rank:
+        p["wq_a"] = init_dense(ks[0], cfg.d_model, cfg.q_lora_rank, dt)
+        p["q_norm_scale"] = jnp.zeros((cfg.q_lora_rank,), jnp.float32)
+        p["wq_b"] = init_dense(ks[1], cfg.q_lora_rank,
+                               cfg.n_heads * qk_hd, dt)
+    else:
+        p["wq"] = init_dense(ks[0], cfg.d_model, cfg.n_heads * qk_hd, dt)
+    # joint KV compression + decoupled rope key
+    p["wkv_a"] = init_dense(ks[2], cfg.d_model,
+                            cfg.kv_lora_rank + cfg.qk_rope_head_dim, dt)
+    p["kv_norm_scale"] = jnp.zeros((cfg.kv_lora_rank,), jnp.float32)
+    p["wkv_b"] = init_dense(
+        ks[3], cfg.kv_lora_rank,
+        cfg.n_heads * (cfg.qk_nope_head_dim + cfg.v_head_dim), dt)
+    p["wo"] = init_dense(ks[4], cfg.n_heads * cfg.v_head_dim, cfg.d_model,
+                         dt, std=(cfg.n_heads * cfg.v_head_dim) ** -0.5)
+    return p
+
+
+# =============================================================================
+# Mask / score utilities
+# =============================================================================
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: Optional[int],
+               prefix_len: Optional[jnp.ndarray] = None):
+    """Additive bias (…, q, k) from position comparisons (O(S) inputs,
+    bias materialized lazily by XLA fusion in the naive path; the chunked
+    path evaluates it per chunk)."""
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    # valid-slot mask: unwritten cache slots / chunk padding carry a large
+    # negative position sentinel and must never be attended to
+    ok = kp >= 0
+    if causal:
+        ok &= kp <= qp
+        if prefix_len is not None:
+            # prefix-LM: bidirectional within the prefix
+            ok |= kp < prefix_len[..., None, None]
+    if window is not None:
+        ok &= kp > qp - window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _softcap(scores, cap: Optional[float]):
+    if cap:
+        return cap * jnp.tanh(scores / cap)
+    return scores
+
+
+def _sdpa_naive(q, k, v, bias, scale, softcap):
+    """q/k: (B,S,H*,hd_qk), v: (B,Sk,Hkv,hd_v); GQA via head grouping.
+    Output head dim follows v (MLA has hd_qk != hd_v)."""
+    B, Sq, H, hd = q.shape
+    Hkv = k.shape[2]
+    dv = v.shape[-1]
+    group = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, group, hd)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    scores = _softcap(scores, softcap)
+    scores = scores + bias[:, None, None, :, :]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, dv)
+
+
+def _sdpa_chunked(q, k, v, q_pos, k_pos, scale, softcap, causal, window,
+                  prefix_len, chunk: int):
+    """Online-softmax over KV chunks (flash-style, pure XLA lax.scan).
+
+    Peak score memory is (B, H, Sq, chunk) instead of (B, H, Sq, Sk).
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    Hkv = k.shape[2]
+    dv = v.shape[-1]
+    group = H // Hkv
+    n_chunks = -(-Sk // chunk)
+    pad = n_chunks * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-10 ** 9)
+    # k and v head dims differ under MLA (qk: nope+rope, v: v_head_dim)
+    kc = k.reshape(B, n_chunks, chunk, Hkv, k.shape[-1]) \
+        .transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, Hkv, dv).transpose(1, 0, 2, 3, 4)
+    pc = k_pos.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+
+    qg = (q.reshape(B, Sq, Hkv, group, hd) * scale).astype(jnp.float32)
+
+    def body(carry, xs):
+        m_prev, l_prev, acc = carry
+        kb, vb, pb = xs                                    # (B,chunk,Hkv,hd)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kb.astype(jnp.float32))
+        s = _softcap(s, softcap)
+        bias = _mask_bias(q_pos, pb, causal, window, prefix_len)
+        s = s + bias[:, None, None, :, :]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        pexp = jnp.exp(s - m_new[..., None])
+        l_new = l_prev * alpha + jnp.sum(pexp, axis=-1)
+        acc = acc * alpha[..., None] \
+            + jnp.einsum("bhgqk,bkhd->bhgqd", pexp, vb.astype(jnp.float32))
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, Hkv, group, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, group, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, group, Sq, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, pc))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, dv)
+    return out.astype(q.dtype)
+
+
+def sdpa(q, k, v, *, q_pos, k_pos, cfg: ModelConfig, causal: bool,
+         window: Optional[int], prefix_len=None, impl: Optional[str] = None,
+         scale: Optional[float] = None):
+    """Unified scaled-dot-product attention entry point."""
+    scale = scale if scale is not None else q.shape[-1] ** -0.5
+    impl = impl or cfg.attn_impl
+    if impl == "auto":
+        # decode steps & short sequences: naive; long prefill: chunked
+        # (>= so a 4k x 4k training step takes the flash-style path — the
+        # naive scores tensor at B_local=16 would be ~8.6 GiB f32/device)
+        impl = "chunked" if q.shape[1] * k.shape[1] >= 4096 * 4096 else "naive"
+    if impl == "pallas":
+        from ..kernels.flash_attention import ops as fa_ops
+        return fa_ops.flash_attention(
+            q, k, v, q_pos=q_pos, k_pos=k_pos, causal=causal, window=window,
+            softcap=cfg.attn_logit_softcap, scale=scale)
+    if impl == "chunked":
+        return _sdpa_chunked(q, k, v, q_pos, k_pos, scale,
+                             cfg.attn_logit_softcap, causal, window,
+                             prefix_len, cfg.attn_chunk)
+    bias = _mask_bias(q_pos, k_pos, causal, window, prefix_len)
+    return _sdpa_naive(q, k, v, bias, scale, cfg.attn_logit_softcap)
+
+
+# =============================================================================
+# Full attention layers (projection + rope + cache handling)
+# =============================================================================
+
+def attention(p, x, cfg: ModelConfig, *, positions, cache=None,
+              causal=True, window=None, prefix_len=None, xattn_kv=None):
+    """Returns (out, new_cache).
+
+    x: (B, S, D). positions: (B, S) absolute positions of x's tokens.
+    cache: None (train/prefill without cache) or dict (decode).
+    xattn_kv: (B, Sk, D) encoder output for cross-attention (whisper).
+    """
+    if cfg.mla and xattn_kv is None:
+        return _mla_attention(p, x, cfg, positions=positions, cache=cache,
+                              causal=causal, window=window)
+    B, S, D = x.shape
+    hd = cfg.resolved_head_dim
+    src = xattn_kv if xattn_kv is not None else x
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k = (src @ p["wk"]).reshape(B, src.shape[1], cfg.n_kv_heads, hd)
+    v = (src @ p["wv"]).reshape(B, src.shape[1], cfg.n_kv_heads, hd)
+
+    if xattn_kv is None and cfg.rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    if xattn_kv is not None:
+        k_pos = jnp.broadcast_to(jnp.arange(src.shape[1])[None, :],
+                                 (B, src.shape[1]))
+        out = sdpa(q, k, v, q_pos=positions, k_pos=k_pos, cfg=cfg,
+                   causal=False, window=None)
+        new_cache = cache
+    elif cache is None:
+        out = sdpa(q, k, v, q_pos=positions, k_pos=positions, cfg=cfg,
+                   causal=causal, window=window, prefix_len=prefix_len)
+        new_cache = None
+    else:
+        k_all, v_all, k_pos, new_cache = _update_kv_cache(
+            cache, k, v, positions, window)
+        if S > 1:
+            # prefill-with-cache: attend over the FRESH keys (a ring buffer
+            # narrower than S cannot serve early queries); the cache keeps
+            # only the tail for subsequent decode steps
+            out = sdpa(q, k, v, q_pos=positions, k_pos=positions, cfg=cfg,
+                       causal=True, window=window, prefix_len=prefix_len)
+        else:
+            out = sdpa(q, k_all, v_all, q_pos=positions, k_pos=k_pos,
+                       cfg=cfg, causal=True, window=window)
+    out = out.reshape(B, S, cfg.n_heads * hd) @ p["wo"]
+    return out, new_cache
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  window: Optional[int] = None, dtype=None):
+    """Ring-buffer cache; sliding-window layers cap the buffer at window."""
+    dt = dtype or dtype_of(cfg)
+    hd = cfg.resolved_head_dim
+    slots = min(window, max_len) if window else max_len
+    return {
+        "k": jnp.zeros((batch, slots, cfg.n_kv_heads, hd), dt),
+        "v": jnp.zeros((batch, slots, cfg.n_kv_heads, hd), dt),
+        "pos": jnp.full((batch, slots), -10 ** 9, jnp.int32),
+    }
+
+
+def _update_kv_cache(cache, k, v, positions, window):
+    """Insert entries at ring positions pos % slots. When more entries
+    arrive than the ring holds (windowed prefill), only the tail survives
+    — older entries would be overwritten anyway, so we slice them off up
+    front to keep the scatter duplicate-free."""
+    slots = cache["k"].shape[1]
+    B, S = positions.shape
+    if S > slots:
+        k, v, positions = (k[:, -slots:], v[:, -slots:],
+                           positions[:, -slots:])
+    idx = positions % slots                                   # (B, S')
+
+    def upd(buf, new):
+        return jax.vmap(lambda b, i, n: b.at[i].set(n))(buf, idx, new)
+
+    k_all = upd(cache["k"], k)
+    v_all = upd(cache["v"], v)
+    pos_all = jax.vmap(lambda b, i, n: b.at[i].set(n))(cache["pos"], idx,
+                                                       positions)
+    return k_all, v_all, pos_all, {"k": k_all, "v": v_all, "pos": pos_all}
+
+
+# =============================================================================
+# MLA (deepseek-v3): compressed KV cache, decoupled rope key
+# =============================================================================
+
+def _mla_attention(p, x, cfg: ModelConfig, *, positions, cache, causal,
+                   window):
+    from .common import apply_norm as _norm  # rmsnorm on latents
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+
+    if cfg.q_lora_rank:
+        ql = x @ p["wq_a"]
+        ql = _rms(ql, p["q_norm_scale"], cfg.norm_eps)
+        q = (ql @ p["wq_b"]).reshape(B, S, H, dn + dr)
+    else:
+        q = (x @ p["wq"]).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = x @ p["wkv_a"]                                    # (B,S,r+dr)
+    ckv, k_rope_in = kv_a[..., :cfg.kv_lora_rank], kv_a[..., cfg.kv_lora_rank:]
+    ckv = _rms(ckv, p["kv_norm_scale"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope_in[..., None, :], positions,
+                        cfg.rope_theta)[..., 0, :]            # shared head
+
+    if cache is not None:
+        slots = cache["ckv"].shape[1]
+        idx = positions % slots
+        ckv_all = jax.vmap(lambda b, i, n: b.at[i].set(n))(cache["ckv"],
+                                                           idx, ckv)
+        kr_all = jax.vmap(lambda b, i, n: b.at[i].set(n))(cache["k_rope"],
+                                                          idx, k_rope)
+        pos_all = jax.vmap(lambda b, i, n: b.at[i].set(n))(cache["pos"],
+                                                           idx, positions)
+        new_cache = {"ckv": ckv_all, "k_rope": kr_all, "pos": pos_all}
+    else:
+        ckv_all, kr_all, pos_all = ckv, k_rope, positions
+        new_cache = None
+
+    if S > 1:
+        # prefill: attend over fresh latents only (cache written above)
+        ckv_all, kr_all, pos_all = ckv, k_rope, positions
+    # up-project the (cached) latent to per-head K/V
+    Sk = ckv_all.shape[1]
+    kv = (ckv_all @ p["wkv_b"]).reshape(B, Sk, H, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr_all[:, :, None, :], (B, Sk, H, dr))],
+        axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    scale = (dn + dr) ** -0.5
+    out = sdpa(q_full, k, v, q_pos=positions, k_pos=pos_all, cfg=cfg,
+               causal=causal, window=window, scale=scale)
+    out = out.reshape(B, S, H * dv) @ p["wo"]
+    return out, new_cache
+
+
+def _rms(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * (1.0 + scale)).astype(x.dtype)
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dt = dtype or dtype_of(cfg)
+    return {
+        "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dt),
+        "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dt),
+        "pos": jnp.full((batch, max_len), -10 ** 9, jnp.int32),
+    }

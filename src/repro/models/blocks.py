@@ -1,0 +1,388 @@
+"""Layer-stack assembly: segments, scan-over-layers, cache threading.
+
+An architecture is compiled into a PLAN — a list of segments:
+
+  Segment("attn",  count, moe=?, window=?)   uniform attention layers, scanned
+  Segment("attn_pattern", count)             super-blocks cycling
+                                             cfg.attn_pattern (gemma2
+                                             local/global pairs), scanned
+  Segment("mamba", count)                    SSM layers, scanned
+  Segment("shared_attn")                     ONE shared full-attention block
+                                             (zamba2); params reused at every
+                                             occurrence, per-occurrence cache
+  Segment("xattn", count)                    decoder layers with self+cross
+                                             attention (whisper), scanned
+
+Stacked segments hold every param leaf with a leading layer dim and are
+executed with jax.lax.scan — HLO size stays O(#segments), which is what
+makes 80 dry-run compiles of 61-81-layer models tractable. Caches thread
+through scan as xs/ys with the same leading dim.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .common import apply_norm, init_norm
+from .mlp import init_mlp, mlp
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    kind: str
+    count: int = 1
+    moe: bool = False
+    window: Optional[int] = None
+
+
+def build_plan(cfg: ModelConfig) -> List[Segment]:
+    """Compile a config into its segment plan (decoder trunk only;
+    the whisper encoder is a separate stack handled in model.py)."""
+    if cfg.family == "encdec":
+        return [Segment("xattn", cfg.n_layers)]
+    if cfg.family == "ssm":
+        return [Segment("mamba", cfg.n_layers)]
+    if cfg.family == "hybrid":
+        plan: List[Segment] = []
+        period = cfg.attn_period or cfg.n_layers
+        remaining = cfg.n_layers
+        while remaining >= period:
+            plan.append(Segment("mamba", period))
+            plan.append(Segment("shared_attn", window=cfg.sliding_window))
+            remaining -= period
+        if remaining:
+            plan.append(Segment("mamba", remaining))
+        return plan
+    if cfg.attn_pattern:
+        plen = len(cfg.attn_pattern)
+        assert cfg.n_layers % plen == 0
+        return [Segment("attn_pattern", cfg.n_layers // plen)]
+    if cfg.is_moe and cfg.first_k_dense:
+        return [Segment("attn", cfg.first_k_dense, moe=False,
+                        window=cfg.sliding_window),
+                Segment("attn", cfg.n_layers - cfg.first_k_dense, moe=True,
+                        window=cfg.sliding_window)]
+    return [Segment("attn", cfg.n_layers, moe=cfg.is_moe,
+                    window=cfg.sliding_window)]
+
+
+# =============================================================================
+# Per-layer param init
+# =============================================================================
+
+def _init_attn_layer(key, cfg: ModelConfig, moe: bool, cross: bool = False):
+    ks = jax.random.split(key, 5)
+    p = {"norm1": init_norm(cfg, cfg.d_model),
+         "attn": attn_mod.init_attention(ks[0], cfg),
+         "norm2": init_norm(cfg, cfg.d_model)}
+    if cross:
+        p["xnorm"] = init_norm(cfg, cfg.d_model)
+        p["xattn"] = attn_mod.init_attention(ks[1], cfg, cross=True)
+    if moe:
+        p["moe"] = moe_mod.init_moe(ks[2], cfg)
+    else:
+        p["mlp"] = init_mlp(ks[3], cfg)
+    return p
+
+
+def _init_mamba_layer(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {"norm1": init_norm(cfg, cfg.d_model),
+            "mamba": ssm_mod.init_mamba(k1, cfg)}
+
+
+def init_segment(key, cfg: ModelConfig, seg: Segment):
+    if seg.kind == "shared_attn":
+        return _init_attn_layer(key, cfg, moe=False)
+    keys = jax.random.split(key, seg.count)
+    if seg.kind == "attn":
+        per = lambda k: _init_attn_layer(k, cfg, seg.moe)
+    elif seg.kind == "xattn":
+        per = lambda k: _init_attn_layer(k, cfg, moe=False, cross=True)
+    elif seg.kind == "mamba":
+        per = lambda k: _init_mamba_layer(k, cfg)
+    elif seg.kind == "attn_pattern":
+        def per(k):
+            sub = jax.random.split(k, len(cfg.attn_pattern))
+            return {name if cfg.attn_pattern.count(name) == 1
+                    else f"{name}{i}": _init_attn_layer(sk, cfg, cfg.is_moe)
+                    for i, (name, sk) in enumerate(zip(cfg.attn_pattern, sub))}
+    else:
+        raise ValueError(seg.kind)
+    return jax.vmap(per)(keys)   # stacked leading layer dim
+
+
+# =============================================================================
+# Per-layer forwards
+# =============================================================================
+
+@jax.custom_vjp
+def _grad_cast(x):
+    """Identity forward; backward casts the cotangent to x's dtype —
+    stops f32 activation-gradient chains from doubling the bytes of
+    every TP partial-sum all-reduce in the backward pass (§Perf H2)."""
+    return x
+
+
+def _grad_cast_fwd(x):
+    return x, jnp.zeros((0,), x.dtype)   # dtype carrier (jax-typed)
+
+
+def _grad_cast_bwd(carrier, g):
+    return (g.astype(carrier.dtype),)
+
+
+_grad_cast.defvjp(_grad_cast_fwd, _grad_cast_bwd)
+
+
+def _attn_layer(p, x, cfg: ModelConfig, *, positions, cache, window,
+                prefix_len=None, xattn_kv=None, moe_flag=False,
+                causal=True, moe_impl="dispatch"):
+    if cfg.bf16_grad_boundary:
+        x = _grad_cast(x)
+    h = apply_norm(p["norm1"], x, cfg)
+    if cfg.bf16_grad_boundary:
+        h = _grad_cast(h)     # cotangent entering the qkv TP dots
+    a, new_cache = attn_mod.attention(
+        p["attn"], h, cfg, positions=positions, cache=cache, causal=causal,
+        window=window, prefix_len=prefix_len)
+    x = x + a
+    new_xcache = None
+    if xattn_kv is not None:
+        h = apply_norm(p["xnorm"], x, cfg)
+        a, _ = attn_mod.attention(p["xattn"], h, cfg, positions=positions,
+                                  cache=None, xattn_kv=xattn_kv)
+        x = x + a
+    h = apply_norm(p["norm2"], x, cfg)
+    if cfg.bf16_grad_boundary:
+        h = _grad_cast(h)     # cotangent entering the mlp/moe TP dots
+    if moe_flag:
+        out, aux = moe_mod.moe(p["moe"], h, cfg, impl=moe_impl)
+    else:
+        out, aux = mlp(p["mlp"], h, cfg), jnp.float32(0.0)
+    return x + out, new_cache, aux
+
+
+def _mamba_layer(p, x, cfg: ModelConfig, state, conv_cache):
+    if cfg.bf16_grad_boundary:
+        x = _grad_cast(x)
+    h = apply_norm(p["norm1"], x, cfg)
+    out, new_state, new_conv = ssm_mod.mamba_forward(p["mamba"], h, cfg,
+                                                     state, conv_cache)
+    return x + out, new_state, new_conv
+
+
+# =============================================================================
+# Segment execution (scan over stacked layers)
+# =============================================================================
+
+def _scan(body, x, xs, length: int, remat: bool, unroll: bool = False):
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    if unroll:
+        # cfg.scan_layers=False: python-loop over layers. Produces depth-
+        # proportional HLO — used by the roofline cost extraction, where
+        # lax.scan would make XLA's cost_analysis() count the body ONCE
+        # regardless of trip count (verified empirically).
+        aux = jnp.float32(0.0)
+        caches = []
+        for i in range(length):
+            xs_i = jax.tree.map(lambda a: a[i], xs)
+            x, nc, a = body(x, xs_i)
+            caches.append(nc)
+            aux = aux + a
+        new_caches = jax.tree.map(lambda *cs: jnp.stack(cs), *caches)
+        return x, new_caches, aux
+
+    def f(carry, xs_i):
+        x, aux = carry
+        x, new_cache_i, aux_i = body(x, xs_i)
+        return (x, aux + aux_i), new_cache_i
+
+    (x, aux), new_caches = jax.lax.scan(f, (x, jnp.float32(0.0)), xs,
+                                        length=length)
+    return x, new_caches, aux
+
+
+def run_segment(seg: Segment, p, x, cfg: ModelConfig, *, positions,
+                cache=None, prefix_len=None, xattn_kv=None, causal=True,
+                moe_impl="dispatch"):
+    """Returns (x, new_cache, aux_loss)."""
+    if seg.kind == "shared_attn":
+        # standalone segment — NOT inside the layer scan, so cfg.remat
+        # must wrap it explicitly: un-rematted shared blocks dominated
+        # zamba2 train_4k's temp memory (222 GiB/device, §Perf H1-iter2)
+        fn = _attn_layer
+        if cfg.remat:
+            def fn(p_, x_, cfg_, **kw):
+                wrapped = jax.checkpoint(
+                    lambda pp, xx: _attn_layer(pp, xx, cfg_, **kw),
+                    prevent_cse=False)
+                return wrapped(p_, x_)
+        return fn(p, x, cfg, positions=positions, cache=cache,
+                  window=seg.window, prefix_len=prefix_len,
+                  causal=causal, moe_impl=moe_impl)
+
+    if seg.kind == "mamba":
+        if cache is not None:
+            def body(x, xs_i):
+                p_i, (st, cv) = xs_i
+                x, nst, ncv = _mamba_layer(p_i, x, cfg, st, cv)
+                return x, (nst, ncv), jnp.float32(0.0)
+            return _scan(body, x, (p, cache), seg.count, cfg.remat,
+                         unroll=not cfg.scan_layers)
+
+        # train/prefill: state=None selects the PARALLEL (associative /
+        # chunked) scan inside mamba_forward. Passing zero states here
+        # (the old _null_mamba_cache) silently routed training through
+        # the SEQUENTIAL decode recurrence — a lax.scan over all S
+        # timesteps materializing the (S,B,H,P,N) f32 trajectory per
+        # layer (1904 7-GiB tensors in the zamba2 train_4k HLO).
+        def body(x, xs_i):
+            p_i, _ = xs_i
+            x, nst, ncv = _mamba_layer(p_i, x, cfg, None, None)
+            return x, (nst, ncv), jnp.float32(0.0)
+        return _scan(body, x, (p, _dummy(seg.count)), seg.count,
+                     cfg.remat, unroll=not cfg.scan_layers)
+
+    if seg.kind == "attn":
+        def body(x, xs_i):
+            p_i, c_i = xs_i
+            return _attn_layer(p_i, x, cfg, positions=positions, cache=c_i,
+                               window=seg.window, prefix_len=prefix_len,
+                               xattn_kv=None, moe_flag=seg.moe,
+                               causal=causal, moe_impl=moe_impl)
+        caches = cache  # dict of stacked arrays or None
+        xs = (p, caches) if caches is not None else (p, _dummy(seg.count))
+        if caches is None:
+            def body(x, xs_i):  # noqa: F811 - cache-free variant
+                p_i, _ = xs_i
+                return _attn_layer(p_i, x, cfg, positions=positions,
+                                   cache=None, window=seg.window,
+                                   prefix_len=prefix_len, moe_flag=seg.moe,
+                                   causal=causal, moe_impl=moe_impl)
+        return _scan(body, x, xs, seg.count, cfg.remat,
+                     unroll=not cfg.scan_layers)
+
+    if seg.kind == "xattn":
+        # xattn_kv (encoder states) is shared by all layers -> closed over,
+        # NOT scanned (each layer applies its own wk/wv projections)
+        if cache is not None:
+            def body(x, xs_i):
+                p_i, c_i = xs_i
+                return _attn_layer(p_i, x, cfg, positions=positions,
+                                   cache=c_i, window=None,
+                                   xattn_kv=xattn_kv, causal=causal)
+            return _scan(body, x, (p, cache), seg.count, cfg.remat,
+                     unroll=not cfg.scan_layers)
+
+        def body(x, xs_i):
+            p_i, _ = xs_i
+            return _attn_layer(p_i, x, cfg, positions=positions, cache=None,
+                               window=None, xattn_kv=xattn_kv, causal=causal)
+        return _scan(body, x, (p, _dummy(seg.count)), seg.count, cfg.remat,
+                     unroll=not cfg.scan_layers)
+
+    if seg.kind == "attn_pattern":
+        names = _pattern_names(cfg)
+        def body(x, xs_i):
+            p_i, c_i = xs_i
+            aux = jnp.float32(0.0)
+            new_c = {}
+            for name in names:
+                window = cfg.sliding_window if name.startswith("local") \
+                    else None
+                sub_c = c_i[name] if c_i is not None else None
+                x, nc, a = _attn_layer(
+                    p_i[name], x, cfg, positions=positions, cache=sub_c,
+                    window=window, prefix_len=prefix_len,
+                    moe_flag=cfg.is_moe, causal=causal, moe_impl=moe_impl)
+                new_c[name] = nc if nc is not None else jnp.float32(0.0)
+                aux = aux + a
+            return x, new_c, aux
+        xs = (p, cache) if cache is not None else (p, _dummy(seg.count))
+        if cache is None:
+            def body(x, xs_i):  # noqa: F811
+                p_i, _ = xs_i
+                aux = jnp.float32(0.0)
+                for name in names:
+                    window = cfg.sliding_window if name.startswith("local") \
+                        else None
+                    x, _, a = _attn_layer(
+                        p_i[name], x, cfg, positions=positions, cache=None,
+                        window=window, prefix_len=prefix_len,
+                        moe_flag=cfg.is_moe, causal=causal,
+                        moe_impl=moe_impl)
+                    aux = aux + a
+                return x, jnp.float32(0.0), aux
+        return _scan(body, x, xs, seg.count, cfg.remat,
+                     unroll=not cfg.scan_layers)
+
+    raise ValueError(seg.kind)
+
+
+def _pattern_names(cfg: ModelConfig) -> List[str]:
+    names = []
+    for i, name in enumerate(cfg.attn_pattern):
+        names.append(name if cfg.attn_pattern.count(name) == 1
+                     else f"{name}{i}")
+    return names
+
+
+def _dummy(count: int):
+    return jnp.zeros((count,), jnp.float32)
+
+
+def _null_mamba_cache(cfg: ModelConfig, seg: Segment, batch: int):
+    cache = ssm_mod.init_ssm_state(cfg, batch)
+    L = seg.count
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (L,) + a.shape), cache)
+
+
+# =============================================================================
+# Cache construction per segment
+# =============================================================================
+
+def init_segment_cache(cfg: ModelConfig, seg: Segment, batch: int,
+                       max_len: int, n_frames: int = 0):
+    """Build the decode cache pytree for one segment (stacked over L)."""
+    def stacked(make_one, L):
+        one = make_one()
+        return jax.tree.map(lambda a: jnp.broadcast_to(
+            a[None], (L,) + a.shape).copy(), one)
+
+    if seg.kind == "shared_attn":
+        return attn_mod.init_kv_cache(cfg, batch, max_len, seg.window)
+    if seg.kind == "mamba":
+        cache = ssm_mod.init_ssm_state(cfg, batch)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None],
+                                       (seg.count,) + a.shape).copy(), cache)
+    if seg.kind == "attn":
+        if cfg.mla:
+            return stacked(lambda: attn_mod.init_mla_cache(cfg, batch,
+                                                           max_len),
+                           seg.count)
+        return stacked(lambda: attn_mod.init_kv_cache(cfg, batch, max_len,
+                                                      seg.window), seg.count)
+    if seg.kind == "xattn":
+        return stacked(lambda: attn_mod.init_kv_cache(cfg, batch, max_len),
+                       seg.count)
+    if seg.kind == "attn_pattern":
+        names = _pattern_names(cfg)
+        def one():
+            return {name: attn_mod.init_kv_cache(
+                cfg, batch, max_len,
+                cfg.sliding_window if name.startswith("local") else None)
+                for name in names}
+        return stacked(one, seg.count)
+    raise ValueError(seg.kind)

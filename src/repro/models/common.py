@@ -1,0 +1,120 @@
+"""Shared model components: norms, embeddings, RoPE, initializers.
+
+Params are plain nested dicts of jnp arrays. Initializers take explicit
+PRNG keys; weight layouts are chosen so the sharding rules in
+``sharding.py`` can match on path names.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def truncated_normal(key, shape, std, dtype):
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape)
+            ).astype(dtype)
+
+
+# --- norms -------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, shape_d: int):
+    if cfg.norm == "rmsnorm":
+        return {"scale": jnp.zeros((shape_d,), jnp.float32)}
+    return {"scale": jnp.zeros((shape_d,), jnp.float32),
+            "bias": jnp.zeros((shape_d,), jnp.float32)}
+
+
+def apply_norm(p, x, cfg: ModelConfig):
+    """RMSNorm/LayerNorm in fp32 with (1+scale) parameterization (gemma
+    convention; zero-init'ed scale == identity at init)."""
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + cfg.norm_eps) * (1.0 + p["scale"])
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps) \
+            * (1.0 + p["scale"]) + p["bias"]
+    return out.astype(x.dtype)
+
+
+# --- embeddings ------------------------------------------------------------
+
+def init_embedding(key, cfg: ModelConfig):
+    std = 1.0
+    return {"table": truncated_normal(key, (cfg.vocab_size, cfg.d_model),
+                                      std, dtype_of(cfg))}
+
+
+def embed(p, tokens, cfg: ModelConfig):
+    x = p["table"][tokens]
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def unembed(p_embed, p_head, x, cfg: ModelConfig):
+    """Final projection to vocab; tied or untied."""
+    if cfg.tie_embeddings:
+        w = p_embed["table"]
+    else:
+        w = p_head["w"]
+    logits = jnp.einsum("...d,vd->...v", x, w)
+    if cfg.final_logit_softcap:
+        c = cfg.final_logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+def init_head(key, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return {}
+    return {"w": truncated_normal(key, (cfg.vocab_size, cfg.d_model),
+                                  cfg.d_model ** -0.5, dtype_of(cfg))}
+
+
+def sinusoidal_positions(n_pos: int, dim: int, dtype=jnp.float32):
+    """Whisper-style sinusoidal embeddings."""
+    pos = jnp.arange(n_pos, dtype=jnp.float32)[:, None]
+    div = jnp.exp(-jnp.log(10000.0) * jnp.arange(0, dim, 2,
+                                                 dtype=jnp.float32) / dim)
+    ang = pos * div[None, :]
+    out = jnp.zeros((n_pos, dim), jnp.float32)
+    out = out.at[:, 0::2].set(jnp.sin(ang))
+    out = out.at[:, 1::2].set(jnp.cos(ang))
+    return out.astype(dtype)
+
+
+# --- RoPE ---------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                     / head_dim)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float
+               ) -> jnp.ndarray:
+    """x: (..., seq, n_heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs    # (..., s, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                          # (..., s, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def init_dense(key, d_in: int, d_out: int, dtype, std: Optional[float] = None):
+    std = std if std is not None else d_in ** -0.5
+    return truncated_normal(key, (d_in, d_out), std, dtype)

@@ -1,0 +1,38 @@
+"""Dense MLPs: SwiGLU (llama/starcoder-style), GeGLU (gemma), plain GELU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import dtype_of, init_dense
+
+
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": lambda x: jax.nn.gelu(x,
+                                                               approximate=True)
+            }[name]
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None):
+    d_ff = d_ff or cfg.d_ff
+    dt = dtype_of(cfg)
+    if cfg.glu:
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {"w_gate": init_dense(k1, cfg.d_model, d_ff, dt),
+                "w_up": init_dense(k2, cfg.d_model, d_ff, dt),
+                "w_down": init_dense(k3, d_ff, cfg.d_model, dt,
+                                     std=d_ff ** -0.5)}
+    k1, k2 = jax.random.split(key)
+    return {"w_up": init_dense(k1, cfg.d_model, d_ff, dt),
+            "w_down": init_dense(k2, d_ff, cfg.d_model, dt,
+                                 std=d_ff ** -0.5)}
+
+
+def mlp(p, x, cfg: ModelConfig):
+    act = _act(cfg.act)
+    if "w_gate" in p:
+        h = act(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = act(x @ p["w_up"])
+    return h @ p["w_down"]

@@ -1,0 +1,397 @@
+"""GSPMD sharding rules: param-tree path -> PartitionSpec.
+
+Baseline layout (megatron-style tensor parallelism on the "model" axis):
+  embeddings / unembed  vocab-parallel        ("model", None)
+  attention  q/k/v      head(out)-parallel    (None, "model")
+             out proj   head(in)-parallel     ("model", None)
+  mlp        up/gate    d_ff-parallel         (None, "model")
+             down       d_ff-parallel         ("model", None)
+  MoE        experts    expert-parallel       ("model", ...) when E % axis == 0
+                        else d_ff-within-expert parallel
+  mamba      d_inner-parallel (in_proj out dim / out_proj in dim / state)
+  norms, router, biases replicated
+
+Stacked segments carry a leading layer dim -> specs are padded with None
+on the left until rank matches. Optional FSDP: additionally shard each
+weight's largest replicated dim over the data axis (used by §Perf
+iterations and the biggest archs).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+
+MODEL = "model"
+
+
+def _attn_tp(cfg: ModelConfig, axis_size: int) -> bool:
+    """Head-shard attention only when the head counts divide the model
+    axis. GQA archs with few (kv-)heads (gemma2: 8q/4kv on a 16-way
+    axis) otherwise trigger GSPMD resharding storms — all-to-all /
+    collective-permute around every attention op (measured: ~17 GB per
+    layer pair on gemma2 train_4k). Replicated attention weights redo
+    the attention math per model rank but communicate nothing."""
+    if cfg.mla:
+        return cfg.n_heads % axis_size == 0
+    return (cfg.n_heads % axis_size == 0
+            and cfg.n_kv_heads % axis_size == 0)
+
+
+def _mamba_tp(cfg: ModelConfig, axis_size: int) -> bool:
+    return cfg.d_inner % axis_size == 0
+
+
+def _base_rule(name: str, parent: str, cfg: ModelConfig,
+               expert_parallel: bool, attn_tp: bool,
+               mamba_tp: bool, axis_size: int) -> Tuple:
+    """Spec for the UNSTACKED leaf, dispatched on leaf/parent names."""
+    # --- embeddings / head ---------------------------------------------------
+    if name == "table" or (parent == "head" and name == "w"):
+        # vocab-parallel only when the vocab divides the axis (granite's
+        # 49155 / whisper's 51866 don't; pjit rejects ragged ARG shards)
+        return (MODEL, None) if cfg.vocab_size % axis_size == 0 \
+            else (None, None)
+    if name == "pos_embed":
+        return (None, None)
+    # --- norms / small vectors ------------------------------------------
+    if "norm" in name or "norm" in parent or name in ("scale", "bias"):
+        return None  # replicated, resolved to P() later
+    # --- attention -----------------------------------------------------------
+    if name in ("wq", "wk", "wv", "wq_b", "wkv_b"):
+        return (None, MODEL) if attn_tp else (None, None)
+    if name in ("wq_a", "wkv_a"):
+        return (None, None)      # lora-down: small, replicated
+    if name == "wo":
+        return (MODEL, None) if attn_tp else (None, None)
+    # --- moe ------------------------------------------------------------
+    if parent == "moe" or name == "router":
+        if name == "router":
+            return (None, None)
+        if name in ("w_gate", "w_up"):
+            return (MODEL, None, None) if expert_parallel \
+                else (None, None, MODEL)
+        if name == "w_down":
+            return (MODEL, None, None) if expert_parallel \
+                else (None, MODEL, None)
+    # shared expert (nested under moe/shared) handled by mlp rules below
+    if name in ("w_gate", "w_up"):
+        return (None, MODEL)
+    if name == "w_down":
+        return (MODEL, None)
+    # --- mamba ----------------------------------------------------------
+    if name == "in_proj":
+        return (None, MODEL) if mamba_tp else (None, None)
+    if name in ("in_z", "in_x"):
+        return (None, MODEL) if mamba_tp else (None, None)
+    if name == "in_dt":
+        H = cfg.d_inner // cfg.mamba_headdim
+        return (None, MODEL) if (mamba_tp and H % axis_size == 0) \
+            else (None, None)
+    if name in ("in_bc", "conv_bc_w", "conv_bc_b"):
+        return None              # tiny (2*G*N), replicated
+    if name == "conv_x_w":
+        return (None, MODEL) if mamba_tp else (None, None)
+    if name == "conv_x_b":
+        return (MODEL,) if mamba_tp else (None,)
+    if name == "out_proj":
+        return (MODEL, None) if mamba_tp else (None, None)
+    if name == "x_proj":
+        return (MODEL, None) if mamba_tp else (None, None)
+    if name == "dt_proj":
+        return (None, MODEL) if mamba_tp else (None, None)
+    if name in ("conv_w",):
+        return (None, MODEL) if mamba_tp else (None, None)
+    if name in ("conv_b", "dt_bias", "A_log", "D"):
+        # exact unstacked ranks: conv_b (C,); mamba1 A_log (I,N),
+        # D/dt_bias (I,); mamba2 A_log/D/dt_bias (H,) — heads-sharded
+        # only when H divides the axis
+        if name == "A_log" and cfg.mamba_version == 1:
+            return (MODEL, None) if mamba_tp else (None, None)
+        if cfg.mamba_version == 2 and name != "conv_b":
+            H = cfg.d_inner // cfg.mamba_headdim
+            return (MODEL,) if (mamba_tp and H % axis_size == 0) \
+                else (None,)
+        return (MODEL,) if mamba_tp else (None,)
+    if name == "mtp_proj":
+        return (None, None)
+    return None
+
+
+def _moe_expert_parallel(cfg: ModelConfig, axis_size: int) -> bool:
+    return cfg.n_experts > 0 and cfg.n_experts % axis_size == 0
+
+
+def choose_layout(cfg: ModelConfig, model_axis_size: int,
+                  kind: str = "train", global_batch: int = 0,
+                  n_devices: int = 0) -> str:
+    """Pick the baseline layout for an arch on a model axis of this size.
+
+    "tp" — megatron tensor parallelism: attention head-sharded / mamba
+           d_inner-sharded / MoE expert-parallel on the model axis.
+           Requires the relevant width to divide the axis.
+    "cp" — context parallelism: the model axis shards the SEQUENCE of
+           activations instead; params replicated (+FSDP when large).
+           Attention all-gathers KV per layer (small operands). This is
+           the right default for archs whose head counts don't divide
+           the axis (gemma2: 8q/4kv vs 16) — head-sharding them triggers
+           GSPMD resharding storms, replicating them wastes axis-fold
+           compute on the quadratic term (both measured; see
+           EXPERIMENTS.md §Perf).
+    """
+    if kind == "decode":
+        # decode is weight-read-bound: always TP what divides (MLP d_ff
+        # always does; attention falls back to replicated via _attn_tp —
+        # its decode flops are negligible, and KV slots shard on "model"
+        # in cache_specs). Pure "cp" decode would re-read ALL params on
+        # every model rank (measured: 19.4ms vs ~6ms memory term on
+        # starcoder2-7b decode_32k).
+        return "tp"
+    if cfg.is_ssm:
+        tp_able = _mamba_tp(cfg, model_axis_size)
+    else:
+        tp_able = _attn_tp(cfg, model_axis_size)
+    # §Perf P6 (beyond-baseline, measured): at train_4k batch sizes,
+    # dp+FSDP (ZeRO-3) beats megatron TP even for TP-able archs —
+    # FSDP traffic is O(params) while TP all-reduces O(activations x
+    # layers) (gemma-7b: collective 1853 -> 416 ms). Gate on the
+    # per-layer gathered weights fitting comfortably in HBM (deepseek's
+    # 22 GB MoE layers must stay expert-parallel).
+    if (kind == "train" and global_batch and n_devices
+            and global_batch % n_devices == 0):
+        from ..launch.roofline import total_param_count
+        per_layer_bytes = total_param_count(cfg) / max(cfg.n_layers, 1) * 2
+        if per_layer_bytes < 2e9:
+            return "dp"
+    if tp_able:
+        return "tp"
+    # non-TP-able archs: "dp" (batch over ALL axes, FSDP'd replicated
+    # params, fully local attention) whenever the batch divides the
+    # device count — strictly less collective traffic than "cp"
+    # (measured on whisper train_4k: cp's backward all-reduces the grad
+    # of the shared encoder states, ~81 GB/decoder layer). "cp" remains
+    # for small-batch prefill (seq is the only shardable dim).
+    if global_batch and n_devices and global_batch % n_devices == 0:
+        return "dp"
+    return "cp"
+
+
+def param_specs(cfg: ModelConfig, params: Any, *, model_axis_size: int = 1,
+                fsdp_axis=None, fsdp_axis_size: int = 1,
+                layout: str = "tp") -> Any:
+    """Build a PartitionSpec pytree matching ``params``."""
+    ep = _moe_expert_parallel(cfg, model_axis_size)
+    attn_tp = _attn_tp(cfg, model_axis_size)
+    mamba_tp = _mamba_tp(cfg, model_axis_size)
+
+    def spec_for(path, leaf) -> P:
+        names = [_key_name(k) for k in path]
+        name = names[-1]
+        parent = names[-2] if len(names) >= 2 else ""
+        # identify moe subtree even when nested (segments/i/moe/w_gate)
+        in_moe = "moe" in names[:-1]
+        if layout in ("cp", "dp"):
+            base = None          # replicated; FSDP below carries the load
+        else:
+            base = _base_rule(name, "moe" if in_moe and parent != "shared"
+                              else parent, cfg, ep, attn_tp, mamba_tp,
+                              model_axis_size)
+        ndim = leaf.ndim if hasattr(leaf, "ndim") else len(leaf.shape)
+        if base is None:
+            spec = [None] * ndim
+        else:
+            spec = list(base)
+            # A_log/D/dt_bias declared 2D; trim for 1D leaves (mamba2)
+            spec = spec[:ndim] if len(spec) > ndim else spec
+            while len(spec) < ndim:          # stacked-layer leading dims
+                spec.insert(0, None)
+        if fsdp_axis is not None:
+            _model_axis_of[0] = model_axis_size
+            # embedding-like tables: FSDP may only shard the VOCAB dim —
+            # feature-dim shards turn the unembed contraction into a
+            # full-logits all-reduce (217 GB/device on whisper train_4k)
+            vocab_like = (name == "table" or name == "pos_embed"
+                          or (parent == "head" and name == "w"))
+            allowed = {0} if vocab_like else None
+            spec = _add_fsdp(spec, leaf.shape, fsdp_axis, fsdp_axis_size,
+                             allowed_dims=allowed)
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def _add_fsdp(spec, shape, axis, axis_size, allowed_dims=None,
+              min_shard: int = 32):
+    """Shard the largest still-replicated allowed dim over the fsdp axes.
+
+    Guards (each measured to matter):
+      * allowed_dims — embedding/unembed tables may only shard the VOCAB
+        dim: feature-dim sharding makes the unembed contraction emit a
+        full-logits all-reduce (whisper train_4k: 217 GB/device);
+      * quotient >= min_shard (32) — shards thinner than a lane tile force
+        degenerate layouts; if the full axis product is too fine, fall
+        back to the FIRST axis only (e.g. ("pod","data") out of
+        ("pod","data","model")).
+    """
+    axes = axis if isinstance(axis, tuple) else (axis,)
+    candidates = [(axes, axis_size)]
+    if len(axes) > 1 and axes[-1] == MODEL and axis_size % 16 == 0:
+        # fall back to the data axes only (model axis size threaded by
+        # param_specs through _model_axis_of)
+        candidates.append((axes[:-1], axis_size // _model_axis_of[0]))
+
+    def try_axes(ax_tuple, size):
+        best, best_dim = -1, 0
+        for i, (s, d) in enumerate(zip(spec, shape)):
+            if allowed_dims is not None and i not in allowed_dims:
+                continue
+            if s is None and d % size == 0 and d // size >= min_shard \
+                    and d > best_dim and d >= 1024:
+                best, best_dim = i, d
+        return best
+
+    for ax_tuple, size in candidates:
+        best = try_axes(ax_tuple, size)
+        if best >= 0:
+            out = list(spec)
+            out[best] = ax_tuple if len(ax_tuple) > 1 else ax_tuple[0]
+            return out
+    return spec
+
+
+# model-axis size side channel for the fsdp fallback (set by param_specs)
+_model_axis_of = [16]
+
+
+def _key_name(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+def batch_specs(cfg: ModelConfig, batch: Dict[str, Any], data_axes,
+                seq_axis: Optional[str] = None, mesh=None):
+    """PartitionSpecs for an input batch dict. data_axes carry the batch
+    dim; ``seq_axis`` (cp layout) additionally shards dim 1 (sequence /
+    frames / patches). When ``mesh`` is given, dims that don't divide
+    their axes stay unsharded (whisper's 1500 frames vs a 16-way axis)."""
+    def fits(dim_size, axes):
+        if mesh is None or axes is None:
+            return True
+        axes = axes if isinstance(axes, tuple) else (axes,)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        return dim_size % n == 0
+
+    out = {}
+    for k, v in batch.items():
+        shape = v.shape
+        ndim = len(shape)
+        b_ax = data_axes if fits(shape[0], data_axes) else None
+        if k == "prefix_len" or ndim < 2:
+            out[k] = P(b_ax)
+        else:
+            s_ax = seq_axis if fits(shape[1], seq_axis) else None
+            out[k] = P(b_ax, s_ax, *([None] * (ndim - 2)))
+    return out
+
+
+# =============================================================================
+# Decode-cache specs (plan walk — mirrors models.model.init_cache)
+# =============================================================================
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int, data_axes,
+                model_axis_size: int, layout: str = "tp"):
+    """PartitionSpec pytree matching ``init_cache(cfg, batch, max_len)``.
+
+    Rules (baseline; §Perf iterates):
+      * batch dim -> data axes (when divisible / batch > 1)
+      * k/v with head-TP (tp layout, n_kv_heads % axis == 0)
+        -> shard the KV-HEAD dim on "model", slots unsharded
+      * otherwise -> shard SLOTS on "model" (sequence-sharded cache;
+        GSPMD turns the decode softmax into two small all-reduces).
+        batch == 1 (long_500k) -> slots over (data..., "model")
+      * mamba state -> d_inner/head dim on "model" when divisible
+      * window ring buffers whose slot count doesn't divide stay
+        replicated on the slots dim
+    """
+    from .blocks import build_plan, _pattern_names
+
+    attn_tp = _attn_tp(cfg, model_axis_size) and layout == "tp"
+    mamba_tp = _mamba_tp(cfg, model_axis_size) and layout == "tp"
+    n_data = 1  # product of data axes sizes is unknown here; caller
+    # guarantees divisibility by passing data_axes=() when batch == 1.
+    b_ax = data_axes if (batch > 1 and data_axes) else None
+
+    def slots_ax(slots: int):
+        axes = []
+        if batch == 1 and data_axes:
+            axes.extend(data_axes if isinstance(data_axes, tuple)
+                        else [data_axes])
+        axes.append("model")
+        denom = model_axis_size  # conservative: require model-divisibility
+        if slots % denom != 0:
+            return None
+        return tuple(axes) if len(axes) > 1 else axes[0]
+
+    def kv_spec(slots: int, stacked: bool):
+        lead = (None,) if stacked else ()
+        if attn_tp:
+            return {"k": P(*lead, b_ax, None, MODEL, None),
+                    "v": P(*lead, b_ax, None, MODEL, None),
+                    "pos": P(*lead, b_ax, None)}
+        s = slots_ax(slots)
+        return {"k": P(*lead, b_ax, s, None, None),
+                "v": P(*lead, b_ax, s, None, None),
+                "pos": P(*lead, b_ax, s)}
+
+    def mla_spec(slots: int, stacked: bool):
+        lead = (None,) if stacked else ()
+        s = slots_ax(slots)
+        return {"ckv": P(*lead, b_ax, s, None),
+                "k_rope": P(*lead, b_ax, s, None),
+                "pos": P(*lead, b_ax, s)}
+
+    def mamba_spec(stacked: bool):
+        lead = (None,) if stacked else ()
+        m = MODEL if mamba_tp else None
+        if cfg.mamba_version == 2:
+            # state (L,B,H,P,N); conv {"x": (L,B,K-1,I), "bc": small}
+            H = cfg.d_inner // cfg.mamba_headdim
+            hm = MODEL if (mamba_tp and H % model_axis_size == 0) else None
+            cm = MODEL if mamba_tp else None
+            return (P(*lead, b_ax, hm, None, None),
+                    {"x": P(*lead, b_ax, None, cm),
+                     "bc": P(*lead, b_ax, None, None)})
+        return (P(*lead, b_ax, m, None), P(*lead, b_ax, None, m))
+
+    specs = []
+    for seg in build_plan(cfg):
+        if seg.kind == "mamba":
+            specs.append(mamba_spec(stacked=True))
+        elif seg.kind == "shared_attn":
+            slots = min(seg.window, max_len) if seg.window else max_len
+            specs.append(kv_spec(slots, stacked=False))
+        elif seg.kind == "attn":
+            slots = min(seg.window, max_len) if seg.window else max_len
+            specs.append(mla_spec(slots, True) if cfg.mla
+                         else kv_spec(slots, True))
+        elif seg.kind == "xattn":
+            specs.append(kv_spec(max_len, stacked=True))
+        elif seg.kind == "attn_pattern":
+            names = _pattern_names(cfg)
+            sub = {}
+            for name in names:
+                w = cfg.sliding_window if name.startswith("local") else None
+                slots = min(w, max_len) if w else max_len
+                sub[name] = kv_spec(slots, stacked=True)
+            specs.append(sub)
+        else:
+            raise ValueError(seg.kind)
+    return specs

@@ -1,0 +1,367 @@
+"""State-space blocks: Mamba-1 (falcon-mamba) and Mamba-2/SSD (zamba2).
+
+Training/prefill uses an associative scan over the sequence (log-depth on
+TPU, the natural adaptation of the CUDA selective-scan kernel — see
+DESIGN.md §4). Decode uses the O(1) single-step recurrence with carried
+state, which is what makes long_500k viable for these families.
+
+State layout:
+  mamba1: h (B, I, N)        I = expand*d_model, N = ssm_state
+  mamba2: h (B, H, P, N)     H heads of dim P = mamba_headdim, scalar A/head
+Conv cache: (B, K-1, channels) rolling window for the causal conv.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import dtype_of, init_dense
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    return max(1, math.ceil(cfg.d_model / 16))
+
+
+# =============================================================================
+# Init
+# =============================================================================
+
+def init_mamba(key, cfg: ModelConfig):
+    if cfg.mamba_version == 2:
+        return _init_mamba2(key, cfg)
+    I, N, K, R = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv, _dt_rank(cfg)
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 6)
+    A = jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (I, N))
+    return {
+        "in_proj": init_dense(ks[0], cfg.d_model, 2 * I, dt),
+        "conv_w": (K ** -0.5) * jax.random.normal(ks[1], (K, I)).astype(dt),
+        "conv_b": jnp.zeros((I,), dt),
+        "x_proj": init_dense(ks[2], I, R + 2 * N, dt),
+        "dt_proj": init_dense(ks[3], R, I, dt, std=R ** -0.5),
+        "dt_bias": jnp.log(jnp.expm1(  # init dt in [1e-3, 1e-1] (mamba ref)
+            jnp.exp(jax.random.uniform(ks[4], (I,), jnp.float32,
+                                       math.log(1e-3), math.log(1e-1))))),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((I,), jnp.float32),
+        "out_proj": init_dense(ks[5], I, cfg.d_model, dt, std=I ** -0.5),
+    }
+
+
+def _init_mamba2(key, cfg: ModelConfig):
+    I, N, K = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    P = cfg.mamba_headdim
+    H = I // P
+    G = 1  # B/C groups
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 7)
+    # PER-COMPONENT projections instead of one fused in_proj: slicing a
+    # model-sharded fused output at boundaries that don't align with the
+    # shard grid (z|x|B|C|dt at 7168/14336/14400/14464 vs 911-wide
+    # shards on zamba2) makes GSPMD reshard around every slice —
+    # measured 6.2 GB of all-to-all/permute per layer (§Perf H1).
+    # Depthwise conv commutes with the channel split, so separate convs
+    # are mathematically identical to the fused one.
+    return {
+        "in_z": init_dense(ks[0], cfg.d_model, I, dt),
+        "in_x": init_dense(ks[1], cfg.d_model, I, dt),
+        "in_bc": init_dense(ks[2], cfg.d_model, 2 * G * N, dt),
+        "in_dt": init_dense(ks[3], cfg.d_model, H, dt),
+        "conv_x_w": (K ** -0.5) * jax.random.normal(
+            ks[4], (K, I)).astype(dt),
+        "conv_x_b": jnp.zeros((I,), dt),
+        "conv_bc_w": (K ** -0.5) * jax.random.normal(
+            ks[5], (K, 2 * G * N)).astype(dt),
+        "conv_bc_b": jnp.zeros((2 * G * N,), dt),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[6], (H,), jnp.float32,
+                                       math.log(1e-3), math.log(1e-1))))),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm_scale": jnp.zeros((I,), jnp.float32),
+        "out_proj": init_dense(ks[3], I, cfg.d_model, dt, std=I ** -0.5),
+    }
+
+
+# =============================================================================
+# Causal depthwise conv (with rolling cache for decode)
+# =============================================================================
+
+def _causal_conv(x, w, b, conv_cache=None):
+    """x: (B, S, C); w: (K, C) depthwise. Returns (y, new_cache)."""
+    K = w.shape[0]
+    if conv_cache is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([conv_cache, x], axis=1)
+    new_cache = xp[:, -(K - 1):, :] if K > 1 else xp[:, :0, :]
+    # depthwise conv as K shifted adds — cheap, fusion-friendly, and
+    # avoids conv_general_dilated layout pitfalls on TPU for tiny K
+    S = x.shape[1]
+    y = sum(xp[:, i:i + S, :] * w[i][None, None, :] for i in range(K))
+    return y + b[None, None, :], new_cache
+
+
+# =============================================================================
+# Selective scans
+# =============================================================================
+
+def _assoc_scan(a, b):
+    """h_t = a_t * h_{t-1} + b_t along axis 1. a, b: (B, S, ...).
+    Returns (cumprod_a, h) so callers can fold in a carried h_0."""
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a2 * a1, a2 * b1 + b2
+    a_out, b_out = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return a_out, b_out  # h_t with h_0 = 0
+
+
+def _chunked_scan(a, b, chunk: int):
+    """Same recurrence, lax.scan over seq chunks with a carried state:
+    peak live tensor is (B, chunk, ...) instead of (B, S, ...) —
+    §Perf H1-iter2: the full-seq associative scan materializes the
+    (B,S,I,N)/(B,S,H,P,N) state tensor in HBM (zamba2 train_4k:
+    223 GiB temp per device).
+    h_t = cumprod_a * h0 + h_t^(0) folds the carry into each chunk."""
+    B, S = a.shape[:2]
+    n = S // chunk
+    a_c = a.reshape((B, n, chunk) + a.shape[2:]).swapaxes(0, 1)
+    b_c = b.reshape((B, n, chunk) + b.shape[2:]).swapaxes(0, 1)
+
+    def body(h0, ab):
+        ac, bc = ab
+        cum_a, h_local = _assoc_scan(ac, bc)
+        h = h_local + cum_a * h0[:, None]
+        return h[:, -1], h
+
+    state_shape = (B,) + jnp.broadcast_shapes(a.shape[2:], b.shape[2:])
+    h0 = jnp.zeros(state_shape, a.dtype)
+    h_last, hs = jax.lax.scan(body, h0, (a_c, b_c))
+    h = hs.swapaxes(0, 1).reshape((B, S) + hs.shape[3:])
+    return h_last, h
+
+
+def _scan_states(a, b, chunk: int):
+    """Dispatch: chunked when the seq divides the chunk size, else the
+    one-shot associative scan. Returns (h_final, h_all)."""
+    S = a.shape[1]
+    if chunk and S > chunk and S % chunk == 0:
+        return _chunked_scan(a, b, chunk)
+    _, h = _assoc_scan(a, b)
+    return h[:, -1], h
+
+
+def _part(t, n, chunk):
+    B = t.shape[0]
+    return t.reshape((B, n, chunk) + t.shape[2:]).swapaxes(0, 1)
+
+
+def _chunked_ssd1(xs, dt, B_ssm, C_ssm, A, chunk: int):
+    """mamba1 fused chunked scan -> (y (B,S,I) f32, h_final (B,I,N)).
+
+    The discretized input bu = (dt*x) B^T and the state trajectory h are
+    (B,S,I,N)-sized; materializing them at full S is what drives the
+    222 GiB temp on zamba2 train_4k (§Perf H1-iter2). Here BOTH are
+    built per chunk inside a rematerialized lax.scan body, so the peak
+    live tensor is (B,chunk,I,N) — the XLA analogue of the CUDA
+    selective-scan fusion (the Pallas kernel goes further and keeps h
+    in VMEM; this path is the pure-XLA production fallback)."""
+    B, S, I = xs.shape
+    N = B_ssm.shape[-1]
+    n = S // chunk
+    xs_c, dt_c, B_c, C_c = (_part(t, n, chunk)
+                            for t in (xs, dt, B_ssm, C_ssm))
+
+    def body(h0, inp):
+        x_i, dt_i, b_i, c_i = inp
+        a = jnp.exp(dt_i[..., None] * A[None, None, :, :])
+        bu = (dt_i * x_i.astype(jnp.float32))[..., None] \
+            * b_i.astype(jnp.float32)[..., None, :]
+        cum_a, h_local = _assoc_scan(a, bu)
+        h = h_local + cum_a * h0[:, None]
+        y = jnp.einsum("bsin,bsn->bsi", h, c_i.astype(jnp.float32))
+        return h[:, -1], y
+
+    body = jax.checkpoint(body)
+    h0 = jnp.zeros((B, I, N), jnp.float32)
+    hf, ys = jax.lax.scan(body, h0, (xs_c, dt_c, B_c, C_c))
+    return ys.swapaxes(0, 1).reshape(B, S, I), hf
+
+
+def _chunked_ssd2(xs, dt, B_ssm, C_ssm, A, chunk: int):
+    """mamba2 fused chunked scan -> (y (B,S,H,P) f32, h_final
+    (B,H,P,N)). Same construction as _chunked_ssd1 with per-head scalar
+    decay; xs: (B,S,H,P), dt: (B,S,H)."""
+    B, S, H, P = xs.shape
+    N = B_ssm.shape[-1]
+    n = S // chunk
+    xs_c, dt_c, B_c, C_c = (_part(t, n, chunk)
+                            for t in (xs, dt, B_ssm, C_ssm))
+
+    def body(h0, inp):
+        x_i, dt_i, b_i, c_i = inp
+        a = jnp.exp(dt_i * A[None, None, :])[..., None, None]
+        bu = (dt_i[..., None] * x_i.astype(jnp.float32))[..., None] \
+            * b_i.astype(jnp.float32)[:, :, None, None, :]
+        cum_a, h_local = _assoc_scan(a, bu)
+        h = h_local + cum_a * h0[:, None]
+        y = jnp.einsum("bshpn,bsn->bshp", h, c_i.astype(jnp.float32))
+        return h[:, -1], y
+
+    body = jax.checkpoint(body)
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    hf, ys = jax.lax.scan(body, h0, (xs_c, dt_c, B_c, C_c))
+    return ys.swapaxes(0, 1).reshape(B, S, H, P), hf
+
+
+def _use_chunked(cfg: ModelConfig, S: int) -> bool:
+    return bool(cfg.ssm_chunk) and S > cfg.ssm_chunk \
+        and S % cfg.ssm_chunk == 0
+
+
+def mamba1_forward(p, x, cfg: ModelConfig, state=None, conv_cache=None):
+    """x: (B, S, D). state/conv_cache given -> recurrent update (decode).
+
+    Returns (y (B,S,D), new_state, new_conv_cache).
+    """
+    B, S, D = x.shape
+    I, N, R = cfg.d_inner, cfg.ssm_state, _dt_rank(cfg)
+    xz = x @ p["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)                       # (B,S,I)
+    xs, new_conv = _causal_conv(xs, p["conv_w"], p["conv_b"], conv_cache)
+    xs = jax.nn.silu(xs)
+
+    xdb = xs @ p["x_proj"]                                  # (B,S,R+2N)
+    dt_in, B_ssm, C_ssm = jnp.split(xdb, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(dt_in @ p["dt_proj"]
+                         + p["dt_bias"][None, None, :]).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])                                # (I,N)
+
+    if state is None and _use_chunked(cfg, S):
+        y_scan, new_state = _chunked_ssd1(xs, dt, B_ssm, C_ssm, A,
+                                          cfg.ssm_chunk)
+        y = y_scan + p["D"][None, None, :] * xs.astype(jnp.float32)
+        y = y.astype(x.dtype) * jax.nn.silu(z)
+        return y @ p["out_proj"], new_state, new_conv
+
+    if state is None and cfg.attn_impl == "pallas":
+        # Pallas selective-scan: state stays in VMEM; never materializes
+        # the (B,S,I,N) tensor in HBM (kernels/ssm_scan)
+        from ..kernels.ssm_scan import ops as ssm_ops
+        y_scan, new_state = ssm_ops.selective_scan(
+            xs, dt.astype(jnp.float32), B_ssm, C_ssm, A)
+        y = y_scan + p["D"][None, None, :] * xs.astype(jnp.float32)
+        y = y.astype(x.dtype) * jax.nn.silu(z)
+        return y @ p["out_proj"], new_state, new_conv
+
+    a = jnp.exp(dt[..., None] * A[None, None, :, :])        # (B,S,I,N)
+    bu = (dt * xs.astype(jnp.float32))[..., None] \
+        * B_ssm.astype(jnp.float32)[..., None, :]           # (B,S,I,N)
+
+    if state is None:
+        _, h = _assoc_scan(a, bu)                           # (B,S,I,N)
+        new_state = h[:, -1]
+    else:
+        # single/multi-step recurrence from carried state
+        def step(hprev, inp):
+            at, bt = inp
+            hnew = at * hprev + bt
+            return hnew, hnew
+        new_state, h = jax.lax.scan(
+            step, state, (a.transpose(1, 0, 2, 3), bu.transpose(1, 0, 2, 3)))
+        h = h.transpose(1, 0, 2, 3)
+
+    y = jnp.einsum("bsin,bsn->bsi", h, C_ssm.astype(jnp.float32))
+    y = y + p["D"][None, None, :] * xs.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ p["out_proj"], new_state, new_conv
+
+
+def mamba2_forward(p, x, cfg: ModelConfig, state=None, conv_cache=None):
+    """Mamba-2 / SSD with scalar-per-head decay. x: (B,S,D).
+
+    Per-component projections + separate depthwise convs (shard-aligned;
+    see _init_mamba2). conv_cache: {"x": (B,K-1,I), "bc": (B,K-1,2GN)}.
+    """
+    B, S, D = x.shape
+    I, N = cfg.d_inner, cfg.ssm_state
+    P = cfg.mamba_headdim
+    H = I // P
+    G = 1
+    z = x @ p["in_z"]                                       # (B,S,I)
+    xs_in = x @ p["in_x"]                                   # (B,S,I)
+    bc_in = x @ p["in_bc"]                                  # (B,S,2GN)
+    dt_in = x @ p["in_dt"]                                  # (B,S,H)
+    cc = conv_cache or {"x": None, "bc": None}
+    xs, new_conv_x = _causal_conv(xs_in, p["conv_x_w"], p["conv_x_b"],
+                                  cc["x"])
+    bc, new_conv_bc = _causal_conv(bc_in, p["conv_bc_w"], p["conv_bc_b"],
+                                   cc["bc"])
+    new_conv = {"x": new_conv_x, "bc": new_conv_bc}
+    xs = jax.nn.silu(xs)
+    bc = jax.nn.silu(bc)
+    B_ssm, C_ssm = jnp.split(bc, [G * N], axis=-1)
+    xs = xs.reshape(B, S, H, P)
+    dt = jax.nn.softplus(dt_in.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])     # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                # (H,)
+
+    if state is None and _use_chunked(cfg, S):
+        y_scan, new_state = _chunked_ssd2(xs, dt, B_ssm, C_ssm, A,
+                                          cfg.ssm_chunk)
+        y = y_scan + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+        y = y.reshape(B, S, I)
+        yf = y * jax.nn.silu(z.astype(jnp.float32))
+        var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+        yf = yf * jax.lax.rsqrt(var + cfg.norm_eps) * (1.0 + p["norm_scale"])
+        return yf.astype(x.dtype) @ p["out_proj"], new_state, new_conv
+
+    a = jnp.exp(dt * A[None, None, :])                      # (B,S,H)
+    # b_t = dt * x_t (outer) B_t : (B,S,H,P,N)
+    bu = (dt[..., None] * xs.astype(jnp.float32))[..., None] \
+        * B_ssm.astype(jnp.float32)[:, :, None, None, :]
+
+    if state is None:
+        _, h = _assoc_scan(a[..., None, None], bu)          # (B,S,H,P,N)
+        new_state = h[:, -1]
+    else:
+        def step(hprev, inp):
+            at, bt = inp
+            hnew = at[..., None, None] * hprev + bt
+            return hnew, hnew
+        new_state, h = jax.lax.scan(
+            step, state, (a.transpose(1, 0, 2), bu.transpose(1, 0, 2, 3, 4)))
+        h = h.transpose(1, 0, 2, 3, 4)
+
+    y = jnp.einsum("bshpn,bsn->bshp", h, C_ssm.astype(jnp.float32))
+    y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, S, I)
+    # gated RMSNorm (mamba2) then output
+    yf = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + cfg.norm_eps) * (1.0 + p["norm_scale"])
+    return yf.astype(x.dtype) @ p["out_proj"], new_state, new_conv
+
+
+def mamba_forward(p, x, cfg: ModelConfig, state=None, conv_cache=None):
+    if cfg.mamba_version == 2:
+        return mamba2_forward(p, x, cfg, state, conv_cache)
+    return mamba1_forward(p, x, cfg, state, conv_cache)
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    I, N = cfg.d_inner, cfg.ssm_state
+    K = cfg.ssm_conv
+    if cfg.mamba_version == 2:
+        P = cfg.mamba_headdim
+        H = I // P
+        return (jnp.zeros((batch, H, P, N), dtype),
+                {"x": jnp.zeros((batch, K - 1, I), dtype_of(cfg)),
+                 "bc": jnp.zeros((batch, K - 1, 2 * N), dtype_of(cfg))})
+    return (jnp.zeros((batch, I, N), dtype),
+            jnp.zeros((batch, K - 1, I), dtype_of(cfg)))

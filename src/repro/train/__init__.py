@@ -1,0 +1,3 @@
+from .steps import TrainConfig, make_train_step, make_serve_step  # noqa: F401
+from .loop import train_loop  # noqa: F401
+from .checkpoint import load_checkpoint, save_checkpoint  # noqa: F401

@@ -1,0 +1,100 @@
+"""npz-based checkpointing (no orbax offline).
+
+Flattens the state pytree to path-keyed arrays; treedef is rebuilt from
+the paths, so checkpoints are stable across process restarts. Atomic
+write (tmp + rename); keeps the last ``keep`` checkpoints.
+"""
+from __future__ import annotations
+
+import os
+import re
+import tempfile
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in leaves:
+        key = jax.tree_util.keystr(path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _set_path(d: dict, keys, value):
+    cur = d
+    for k in keys[:-1]:
+        cur = cur.setdefault(k, {})
+    cur[keys[-1]] = value
+
+
+_KEY_RE = re.compile(r"\['([^']*)'\]|\[(\d+)\]")
+
+
+def _unflatten(flat: dict):
+    tree: dict = {}
+    for key, arr in flat.items():
+        parts = []
+        for m in _KEY_RE.finditer(key):
+            parts.append(m.group(1) if m.group(1) is not None
+                         else int(m.group(2)))
+        _set_path(tree, parts, jnp.asarray(arr))
+    return _listify(tree)
+
+
+def _listify(node):
+    """Convert dicts with contiguous int keys back into lists."""
+    if not isinstance(node, dict):
+        return node
+    node = {k: _listify(v) for k, v in node.items()}
+    if node and all(isinstance(k, int) for k in node):
+        idx = sorted(node)
+        if idx == list(range(len(idx))):
+            return [node[i] for i in idx]
+    return node
+
+
+def save_checkpoint(ckpt_dir: str, step: int, state: Any,
+                    keep: int = 3) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    flat = _flatten(state)
+    fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, **flat)
+    os.replace(tmp, path)
+    _gc(ckpt_dir, keep)
+    return path
+
+
+def load_checkpoint(ckpt_dir: str, step: Optional[int] = None
+                    ) -> Tuple[int, Any]:
+    steps = available_steps(ckpt_dir)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    step = step if step is not None else steps[-1]
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    with np.load(path) as data:
+        flat = {k: data[k] for k in data.files}
+    return step, _unflatten(flat)
+
+
+def available_steps(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for f in os.listdir(ckpt_dir):
+        m = re.match(r"step_(\d+)\.npz$", f)
+        if m:
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = available_steps(ckpt_dir)
+    for s in steps[:-keep]:
+        os.remove(os.path.join(ckpt_dir, f"step_{s:08d}.npz"))

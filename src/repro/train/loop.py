@@ -1,0 +1,44 @@
+"""Host-side training loop: data feed, jit'd step, metrics, checkpoints."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Iterable, Optional
+
+import jax
+import numpy as np
+
+from .checkpoint import save_checkpoint
+
+
+def train_loop(train_step: Callable, state, batches: Iterable,
+               n_steps: int, *, log_every: int = 10,
+               ckpt_dir: Optional[str] = None, ckpt_every: int = 500,
+               log_fn: Callable[[str], None] = print) -> Dict:
+    step_fn = jax.jit(train_step, donate_argnums=(0,))
+    history = {"step": [], "loss": [], "nll": []}
+    t0 = time.time()
+    it = iter(batches)
+    for step in range(n_steps):
+        batch = next(it)
+        if isinstance(batch, tuple):          # (tokens, targets) pipelines
+            batch = {"tokens": batch[0], "targets": batch[1]}
+        batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+        state, metrics = step_fn(state, batch)
+        if (step + 1) % log_every == 0 or step == 0:
+            loss = float(metrics["loss"])
+            nll = float(metrics.get("nll", metrics["loss"]))
+            dt = time.time() - t0
+            log_fn(f"step {step + 1:5d}  loss {loss:.4f}  nll {nll:.4f}  "
+                   f"({dt / (step + 1):.2f}s/step)")
+            history["step"].append(step + 1)
+            history["loss"].append(loss)
+            history["nll"].append(nll)
+        if ckpt_dir and (step + 1) % ckpt_every == 0:
+            save_checkpoint(ckpt_dir, step + 1, state)
+    if ckpt_dir:
+        save_checkpoint(ckpt_dir, n_steps, state)
+    return history
+
+
+def next_batch(it):
+    return next(it)

@@ -1,0 +1,102 @@
+"""train_step / serve_step factories — the functions the launcher jits,
+the dry-run lowers, and the roofline analyses.
+
+train_step(state, batch) -> (state, metrics)
+  state = {"params", "opt"}; forward+backward with remat-over-layers,
+  global-norm clip, AdamW, cosine LR.
+
+serve_step(params, cache, token, pos) -> (logits, cache)
+  ONE new token against a KV cache / SSM state of the workload's length —
+  exactly what the decode shapes lower.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import model as model_mod
+from ..optim import (AdamWConfig, adamw_init, adamw_update,
+                     clip_by_global_norm, cosine_schedule)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    max_grad_norm: float = 1.0
+    total_steps: int = 10_000
+    warmup_steps: int = 200
+    microbatch: int = 0        # 0 -> no gradient accumulation
+
+
+def init_train_state(key, cfg: ModelConfig, tcfg: TrainConfig):
+    params = model_mod.init_params(key, cfg)
+    return {"params": params, "opt": adamw_init(params, tcfg.optimizer)}
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
+                    moe_impl: Optional[str] = None) -> Callable:
+    moe_impl = moe_impl or cfg.moe_impl
+    def loss_fn(params, batch):
+        return model_mod.lm_loss(params, cfg, batch, moe_impl=moe_impl)
+
+    def train_step(state, batch):
+        params, opt = state["params"], state["opt"]
+        if tcfg.microbatch:
+            grads, metrics = _accumulated_grads(loss_fn, params, batch,
+                                                tcfg.microbatch)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            metrics = dict(metrics, loss=loss)
+        grads, gnorm = clip_by_global_norm(grads, tcfg.max_grad_norm)
+        lr_scale = cosine_schedule(opt["count"], tcfg.total_steps,
+                                   tcfg.warmup_steps)
+        params, opt = adamw_update(params, grads, opt, tcfg.optimizer,
+                                   lr_scale)
+        metrics = dict(metrics, grad_norm=gnorm, lr_scale=lr_scale)
+        return {"params": params, "opt": opt}, metrics
+
+    return train_step
+
+
+def _accumulated_grads(loss_fn, params, batch, n_micro: int):
+    """Gradient accumulation over n_micro microbatches (batch split on
+    the leading dim) via lax.scan — constant memory in n_micro."""
+    def split(x):
+        B = x.shape[0]
+        return x.reshape(n_micro, B // n_micro, *x.shape[1:])
+
+    micro = jax.tree.map(split, batch)
+
+    def body(acc, mb):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, mb)
+        acc_g, acc_l = acc
+        return (jax.tree.map(jnp.add, acc_g, grads), acc_l + loss), metrics
+
+    zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (g_sum, loss_sum), _ = jax.lax.scan(body, (zero, jnp.float32(0.0)),
+                                        micro)
+    grads = jax.tree.map(lambda g: (g / n_micro), g_sum)
+    return grads, {"loss": loss_sum / n_micro}
+
+
+def make_serve_step(cfg: ModelConfig,
+                    moe_impl: Optional[str] = None) -> Callable:
+    moe_impl = moe_impl or cfg.moe_impl
+    def serve_step(params, cache, token, pos, xattn_kv=None):
+        return model_mod.decode_step(params, cfg, token, pos, cache,
+                                     xattn_kv=xattn_kv, moe_impl=moe_impl)
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, moe_impl: Optional[str] = None):
+    moe_impl = moe_impl or cfg.moe_impl
+    def prefill_step(params, batch, cache):
+        return model_mod.prefill(params, cfg, batch, cache,
+                                 moe_impl=moe_impl)
+    return prefill_step

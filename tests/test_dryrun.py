@@ -1,0 +1,32 @@
+"""Dry-run integration: one (arch x shape) lowered + compiled on the
+512-placeholder-device production mesh, in a SUBPROCESS (the device
+count locks at first jax init, so it must not leak into this process).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,shape", [
+    ("gemma2-2b", "decode_32k"),          # fastest full-config compile
+    ("falcon-mamba-7b", "long_500k"),     # SSM long-context decode
+])
+def test_dryrun_pair_compiles(arch, shape, tmp_path):
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--out", str(tmp_path)],
+        capture_output=True, text=True, env=env, cwd=ROOT, timeout=540)
+    assert "DRY-RUN: ALL OK" in out.stdout, out.stdout + out.stderr
+    arts = list(tmp_path.glob("*.json"))
+    assert len(arts) == 1
+    d = json.loads(arts[0].read_text())
+    assert d["status"] == "OK"
+    assert d["n_devices"] == 256
+    assert d["t_compute_s"] >= 0 and d["t_memory_s"] > 0

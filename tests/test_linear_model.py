@@ -1,0 +1,95 @@
+"""Unit tests for per-task linear-model primitives."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import linear_model as lm
+from repro.core.losses import get_loss
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _data(n=50, p=12, seed=0, task="regression"):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    X = jax.random.normal(k1, (n, p)) / jnp.sqrt(p)
+    w = jax.random.normal(k2, (p,))
+    if task == "regression":
+        y = X @ w + 0.1 * jax.random.normal(k3, (n,))
+    else:
+        y = jnp.where(jax.random.uniform(k3, (n,)) <
+                      jax.nn.sigmoid(X @ w), 1.0, -1.0)
+    return X, y, w
+
+
+@pytest.mark.parametrize("name", ["squared", "logistic"])
+def test_task_grad_matches_autodiff(name):
+    loss = get_loss(name)
+    X, y, w = _data(task="regression" if name == "squared" else "clf")
+    auto = jax.grad(lambda w_: lm.task_loss(loss, w_, X, y, l2=0.01))(w)
+    np.testing.assert_allclose(lm.task_grad(loss, w, X, y, l2=0.01), auto,
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ["squared", "logistic"])
+def test_task_hessian_matches_autodiff(name):
+    loss = get_loss(name)
+    X, y, w = _data(n=30, p=8, task="regression" if name == "squared" else "c")
+    auto = jax.hessian(lambda w_: lm.task_loss(loss, w_, X, y, l2=0.01))(w)
+    np.testing.assert_allclose(lm.task_hessian(loss, w, X, y, l2=0.01), auto,
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_ridge_closed_form_is_stationary():
+    X, y, _ = _data()
+    loss = get_loss("squared")
+    w = lm.solve_ridge(X, y, l2=0.1)
+    g = lm.task_grad(loss, w, X, y, l2=0.1)
+    assert float(jnp.linalg.norm(g)) < 1e-5
+
+
+def test_erm_newton_logistic_is_stationary():
+    X, y, _ = _data(n=200, task="clf")
+    loss = get_loss("logistic")
+    w = lm.erm(loss, X, y, l2=0.05)
+    g = lm.task_grad(loss, w, X, y, l2=0.05)
+    assert float(jnp.linalg.norm(g)) < 1e-5
+
+
+def test_projected_erm_optimal_within_subspace():
+    """After the DGSP refit, U^T grad = 0 (the optimality condition used
+    in the proof of Prop 4.1)."""
+    X, y, _ = _data(n=80, p=16)
+    loss = get_loss("squared")
+    U = jnp.linalg.qr(jax.random.normal(KEY, (16, 3)))[0]
+    w, v = lm.projected_erm(loss, U, X, y)
+    g = lm.task_grad(loss, w, X, y)
+    assert float(jnp.linalg.norm(U.T @ g)) < 1e-5
+    np.testing.assert_allclose(w, U @ v, rtol=1e-6, atol=1e-6)
+
+
+def test_projected_erm_ignores_masked_zero_columns():
+    X, y, _ = _data(n=80, p=16)
+    loss = get_loss("squared")
+    U3 = jnp.linalg.qr(jax.random.normal(KEY, (16, 3)))[0]
+    Upad = jnp.concatenate([U3, jnp.zeros((16, 5))], axis=1)
+    w3, _ = lm.projected_erm(loss, U3, X, y)
+    wp, _ = lm.projected_erm(loss, Upad, X, y)
+    np.testing.assert_allclose(w3, wp, rtol=1e-4, atol=1e-5)
+
+
+def test_newton_direction_squared_points_to_ols():
+    """For squared loss, (X'X/n)^-1 grad = w - w_OLS exactly."""
+    X, y, _ = _data(n=100, p=10)
+    loss = get_loss("squared")
+    w = jax.random.normal(KEY, (10,))
+    d = lm.newton_direction(loss, w, X, y, damping=0.0)
+    w_ols = jnp.linalg.solve(X.T @ X, X.T @ y)
+    np.testing.assert_allclose(d, w - w_ols, rtol=1e-3, atol=1e-4)
+
+
+def test_project_l2_ball():
+    w = jnp.array([3.0, 4.0])
+    np.testing.assert_allclose(lm.project_l2_ball(w, 1.0),
+                               jnp.array([0.6, 0.8]), rtol=1e-6)
+    np.testing.assert_allclose(lm.project_l2_ball(w, 10.0), w)

@@ -1,0 +1,47 @@
+"""Unit tests for the loss layer: derivatives and smoothness constants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.losses import LOSSES, get_loss
+
+
+@pytest.mark.parametrize("name", sorted(LOSSES))
+def test_d1_matches_autodiff(name):
+    loss = get_loss(name)
+    a = jnp.linspace(-3.0, 3.0, 41)
+    y = jnp.where(jnp.arange(41) % 2 == 0, 1.0, -1.0)
+    auto = jax.vmap(jax.grad(lambda ai, yi: loss.value(ai, yi)))(a, y)
+    np.testing.assert_allclose(loss.d1(a, y), auto, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("name", sorted(LOSSES))
+def test_d2_matches_autodiff(name):
+    loss = get_loss(name)
+    a = jnp.linspace(-3.0, 3.0, 41)
+    y = jnp.where(jnp.arange(41) % 2 == 0, 1.0, -1.0)
+    auto = jax.vmap(jax.grad(jax.grad(lambda ai, yi: loss.value(ai, yi))))(a, y)
+    np.testing.assert_allclose(loss.d2(a, y), auto, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("name", sorted(LOSSES))
+def test_smoothness_constant_is_tight_bound(name):
+    """Assumption 2.1: |l'(a,c) - l'(b,c)| <= H|a-b| -> sup l'' <= H."""
+    loss = get_loss(name)
+    a = jnp.linspace(-10.0, 10.0, 2001)
+    for yv in (1.0, -1.0):
+        d2 = loss.d2(a, jnp.full_like(a, yv))
+        assert float(jnp.max(d2)) <= loss.smoothness + 1e-6
+
+
+def test_logistic_labels_are_plus_minus_one_convention():
+    loss = get_loss("logistic")
+    # correct-side margin -> small loss; wrong side -> large
+    assert float(loss.value(jnp.array(3.0), jnp.array(1.0))) < 0.05
+    assert float(loss.value(jnp.array(3.0), jnp.array(-1.0))) > 3.0
+
+
+def test_unknown_loss_raises():
+    with pytest.raises(ValueError):
+        get_loss("hinge")

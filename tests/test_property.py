@@ -1,0 +1,155 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import svd_ops
+from repro.core.linear_model import (project_l2_ball, projected_erm,
+                                     solve_ridge, task_grad)
+from repro.core.losses import get_loss
+
+jax.config.update("jax_platform_name", "cpu")
+
+dims = st.integers(min_value=2, max_value=24)
+seeds = st.integers(min_value=0, max_value=2 ** 16)
+
+
+def _randn(seed, shape):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape)
+
+
+@settings(max_examples=25, deadline=None)
+@given(p=dims, m=dims, seed=seeds)
+def test_sv_shrink_is_nonexpansive(p, m, seed):
+    """prox of a convex function is 1-Lipschitz (firm nonexpansiveness)."""
+    A = _randn(seed, (p, m))
+    B = _randn(seed + 1, (p, m))
+    tau = 0.3
+    d_out = float(jnp.linalg.norm(svd_ops.sv_shrink(A, tau)
+                                  - svd_ops.sv_shrink(B, tau)))
+    d_in = float(jnp.linalg.norm(A - B))
+    assert d_out <= d_in + 1e-4
+
+
+@settings(max_examples=25, deadline=None)
+@given(p=dims, m=dims, seed=seeds)
+def test_sv_shrink_reduces_nuclear_norm(p, m, seed):
+    A = _randn(seed, (p, m))
+    out = svd_ops.sv_shrink(A, 0.25)
+    assert float(svd_ops.nuclear_norm(out)) <= \
+        float(svd_ops.nuclear_norm(A)) + 1e-4
+
+
+@settings(max_examples=25, deadline=None)
+@given(p=dims, m=dims, seed=seeds, r=st.integers(1, 5))
+def test_svd_truncate_is_best_rank_r(p, m, seed, r):
+    """Eckart-Young: truncation error equals tail singular values."""
+    A = _randn(seed, (p, m))
+    out = svd_ops.svd_truncate(A, r)
+    S = jnp.linalg.svd(A, compute_uv=False)
+    err = float(jnp.linalg.norm(A - out)) ** 2
+    tail = float(jnp.sum(S[r:] ** 2))
+    np.testing.assert_allclose(err, tail, rtol=1e-3, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(p=dims, seed=seeds, radius=st.floats(0.1, 10.0))
+def test_l2_projection_invariants(p, seed, radius):
+    w = _randn(seed, (p,)) * 5.0
+    out = project_l2_ball(w, radius)
+    assert float(jnp.linalg.norm(out)) <= radius * (1 + 1e-5)
+    # idempotent
+    out2 = project_l2_ball(out, radius)
+    np.testing.assert_allclose(out, out2, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=seeds, n=st.integers(10, 60), p=st.integers(2, 12),
+       l2=st.floats(1e-4, 1.0))
+def test_ridge_stationarity(seed, n, p, l2):
+    X = _randn(seed, (n, p))
+    y = _randn(seed + 1, (n,))
+    w = solve_ridge(X, y, l2)
+    g = task_grad(get_loss("squared"), w, X, y, l2)
+    assert float(jnp.linalg.norm(g)) < 1e-3
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=seeds, n=st.integers(20, 60), p=st.integers(4, 16),
+       k=st.integers(1, 4))
+def test_projected_refit_beats_any_other_point_in_subspace(seed, n, p, k):
+    """v* = argmin in subspace: random perturbations inside the subspace
+    cannot reduce the loss."""
+    loss = get_loss("squared")
+    X = _randn(seed, (n, p))
+    y = _randn(seed + 1, (n,))
+    U = jnp.linalg.qr(_randn(seed + 2, (p, k)))[0]
+    w, v = projected_erm(loss, U, X, y)
+    base = float(jnp.mean(loss.value(X @ w, y)))
+    for i in range(3):
+        dv = 0.1 * _randn(seed + 3 + i, (k,))
+        other = float(jnp.mean(loss.value(X @ (U @ (v + dv)), y)))
+        assert base <= other + 1e-5
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=seeds, p=st.integers(4, 20), m=st.integers(3, 10))
+def test_leading_sv_dominates_random_directions(seed, p, m):
+    """u'Gv for the power-iteration pair >= random unit pairs (top
+    singular value is the max of the bilinear form)."""
+    G = _randn(seed, (p, m))
+    u, s, v = svd_ops.leading_sv(G, iters=100)
+    form = float(u @ G @ v)
+    for i in range(5):
+        ru = _randn(seed + i + 1, (p,))
+        rv = _randn(seed + i + 50, (m,))
+        ru = ru / jnp.linalg.norm(ru)
+        rv = rv / jnp.linalg.norm(rv)
+        assert form >= float(ru @ G @ rv) - 1e-4
+
+
+# ---------------------------------------------------------------------------
+# MoE routing invariants (hypothesis sweeps over shapes/ranks)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(S=st.sampled_from([16, 32, 48]), E=st.sampled_from([4, 8]),
+       k=st.integers(min_value=1, max_value=2), seed=seeds)
+def test_moe_sorted_equals_dispatch_property(S, E, k, seed):
+    """Sort-based routing == GShard einsum routing for any (S, E, k):
+    same capacity slots, same drops, same gates."""
+    from repro.configs.base import ModelConfig
+    from repro.models import moe as moe_mod
+    cfg = ModelConfig(n_experts=E, n_experts_per_token=k, d_model=16,
+                      moe_d_ff=32, capacity_factor=1.25, dtype="float32",
+                      act="silu", glu=True, moe_group=0)
+    p = moe_mod.init_moe(jax.random.PRNGKey(seed), cfg)
+    x = _randn(seed + 1, (2, S, 16))
+    yd, _ = moe_mod.moe_dispatch(p, x, cfg)
+    ys, _ = moe_mod.moe_sorted(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(yd), np.asarray(ys),
+                               atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(S=st.sampled_from([32, 64]), chunk=st.sampled_from([8, 16, 32]),
+       I=st.sampled_from([8, 16]), N=st.sampled_from([4, 8]), seed=seeds)
+def test_chunked_ssd_equals_full_scan_property(S, chunk, I, N, seed):
+    """Fused chunked SSD == one-shot associative scan for any chunking."""
+    from repro.models.ssm import _assoc_scan, _chunked_ssd1
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    xs = jax.random.normal(ks[0], (2, S, I))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (2, S, I)))
+    Bc = jax.random.normal(ks[2], (2, S, N))
+    Cc = jax.random.normal(ks[3], (2, S, N))
+    A = -jnp.exp(jax.random.normal(ks[4], (I, N)))
+    a = jnp.exp(dt[..., None] * A[None, None])
+    bu = (dt * xs)[..., None] * Bc[..., None, :]
+    _, h = _assoc_scan(a, bu)
+    y_ref = jnp.einsum("bsin,bsn->bsi", h, Cc)
+    y, hf = _chunked_ssd1(xs, dt, Bc, Cc, A, chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(h[:, -1]),
+                               atol=1e-4, rtol=1e-4)

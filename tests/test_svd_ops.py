@@ -1,0 +1,82 @@
+"""Unit tests for master-side SVD primitives."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import svd_ops
+
+
+def _mat(p=20, m=10, seed=0, rank=None):
+    k = jax.random.PRNGKey(seed)
+    M = jax.random.normal(k, (p, m))
+    if rank is not None:
+        U, S, Vt = jnp.linalg.svd(M, full_matrices=False)
+        M = (U[:, :rank] * S[None, :rank]) @ Vt[:rank, :]
+    return M
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_leading_sv_matches_full_svd(seed):
+    M = _mat(seed=seed)
+    u, s, v = svd_ops.leading_sv(M, iters=200)
+    U, S, Vt = jnp.linalg.svd(M, full_matrices=False)
+    np.testing.assert_allclose(float(s), float(S[0]), rtol=1e-4)
+    # direction up to sign
+    assert abs(float(u @ U[:, 0])) > 1 - 1e-4
+    assert abs(float(v @ Vt[0, :])) > 1 - 1e-4
+
+
+def test_leading_sv_unit_norm_and_deterministic():
+    M = _mat(seed=3)
+    u1, s1, v1 = svd_ops.leading_sv(M)
+    u2, s2, v2 = svd_ops.leading_sv(M)
+    np.testing.assert_array_equal(u1, u2)
+    np.testing.assert_allclose(float(jnp.linalg.norm(u1)), 1.0, rtol=1e-5)
+    np.testing.assert_allclose(float(jnp.linalg.norm(v1)), 1.0, rtol=1e-5)
+
+
+def test_sv_shrink_matches_definition():
+    M = _mat()
+    tau = 0.7
+    out = svd_ops.sv_shrink(M, tau)
+    U, S, Vt = jnp.linalg.svd(M, full_matrices=False)
+    ref = (U * jnp.maximum(S - tau, 0)[None, :]) @ Vt
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
+
+
+def test_sv_shrink_large_tau_gives_zero():
+    M = _mat()
+    out = svd_ops.sv_shrink(M, 1e6)
+    np.testing.assert_allclose(out, jnp.zeros_like(M), atol=1e-5)
+
+
+def test_svd_truncate_rank():
+    M = _mat(rank=7)
+    out = svd_ops.svd_truncate(M, 3)
+    assert int(jnp.linalg.matrix_rank(out, tol=1e-4)) == 3
+    # truncating at >= true rank reproduces M
+    np.testing.assert_allclose(svd_ops.svd_truncate(M, 7), M,
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_project_nuclear_ball():
+    M = _mat()
+    r = 0.5 * float(svd_ops.nuclear_norm(M))
+    out = svd_ops.project_nuclear_ball(M, r)
+    assert float(svd_ops.nuclear_norm(out)) <= r * (1 + 1e-4)
+    # inside the ball -> unchanged
+    out2 = svd_ops.project_nuclear_ball(M, 10 * float(svd_ops.nuclear_norm(M)))
+    np.testing.assert_allclose(out2, M, rtol=1e-5, atol=1e-6)
+
+
+def test_gram_schmidt_append_orthonormal():
+    k = jax.random.PRNGKey(1)
+    U = jnp.zeros((10, 4))
+    base = jnp.linalg.qr(jax.random.normal(k, (10, 2)))[0]
+    U = U.at[:, :2].set(base)
+    mask = jnp.array([1.0, 1.0, 0.0, 0.0])
+    u_new = jax.random.normal(jax.random.PRNGKey(2), (10,))
+    u = svd_ops.gram_schmidt_append(U, u_new, mask)
+    np.testing.assert_allclose(float(jnp.linalg.norm(u)), 1.0, rtol=1e-5)
+    np.testing.assert_allclose(base.T @ u, jnp.zeros(2), atol=1e-5)
