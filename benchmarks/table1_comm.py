@@ -12,7 +12,8 @@ from __future__ import annotations
 
 import jax
 
-from repro.core.methods import MTLProblem, get_solver
+import repro
+from repro.core.methods import MTLProblem
 from repro.data.synthetic import SimSpec, generate
 
 from .common import emit, timed, write_csv
@@ -42,7 +43,7 @@ def main(out_dir: str = "results/bench") -> None:
 
     rows = []
     for name, kw, theory, master in ROWS:
-        res, secs = timed(get_solver(name), prob, **kw)
+        res, secs = timed(repro.solve, prob, method=name, **kw)
         ctx = {"rounds": kw.get("rounds", 1), "n": spec.n, "m": spec.m,
                "p": spec.p}
         meas_vec = res.comm.vectors_per_machine() \

@@ -6,17 +6,20 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 mesh — the paper's master/worker protocol as shard_map collectives
 (workers->master = all_gather; master = replicated leading-SV).
 
-Runs DGSP and DNSP on 8 simulated machines, checks the result matches
-the single-process simulation bit-for-float, and prints the measured
-collective traffic against the paper's Table-1 accounting.
+Every registered solver runs on the mesh through the same front door as
+the simulation: ``repro.solve(prob, method=..., backend="mesh")``. This
+example runs a representative set on 8 simulated machines, checks each
+result matches the single-process simulation to float tolerance, and
+prints the measured collective traffic against the paper's Table-1
+accounting.
 
   python examples/distributed_mtl.py
 """
 import jax
 import numpy as np
 
-from repro.core.distributed import dgsp_distributed, task_mesh
-from repro.core.methods import MTLProblem, get_solver
+import repro
+from repro.core.methods import MTLProblem
 from repro.data.synthetic import SimSpec, excess_risk_regression, generate
 
 
@@ -24,25 +27,30 @@ def main():
     spec = SimSpec(p=60, m=16, r=4, n=80)
     Xs, ys, Wstar, Sigma = generate(jax.random.PRNGKey(0), spec)
     prob = MTLProblem.make(Xs, ys, "squared", A=2.0, r=4)
+    from repro.runtime import task_mesh
     mesh = task_mesh()
     print(f"mesh: {mesh.shape} — {spec.m} tasks, "
           f"{spec.m // mesh.size} per machine")
 
-    for name, kw, sim_kw in [
-        ("dgsp", dict(rounds=5), dict(rounds=5)),
-        ("dnsp", dict(rounds=5, newton=True, l2=1e-3, damping=0.5),
-         dict(rounds=5, damping=0.5, l2=1e-3)),
+    for name, kw in [
+        ("dgsp", dict(rounds=5)),
+        ("dnsp", dict(rounds=5, damping=0.5, l2=1e-3)),
+        ("proxgd", dict(rounds=30, lam=0.02, init="zeros")),
+        ("admm", dict(rounds=30, lam=0.02, rho=0.5)),
+        ("svd_trunc", {}),
     ]:
-        dres = dgsp_distributed(prob, mesh=mesh, **kw)
-        sres = get_solver(name)(prob, **sim_kw)
+        dres = repro.solve(prob, method=name, backend="mesh", mesh=mesh, **kw)
+        sres = repro.solve(prob, method=name, backend="sim", **kw)
         diff = float(np.max(np.abs(np.asarray(dres.W - sres.W))))
         e = float(excess_risk_regression(dres.W, Wstar, Sigma))
-        print(f"{name}: excess={e:.5f}  |dist - sim|_max={diff:.2e}  "
-              f"collective floats/chip={dres.collective_floats_per_chip} "
-              f"(= rounds x tasks/chip x p = "
-              f"{kw['rounds']}x{spec.m // mesh.size}x{spec.p})")
+        coll = dres.extras["collective_floats_per_chip"]
+        ledger = dres.comm.floats_by_direction("worker->master") \
+            * (spec.m // mesh.size)
+        print(f"{name:<10} excess={e:.5f}  |mesh - sim|_max={diff:.2e}  "
+              f"collective floats/chip={coll} (ledger says {ledger})")
         assert diff < 5e-4
-    print("distributed == simulated; traffic matches the paper ledger.")
+        assert coll == ledger
+    print("mesh == simulated; traffic matches the paper ledger.")
 
 
 if __name__ == "__main__":

@@ -2,14 +2,19 @@
 
 Generates the paper's simulation (m tasks on m machines, predictors in a
 shared rank-r subspace), runs the baselines and the proposed greedy
-subspace-pursuit solvers, and prints excess risk + the communication
-ledger (the paper's own unit of account: p-dim vectors per machine).
+subspace-pursuit solvers through the ``repro.solve`` front door, and
+prints excess risk + the communication ledger (the paper's own unit of
+account: p-dim vectors per machine).
+
+Every method below also runs on a real device mesh by adding
+``backend="mesh"`` — see examples/distributed_mtl.py.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 
-from repro.core.methods import MTLProblem, get_solver
+import repro
+from repro.core.methods import MTLProblem
 from repro.data.synthetic import SimSpec, excess_risk_regression, generate
 
 
@@ -31,7 +36,7 @@ def main():
         ("dgsp", {"rounds": 8}),
         ("dnsp", {"rounds": 8, "damping": 0.5, "l2": 1e-3}),
     ]:
-        res = get_solver(name)(prob, **kw)
+        res = repro.solve(prob, method=name, **kw)
         # validation-selected round (the paper's protocol)
         errs = [float(excess_risk_regression(W, Wstar, Sigma))
                 for W in res.iterates] or \

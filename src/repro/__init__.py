@@ -1,0 +1,22 @@
+"""Reproduction of "Distributed Multi-Task Learning with Shared
+Representation" (Wang, Kolar, Srebro 2016) as a multi-backend system.
+
+Front door::
+
+    import repro
+    res = repro.solve(prob, method="dgsp", backend="mesh", rounds=8)
+
+Sub-packages are imported lazily so ``import repro`` stays cheap.
+"""
+import importlib
+
+__all__ = ["solve", "core", "runtime", "data"]
+
+
+def __getattr__(name):
+    if name == "solve":
+        from .api import solve
+        return solve
+    if name in ("core", "runtime", "data", "api"):
+        return importlib.import_module("." + name, __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

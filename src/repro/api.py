@@ -1,0 +1,51 @@
+"""The front door: ``repro.solve(prob, method=..., backend="sim"|"mesh")``.
+
+One call signature for every solver in the registry on every execution
+backend, returning an :class:`~repro.core.methods.base.MTLResult`
+uniformly (predictors, per-round iterates, communication ledger).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from .runtime.base import ProtocolRuntime, make_runtime
+
+
+def solve(prob, method: str = "dgsp", backend: str = "sim", *,
+          mesh=None, axis: str = "tasks", rounds: Optional[int] = None,
+          runtime: Optional[ProtocolRuntime] = None, **hp):
+    """Run one registered solver on one backend.
+
+    Parameters
+    ----------
+    prob: MTLProblem — the per-task datasets + structural constants.
+    method: registry name (``repro.core.solver_names()``).
+    backend: "sim" (vmap over the task axis, single process) or "mesh"
+        (shard_map over a real "tasks" mesh axis, replicated master).
+    mesh / axis: mesh backend only — the device mesh (defaults to all
+        devices) and the task axis name.
+    rounds: communication rounds, forwarded when given (one-shot
+        baselines take none).
+    runtime: pass an explicit ProtocolRuntime instead of backend/mesh.
+    **hp: solver hyper-parameters (lam, eta, damping, ...).
+
+    Returns the solver's MTLResult; ``result.comm`` is the protocol
+    ledger and ``result.extras`` carries ``backend`` plus the measured
+    ``collective_floats_per_chip`` — worker->master protocol floats the
+    chip's simulated machines fed into collectives (the all-gather
+    payload; psum contributions counted before the chip's local
+    pre-reduction). Equals the ledger's worker->master floats x
+    tasks-per-chip by construction; 0 under sim where no collective
+    runs.
+    """
+    from .core.methods import get_solver
+
+    if runtime is None:
+        runtime = make_runtime(backend, prob, mesh=mesh, axis=axis)
+    if rounds is not None:
+        hp["rounds"] = rounds
+    res = get_solver(method)(prob, runtime=runtime, **hp)
+    res.extras["backend"] = runtime.name
+    res.extras["collective_floats_per_chip"] = \
+        runtime.collective_floats_per_chip
+    return res

@@ -1,4 +1,15 @@
 """Core: the paper's contribution — distributed multi-task learning with a
 shared low-rank representation (Wang, Kolar, Srebro 2016)."""
 from . import losses, linear_model, svd_ops, comm  # noqa: F401
+from .comm import CommLog  # noqa: F401
 from .methods import MTLProblem, MTLResult, get_solver, solver_names  # noqa: F401
+
+
+def __getattr__(name):
+    # Lazy to avoid a circular import at package-init time: the front
+    # door lives one level up (repro.api) but is the natural thing to
+    # reach for next to MTLProblem/get_solver.
+    if name == "solve":
+        from ..api import solve
+        return solve
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

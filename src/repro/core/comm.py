@@ -42,6 +42,13 @@ class CommLog:
     def floats_per_machine(self) -> int:
         return sum(e.floats for e in self.events)
 
+    def floats_by_direction(self, direction: str) -> int:
+        """Ledger floats per machine in one direction. The mesh backend's
+        measured all-gather traffic per chip must equal the
+        "worker->master" value times tasks-per-chip — both derive from
+        the same runtime primitive calls (see repro.runtime)."""
+        return sum(e.floats for e in self.events if e.direction == direction)
+
     def vectors_per_machine(self) -> int:
         return sum(e.vectors for e in self.events)
 

@@ -1,57 +1,24 @@
-"""shard_map implementations of the paper's master/worker protocol.
+"""Compatibility shims for the old hand-written shard_map entry points.
 
-The simulated cluster in ``methods/`` vmaps over the task axis; here the
-task axis is a REAL mesh axis ("tasks") and the paper's messages become
-collectives:
-
-  workers send columns to master   ->  lax.all_gather over "tasks"
-  master broadcasts a vector       ->  (free) every chip already holds the
-                                       gathered matrix and runs the master
-                                       computation redundantly — the
-                                       "replicated master" pattern; on a TPU
-                                       torus this replaces a hub hop with
-                                       one all-gather, the communication-
-                                       optimal choice (see DESIGN.md §4).
-
-Traffic per round per chip is exactly one p-vector into the all-gather
-(matching the paper's "worker->master: 1 vector") plus the gathered
-(m-1)p bytes received — identical in volume to the star topology's
-master-side fan-in, now spread over the torus links.
-
-Supported methods: dgsp, dnsp, proxgd (the representative trio:
-greedy-gradient / greedy-newton / convex-prox). The heavy shared logic
-(projected refits, leading SV) is reused from the simulated modules, so
-both paths are numerically identical (same ops, same order).
+The real implementation lives in ``repro.runtime`` (one protocol API,
+``SimRuntime``/``MeshRuntime`` backends) and the solvers in
+``core/methods`` — every solver now runs on a real "tasks" mesh axis via
+``repro.solve(prob, method=..., backend="mesh")``.  This module keeps
+the historical ``dgsp_distributed`` / ``proxgd_distributed`` signatures
+as thin wrappers over that front door; no round-body logic is duplicated
+here (see DESIGN.md §4 for the replicated-master pattern the mesh
+backend implements).
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Tuple
 
-import jax
 import jax.numpy as jnp
-from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from . import linear_model as lm
-from .losses import Loss
-from .svd_ops import gram_schmidt_append, leading_sv, sv_shrink
+from ..api import solve
+from ..runtime.mesh import MeshRuntime, task_mesh  # noqa: F401 (re-export)
 from .methods.base import MTLProblem
-
-
-def task_mesh(n_devices: int | None = None, axis: str = "tasks") -> Mesh:
-    devs = jax.devices() if n_devices is None else jax.devices()[:n_devices]
-    return jax.make_mesh((len(devs),), (axis,), devices=devs)
-
-
-def _check(prob: MTLProblem, mesh: Mesh, axis: str) -> int:
-    ntask, ndev = prob.m, mesh.shape[axis]
-    if ntask % ndev:
-        raise ValueError(f"m={ntask} tasks must divide {ndev} devices on "
-                         f"axis {axis!r} (each chip simulates m/devices "
-                         f"machines)")
-    return ntask // ndev
 
 
 @dataclasses.dataclass
@@ -66,94 +33,25 @@ def dgsp_distributed(prob: MTLProblem, rounds: int, mesh: Mesh,
                      axis: str = "tasks", l2: float = 0.0,
                      sv_iters: int = 60, newton: bool = False,
                      damping: float = 1e-4) -> DistributedResult:
-    """DGSP/DNSP with the task axis on a device mesh."""
-    per_chip = _check(prob, mesh, axis)
-    loss, m, p = prob.loss, prob.m, prob.p
-    max_k = rounds
-    l2 = l2 if l2 else prob.l2
-
-    def round_body(k, carry, Xs, ys):
-        # Xs: (per_chip, n, p) local shard; U/mask/W replicated.
-        U, mask, W_local = carry
-
-        def msg(w, X, y):
-            if newton:
-                return lm.newton_direction(loss, w, X, y, prob.l2, damping)
-            return lm.task_grad(loss, w, X, y, prob.l2) / m
-
-        G_local = jax.vmap(msg, in_axes=(1, 0, 0), out_axes=1)(
-            W_local, Xs, ys)                       # (p, per_chip)
-        # workers -> master: all-gather the gradient columns
-        G = jax.lax.all_gather(G_local, axis, axis=1, tiled=True)  # (p, m)
-        u, _, _ = leading_sv(G, iters=sv_iters)    # replicated master
-        if newton:
-            u = gram_schmidt_append(U, u, mask)
-        U = U.at[:, k].set(u)
-        mask = mask.at[k].set(1.0)
-        Um = U * mask[None, :]
-
-        def refit(X, y):
-            w, _ = lm.projected_erm(loss, Um, X, y, l2)
-            return w
-
-        W_local = jax.vmap(refit, in_axes=(0, 0), out_axes=1)(Xs, ys)
-        return (U, mask, W_local)
-
-    @partial(shard_map, mesh=mesh,
-             in_specs=(P(axis), P(axis)),
-             out_specs=(P(None), P(None), P(None, axis)),
-             check_rep=False)  # replicated-master: U/mask identical on all
-                               # chips by construction (deterministic ops on
-                               # all-gathered G); disable the conservative
-                               # varying-axis check
-    def run(Xs, ys):
-        U0 = jnp.zeros((p, max_k), Xs.dtype)
-        mask0 = jnp.zeros((max_k,), Xs.dtype)
-        W0 = jnp.zeros((p, per_chip), Xs.dtype)
-        U, mask, W_local = jax.lax.fori_loop(
-            0, rounds, lambda k, c: round_body(k, c, Xs, ys),
-            (U0, mask0, W0))
-        return U, mask, W_local
-
-    U, mask, W = jax.jit(run)(prob.Xs, prob.ys)
-    # traffic: each chip contributes per_chip p-vectors per all-gather round
-    floats = rounds * per_chip * p
-    return DistributedResult(W=W, U=U * mask[None, :], rounds=rounds,
-                             collective_floats_per_chip=floats)
+    """DGSP/DNSP with the task axis on a device mesh (compat shim)."""
+    kw = dict(rounds=rounds, sv_iters=sv_iters, l2=l2)
+    if newton:
+        kw["damping"] = damping
+    res = solve(prob, method="dnsp" if newton else "dgsp", backend="mesh",
+                mesh=mesh, axis=axis, **kw)
+    U = res.extras["U"] * res.extras["mask"][None, :]
+    return DistributedResult(
+        W=res.W, U=U, rounds=rounds,
+        collective_floats_per_chip=res.extras["collective_floats_per_chip"])
 
 
 def proxgd_distributed(prob: MTLProblem, rounds: int, mesh: Mesh,
                        axis: str = "tasks", lam: float = 1e-3,
                        eta: float | None = None) -> DistributedResult:
-    """Distributed proximal gradient: gather gradient matrix, replicated
-    SV-shrinkage master step, keep W replicated (each chip uses its own
-    columns)."""
-    from .methods.convex import data_smoothness
-    _check(prob, mesh, axis)
-    loss, m, p = prob.loss, prob.m, prob.p
-    if eta is None:
-        eta = 1.0 / data_smoothness(prob)
-
-    def round_body(_, W, Xs, ys):
-        def g(w, X, y):
-            return lm.task_grad(loss, w, X, y, prob.l2) / m
-        # local columns of W: every chip holds full W (replicated), picks
-        # its shard of tasks by index arithmetic via dynamic slice.
-        idx = jax.lax.axis_index(axis)
-        per = m // jax.lax.axis_size(axis)
-        W_local = jax.lax.dynamic_slice_in_dim(W, idx * per, per, axis=1)
-        G_local = jax.vmap(g, in_axes=(1, 0, 0), out_axes=1)(W_local, Xs, ys)
-        G = jax.lax.all_gather(G_local, axis, axis=1, tiled=True)
-        return sv_shrink(W - eta * m * G, eta * m * lam)
-
-    @partial(shard_map, mesh=mesh, in_specs=(P(axis), P(axis)),
-             out_specs=P(None), check_rep=False)
-    def run(Xs, ys):
-        W0 = jnp.zeros((p, m), Xs.dtype)
-        return jax.lax.fori_loop(
-            0, rounds, lambda t, W: round_body(t, W, Xs, ys), W0)
-
-    W = jax.jit(run)(prob.Xs, prob.ys)
-    per_chip = m // mesh.shape[axis]
-    return DistributedResult(W=W, U=None, rounds=rounds,
-                             collective_floats_per_chip=rounds * per_chip * p)
+    """Distributed proximal gradient (compat shim; starts from W = 0 as
+    the historical implementation did)."""
+    res = solve(prob, method="proxgd", backend="mesh", mesh=mesh, axis=axis,
+                rounds=rounds, lam=lam, eta=eta, init="zeros")
+    return DistributedResult(
+        W=res.W, U=None, rounds=rounds,
+        collective_floats_per_chip=res.extras["collective_floats_per_chip"])

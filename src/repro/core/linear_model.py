@@ -1,9 +1,10 @@
 """Per-task linear-model primitives.
 
 Everything here is written for a SINGLE task (X: (n, p), y: (n,)) and is
-lifted over the task axis with ``jax.vmap`` (simulated cluster) or
-``shard_map`` (distributed cluster) by the callers in ``methods/`` and
-``distributed.py``.
+lifted over the task axis by the solvers in ``methods/`` through
+``runtime.worker_map`` — a vmap over all m tasks on the simulated
+backend, a vmap over the per-chip task shard under ``shard_map`` on the
+mesh backend.
 
 The paper's loss normalization: the global empirical objective is
     L_n(W) = (1/m) sum_j L_nj(w_j),   L_nj(w) = (1/n) sum_i l(<w, x_ji>, y_ji)

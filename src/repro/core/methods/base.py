@@ -65,6 +65,30 @@ class MTLResult:
         self.iterates.append(W)
 
 
+def iterate_recorder(res: "MTLResult", rounds: int, record_every: int,
+                     key: str = "W"):
+    """on_round callback snapshotting one state leaf into the result
+    every ``record_every`` rounds (and always the final round) — the
+    shared cadence for every iterative solver's Fig 1-3 curves."""
+    def on_round(t, state):
+        if (t + 1) % record_every == 0 or t == rounds - 1:
+            res.record(t + 1, state[key])
+    return on_round
+
+
+def default_runtime(prob: MTLProblem, runtime=None):
+    """The runtime a solver executes on; defaults to the simulated cluster.
+
+    Every registered solver takes ``runtime=None`` and resolves it here,
+    so calling a solver directly keeps today's vmap semantics while
+    ``repro.solve(..., backend="mesh")`` hands in a MeshRuntime.
+    """
+    if runtime is not None:
+        return runtime
+    from ...runtime.sim import SimRuntime
+    return SimRuntime(prob)
+
+
 SolverFn = Callable[..., MTLResult]
 _REGISTRY: Dict[str, SolverFn] = {}
 

@@ -2,111 +2,136 @@
 
 These are the brackets the iterative methods are measured against
 (Propositions 2.2 / 2.5 and the §5 "One-shot SVD truncation" discussion).
+Like the iterative solvers they are written against the runtime
+primitives, so even the one-shot exchanges (ship-local-solution /
+ship-all-data) run as real collectives on the mesh backend.
 """
 from __future__ import annotations
-
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from .. import linear_model as lm
-from ..comm import CommLog
 from ..svd_ops import sv_shrink, svd_truncate, nuclear_norm
-from .base import MTLProblem, MTLResult, register
+from .base import MTLProblem, MTLResult, default_runtime, register
+
+
+def _local_fit(prob: MTLProblem, l2: float):
+    """Per-task constrained ERM (Prop 2.2): solve, then project to the
+    A-ball. The atomic worker computation shared by Local / SVD-trunc."""
+    def one(X, y):
+        return lm.project_l2_ball(lm.erm(prob.loss, X, y, l2), prob.A)
+    return one
 
 
 def _local_W(prob: MTLProblem, l2: float) -> jnp.ndarray:
-    solve = jax.vmap(lambda X, y: lm.erm(prob.loss, X, y, l2), in_axes=(0, 0))
-    W = solve(prob.Xs, prob.ys).T                       # (p, m)
-    # Norm constraint ||w_j|| <= A (Prop 2.2 defines Local via constrained ERM)
-    W = jax.vmap(lambda w: lm.project_l2_ball(w, prob.A), in_axes=1,
-                 out_axes=1)(W)
-    return W
+    """Host-side Local solution (used as an init by the convex solvers)."""
+    one = _local_fit(prob, l2)
+    return jax.vmap(one, in_axes=(0, 0), out_axes=1)(prob.Xs, prob.ys)
 
 
 @register("local")
-def local(prob: MTLProblem, l2: float = 1e-6, **_) -> MTLResult:
+def local(prob: MTLProblem, l2: float = 1e-6, runtime=None, **_) -> MTLResult:
     """Per-machine ERM; zero communication."""
-    W = _local_W(prob, max(l2, prob.l2))
-    comm = CommLog(m=prob.m)
-    res = MTLResult("local", W, comm)
-    res.record(0, W)
+    rt = default_runtime(prob, runtime)
+    one = _local_fit(prob, max(l2, prob.l2))
+
+    def body(k, state, Xs, ys):
+        return {"W": rt.worker_map(one, in_axes=(0, 0), out_axes=1)(Xs, ys)}
+
+    state = rt.one_shot(body, {"W": jnp.zeros((prob.p, prob.m),
+                                              prob.Xs.dtype)},
+                        sharded=("W",), count_round=False)
+    res = MTLResult("local", state["W"], rt.comm)
+    res.record(0, state["W"])
     return res
 
 
 @register("svd_trunc")
 def svd_trunc(prob: MTLProblem, l2: float = 1e-6, rank: int | None = None,
-              **_) -> MTLResult:
+              runtime=None, **_) -> MTLResult:
     """One-shot SVD truncation of the Local solution (§5).
 
     Each worker ships its local w_hat (1 vector of dim p) to the master,
     which truncates to rank r and ships each column back (1 vector).
     """
-    W_local = _local_W(prob, max(l2, prob.l2))
+    rt = default_runtime(prob, runtime)
+    one = _local_fit(prob, max(l2, prob.l2))
     r = int(rank if rank is not None else prob.r)
-    W = svd_truncate(W_local, r)
-    comm = CommLog(m=prob.m)
-    comm.begin_round()
-    comm.send("worker->master", 1, prob.p, "local solution")
-    comm.send("master->worker", 1, prob.p, "truncated column")
-    res = MTLResult("svd_trunc", W, comm)
-    res.record(1, W)
+
+    def body(k, state, Xs, ys):
+        W_local = rt.worker_map(one, in_axes=(0, 0), out_axes=1)(Xs, ys)
+        W_full = rt.gather_columns(W_local, "local solution")
+        W_t = svd_truncate(W_full, r)
+        return {"W": rt.broadcast(W_t, "truncated column")}
+
+    state = rt.one_shot(body, {"W": jnp.zeros((prob.p, prob.m),
+                                              prob.Xs.dtype)})
+    res = MTLResult("svd_trunc", state["W"], rt.comm)
+    res.record(1, state["W"])
     return res
 
 
 @register("bestrep")
-def bestrep(prob: MTLProblem, U_star: jnp.ndarray = None, **_) -> MTLResult:
+def bestrep(prob: MTLProblem, U_star: jnp.ndarray = None, runtime=None,
+            **_) -> MTLResult:
     """Oracle: fit in the TRUE subspace U* (not realizable in practice)."""
     if U_star is None:
         raise ValueError("bestrep needs the oracle U_star")
-    refit = jax.vmap(
-        lambda X, y: lm.projected_erm(prob.loss, U_star, X, y, prob.l2)[0],
-        in_axes=(0, 0))
-    W = refit(prob.Xs, prob.ys).T
-    comm = CommLog(m=prob.m)
-    res = MTLResult("bestrep", W, comm)
-    res.record(0, W)
+    rt = default_runtime(prob, runtime)
+
+    def body(k, state, Xs, ys):
+        def refit(X, y):
+            return lm.projected_erm(prob.loss, U_star, X, y, prob.l2)[0]
+        return {"W": rt.worker_map(refit, in_axes=(0, 0), out_axes=1)(Xs, ys)}
+
+    state = rt.one_shot(body, {"W": jnp.zeros((prob.p, prob.m),
+                                              prob.Xs.dtype)},
+                        sharded=("W",), count_round=False)
+    res = MTLResult("bestrep", state["W"], rt.comm)
+    res.record(0, state["W"])
     return res
 
 
 @register("centralize")
 def centralize(prob: MTLProblem, lam: float = None, iters: int = 400,
-               tol: float = 1e-9, **_) -> MTLResult:
+               tol: float = 1e-9, runtime=None, **_) -> MTLResult:
     """Nuclear-norm regularized ERM with all data on the master (eq. 2.3).
 
     Solved to optimality with FISTA (accelerated prox gradient) — the
     master has all the data so rounds are free; the communication charge
-    is the one-time shipment of the n local samples per machine.
+    is the one-time shipment of the n local samples per machine (the
+    design row and its label travel together as n (p+1)-vectors).
     """
-    loss, Xs, ys, m = prob.loss, prob.Xs, prob.ys, prob.m
+    rt = default_runtime(prob, runtime)
+    loss, m, p = prob.loss, prob.m, prob.p
     if lam is None:
         # heuristic in the scale of the gradient spectral norm
         lam = 0.1 / jnp.sqrt(prob.n * m)
     from .convex import data_smoothness
     eta = 1.0 / data_smoothness(prob)
 
-    @partial(jax.jit, static_argnames=("iters_",))
-    def fista(Xs_, ys_, iters_):
+    def body(k, state, Xs, ys):
+        Xy = jnp.concatenate([Xs, ys[..., None]], axis=-1)   # (L, n, p+1)
+        Xy = rt.gather_tasks(Xy, "ship all local data")       # (m, n, p+1)
+        Xs_full, ys_full = Xy[..., :-1], Xy[..., -1]
+
         def step(carry, _):
             W, Z, t = carry
-            G = lm.all_task_grads(loss, Z, Xs_, ys_, prob.l2)
+            G = lm.all_task_grads(loss, Z, Xs_full, ys_full, prob.l2)
             W_new = sv_shrink(Z - eta * m * G, eta * m * lam)
             t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
             Z_new = W_new + ((t - 1.0) / t_new) * (W_new - W)
             return (W_new, Z_new, t_new), None
 
-        W0 = jnp.zeros((prob.p, m), Xs_.dtype)
-        (W, _, _), _ = jax.lax.scan(step, (W0, W0, jnp.array(1.0, Xs_.dtype)),
-                                    None, length=iters_)
-        return W
+        W0 = jnp.zeros((p, m), Xs.dtype)
+        (W, _, _), _ = jax.lax.scan(step, (W0, W0, jnp.array(1.0, Xs.dtype)),
+                                    None, length=iters)
+        return {"W": rt.broadcast(W, "final predictor")}
 
-    W = fista(Xs, ys, iters)
-    comm = CommLog(m=prob.m)
-    comm.begin_round()
-    comm.send("worker->master", prob.n, prob.p, "ship all local data")
-    comm.send("master->worker", 1, prob.p, "final predictor")
-    res = MTLResult("centralize", W, comm,
+    state = rt.one_shot(body, {"W": jnp.zeros((p, m), prob.Xs.dtype)})
+    W = state["W"]
+    res = MTLResult("centralize", W, rt.comm,
                     extras={"lam": float(lam),
                             "nuclear_norm": float(nuclear_norm(W))})
     res.record(1, W)

@@ -8,35 +8,22 @@ ADMM     (Algorithm 2 / Appendix A): workers solve regularized local ERM;
 DFW      (Algorithm 3 / Appendix B): master computes only the LEADING
                         singular pair of the gradient.    2p per round.
 
-Each solver runs a Python loop over communication rounds (rounds are the
-unit of the paper's plots) with a jitted round body, and snapshots the
-iterate every ``record_every`` rounds.
+Each solver is a round body against the runtime primitives: workers
+compute on their local task columns (local_slice + worker_map), the
+gradient matrix is assembled with gather_columns, the master step runs
+on the (replicated) gathered state, and broadcast publishes the update.
+The driver snapshots the iterate every ``record_every`` rounds (rounds
+are the unit of the paper's plots).
 """
 from __future__ import annotations
-
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from .. import linear_model as lm
-from ..comm import CommLog
 from ..svd_ops import leading_sv, sv_shrink
-from .base import MTLProblem, MTLResult, register
-
-
-def _grad_fn(prob: MTLProblem):
-    """Gradient of the global objective as a jit-friendly fn of (W, Xs, ys).
-
-    Data is passed as ARGUMENTS (not closure constants) so XLA does not
-    constant-fold per-task Gram matrices at compile time.
-    """
-    loss, l2 = prob.loss, prob.l2
-
-    def grad(W, Xs, ys):
-        return lm.all_task_grads(loss, W, Xs, ys, l2)
-
-    return grad
+from .base import (MTLProblem, MTLResult, default_runtime, iterate_recorder,
+                   register)
 
 
 def data_smoothness(prob: MTLProblem) -> float:
@@ -47,7 +34,8 @@ def data_smoothness(prob: MTLProblem) -> float:
     needs the empirical spectral norm (one-time local computation, no
     extra communication: each worker can send its scalar with its first
     gradient; we charge nothing, consistent with the paper's accounting
-    of vectors only).
+    of vectors only). Identical on every backend, so sim and mesh runs
+    share the step size.
     """
     def spec(X):
         C = X.T @ X / X.shape[0]
@@ -66,87 +54,91 @@ def _init_W(prob: MTLProblem, init: str) -> jnp.ndarray:
         return jnp.zeros((prob.p, prob.m), prob.Xs.dtype)
     if init == "local":
         # Paper §5: "For ProxGD and AccProxGD, we initialized from Local."
+        # A worker-local computation (no communication), identical on both
+        # backends, so it runs host-side once.
         from .baselines import _local_W
         return _local_W(prob, max(prob.l2, 1e-6))
     raise ValueError(init)
 
 
+def _grad_columns(rt, prob, Z, Xs, ys, note):
+    """Workers differentiate their local columns of Z; master gathers."""
+    loss, m = prob.loss, prob.m
+
+    def g(w, X, y):
+        return lm.task_grad(loss, w, X, y, prob.l2) / m
+
+    Z_local = rt.local_slice(Z)
+    G_local = rt.worker_map(g, in_axes=(1, 0, 0), out_axes=1)(Z_local, Xs, ys)
+    return rt.gather_columns(G_local, note)
+
+
 @register("proxgd")
 def proxgd(prob: MTLProblem, lam: float = 1e-3, rounds: int = 200,
            eta: float = None, init: str = "local", record_every: int = 1,
-           **_) -> MTLResult:
+           runtime=None, **_) -> MTLResult:
+    rt = default_runtime(prob, runtime)
     if eta is None:
         eta = 1.0 / data_smoothness(prob)
     m = prob.m
 
-    grad = _grad_fn(prob)
-
-    @jax.jit
-    def round_step(W, Xs, ys):
-        G = grad(W, Xs, ys)
+    def body(k, state, Xs, ys):
+        G = _grad_columns(rt, prob, state["W"], Xs, ys, "gradient column")
         # master prox step (3.3); grad of (1/m)sum L_nj carries 1/m, the
         # per-task smoothness is H/m so the per-W step uses eta*m
-        return sv_shrink(W - eta * m * G, eta * m * lam)
+        W_new = sv_shrink(state["W"] - eta * m * G, eta * m * lam)
+        return {"W": rt.broadcast(W_new, "updated predictor")}
 
-    W = _init_W(prob, init)
-    comm = CommLog(m=m)
-    res = MTLResult("proxgd", W, comm, extras={"lam": lam, "eta": eta})
-    res.record(0, W)
-    for t in range(rounds):
-        comm.begin_round()
-        comm.send("worker->master", 1, prob.p, "gradient column")
-        W = round_step(W, prob.Xs, prob.ys)
-        comm.send("master->worker", 1, prob.p, "updated predictor")
-        if (t + 1) % record_every == 0 or t == rounds - 1:
-            res.record(t + 1, W)
-    res.W = W
+    state = {"W": _init_W(prob, init)}
+    res = MTLResult("proxgd", state["W"], rt.comm,
+                    extras={"lam": lam, "eta": eta})
+    res.record(0, state["W"])
+    state = rt.run_rounds(rounds, body, state,
+                          on_round=iterate_recorder(res, rounds, record_every))
+    res.W = state["W"]
     return res
 
 
 @register("accproxgd")
 def accproxgd(prob: MTLProblem, lam: float = 1e-3, rounds: int = 200,
               eta: float = None, init: str = "local", record_every: int = 1,
-              **_) -> MTLResult:
+              runtime=None, **_) -> MTLResult:
+    rt = default_runtime(prob, runtime)
     if eta is None:
         eta = 1.0 / data_smoothness(prob)
     m = prob.m
 
-    grad = _grad_fn(prob)
-
-    @jax.jit
-    def round_step(W, Z, t, Xs, ys):
-        G = grad(Z, Xs, ys)
+    def body(k, state, Xs, ys):
+        W, Z, t = state["W"], state["Z"], state["t"]
+        G = _grad_columns(rt, prob, Z, Xs, ys, "gradient at Z")
         W_new = sv_shrink(Z - eta * m * G, eta * m * lam)      # (3.4)
         t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
         Z_new = W_new + ((t - 1.0) / t_new) * (W_new - W)       # (3.5)
-        return W_new, Z_new, t_new
+        return {"W": W_new, "Z": rt.broadcast(Z_new, "updated Z column"),
+                "t": t_new}
 
-    W = _init_W(prob, init)
-    Z, tk = W, jnp.array(1.0, W.dtype)
-    comm = CommLog(m=m)
-    res = MTLResult("accproxgd", W, comm, extras={"lam": lam, "eta": eta})
-    res.record(0, W)
-    for t in range(rounds):
-        comm.begin_round()
-        comm.send("worker->master", 1, prob.p, "gradient at Z")
-        W, Z, tk = round_step(W, Z, tk, prob.Xs, prob.ys)
-        comm.send("master->worker", 1, prob.p, "updated Z column")
-        if (t + 1) % record_every == 0 or t == rounds - 1:
-            res.record(t + 1, W)
-    res.W = W
+    W0 = _init_W(prob, init)
+    state = {"W": W0, "Z": W0, "t": jnp.array(1.0, W0.dtype)}
+    res = MTLResult("accproxgd", state["W"], rt.comm,
+                    extras={"lam": lam, "eta": eta})
+    res.record(0, state["W"])
+    state = rt.run_rounds(rounds, body, state,
+                          on_round=iterate_recorder(res, rounds, record_every))
+    res.W = state["W"]
     return res
 
 
 @register("admm")
 def admm(prob: MTLProblem, lam: float = 1e-3, rho: float = 1.0,
          rounds: int = 200, record_every: int = 1, newton_iters: int = 8,
-         **_) -> MTLResult:
+         runtime=None, **_) -> MTLResult:
     """Appendix A. Worker step (A.1) is a regularized ERM:
         w_j+ = argmin_w L_nj(w)/m + <w - z_j, q_j> + rho/2 ||w - z_j||^2.
     Squared loss: closed form. Logistic: a few Newton steps (strongly
     convex objective, Newton converges fast).
     """
-    loss, Xs, ys, m, p = prob.loss, prob.Xs, prob.ys, prob.m, prob.p
+    rt = default_runtime(prob, runtime)
+    loss, m, p = prob.loss, prob.m, prob.p
 
     def worker_solve(X, y, z, q, w0):
         n = X.shape[0]
@@ -156,66 +148,61 @@ def admm(prob: MTLProblem, lam: float = 1e-3, rho: float = 1.0,
             b = X.T @ y / (n * m) + rho * z - q
             return jnp.linalg.solve(Amat, b)
 
-        def body(_, w):
+        def newton(_, w):
             g = lm.task_grad(loss, w, X, y, prob.l2) / m + q + rho * (w - z)
             H = lm.task_hessian(loss, w, X, y, prob.l2) / m \
                 + rho * jnp.eye(p, dtype=X.dtype)
             return w - jnp.linalg.solve(H, g)
-        return jax.lax.fori_loop(0, newton_iters, body, w0)
+        return jax.lax.fori_loop(0, newton_iters, newton, w0)
 
-    @jax.jit
-    def round_step(W, Z, Q, Xs_, ys_):
-        W_new = jax.vmap(worker_solve, in_axes=(0, 0, 1, 1, 1), out_axes=1)(
-            Xs_, ys_, Z, Q, W)
-        Z_new = sv_shrink(W_new + Q / rho, lam / rho)           # (A.2)
-        Q_new = Q + rho * (W_new - Z_new)                        # (A.3)
-        return W_new, Z_new, Q_new
+    def body(k, state, Xs, ys):
+        W_local, Z, Q = state["W"], state["Z"], state["Q"]
+        z_loc, q_loc = rt.local_slice(Z), rt.local_slice(Q)
+        W_local = rt.worker_map(worker_solve, in_axes=(0, 0, 1, 1, 1),
+                                out_axes=1)(Xs, ys, z_loc, q_loc, W_local)
+        W_full = rt.gather_columns(W_local, "local w")
+        Z_new = sv_shrink(W_full + Q / rho, lam / rho)           # (A.2)
+        Q_new = Q + rho * (W_full - Z_new)                        # (A.3)
+        return {"W": W_local,
+                "Z": rt.broadcast(Z_new, "z columns"),
+                "Q": rt.broadcast(Q_new, "q columns")}
 
-    W = jnp.zeros((p, m), Xs.dtype)
-    Z, Q = W, W
-    comm = CommLog(m=m)
-    res = MTLResult("admm", W, comm, extras={"lam": lam, "rho": rho})
-    res.record(0, W)
-    for t in range(rounds):
-        comm.begin_round()
-        comm.send("worker->master", 1, p, "local w")
-        W, Z, Q = round_step(W, Z, Q, Xs, ys)
-        comm.send("master->worker", 2, p, "z and q columns")
-        if (t + 1) % record_every == 0 or t == rounds - 1:
-            res.record(t + 1, Z)   # consensus variable is the estimator
-    res.W = Z
+    W0 = jnp.zeros((p, m), prob.Xs.dtype)
+    state = {"W": W0, "Z": W0, "Q": W0}
+    res = MTLResult("admm", state["W"], rt.comm,
+                    extras={"lam": lam, "rho": rho})
+    res.record(0, state["W"])
+    # consensus variable Z is the estimator
+    state = rt.run_rounds(rounds, body, state, sharded=("W",),
+                          on_round=iterate_recorder(res, rounds,
+                                                    record_every, key="Z"))
+    res.W = state["Z"]
     return res
 
 
 @register("dfw")
 def dfw(prob: MTLProblem, radius: float = None, rounds: int = 200,
-        record_every: int = 1, sv_iters: int = 60, **_) -> MTLResult:
+        record_every: int = 1, sv_iters: int = 60, runtime=None,
+        **_) -> MTLResult:
     """Appendix B: Frank-Wolfe over {||W||_* <= R}; master only needs the
     leading singular pair of the gradient (power iteration)."""
+    rt = default_runtime(prob, runtime)
     if radius is None:
         radius = prob.nuclear_radius
-    m = prob.m
 
-    grad = _grad_fn(prob)
-
-    @jax.jit
-    def round_step(W, t, Xs, ys):
-        G = grad(W, Xs, ys)
+    def body(k, state, Xs, ys):
+        W = state["W"]
+        G = _grad_columns(rt, prob, W, Xs, ys, "gradient column")
         u, s, v = leading_sv(G, iters=sv_iters)
-        gamma = 2.0 / (t + 2.0)
+        gamma = 2.0 / (k.astype(W.dtype) + 2.0)
         # w_j <- (1-gamma) w_j - gamma R v_j u  (B.1)
-        return (1.0 - gamma) * W - gamma * radius * jnp.outer(u, v)
+        W_new = (1.0 - gamma) * W - gamma * radius * jnp.outer(u, v)
+        return {"W": rt.broadcast(W_new, "v_j * u direction")}
 
-    W = jnp.zeros((prob.p, m), prob.Xs.dtype)
-    comm = CommLog(m=m)
-    res = MTLResult("dfw", W, comm, extras={"radius": radius})
-    res.record(0, W)
-    for t in range(rounds):
-        comm.begin_round()
-        comm.send("worker->master", 1, prob.p, "gradient column")
-        W = round_step(W, jnp.array(float(t)), prob.Xs, prob.ys)
-        comm.send("master->worker", 1, prob.p, "v_j * u direction")
-        if (t + 1) % record_every == 0 or t == rounds - 1:
-            res.record(t + 1, W)
-    res.W = W
+    state = {"W": jnp.zeros((prob.p, prob.m), prob.Xs.dtype)}
+    res = MTLResult("dfw", state["W"], rt.comm, extras={"radius": radius})
+    res.record(0, state["W"])
+    state = rt.run_rounds(rounds, body, state,
+                          on_round=iterate_recorder(res, rounds, record_every))
+    res.W = state["W"]
     return res

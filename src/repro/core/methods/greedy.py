@@ -11,6 +11,10 @@ DNSP (Algorithm 6): same, but workers send NEWTON directions
 
 AltMin (Appendix H comparison): alternating minimization over W = U V^T.
 
+Each solver is written ONCE against the runtime primitives
+(worker_map / gather_columns / broadcast, see repro.runtime) and runs
+unchanged on the simulated cluster or a real device mesh.
+
 Implementation note: the projection matrix is kept at a static width
 ``max_k = rounds`` with a column-validity mask so each round's refit jits
 once (columns beyond the current round are zero and contribute nothing
@@ -18,158 +22,143 @@ to the projected design X U).
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 
 from .. import linear_model as lm
-from ..comm import CommLog
 from ..svd_ops import gram_schmidt_append, leading_sv
-from .base import MTLProblem, MTLResult, register
-
-
-def _masked_refit_data(prob: MTLProblem, U: jnp.ndarray, mask: jnp.ndarray,
-                       l2: float, Xs, ys) -> jnp.ndarray:
-    """Per-task projected ERM with masked columns; returns W = U V^T."""
-    Um = U * mask[None, :]
-
-    def one(X, y):
-        w, _ = lm.projected_erm(prob.loss, Um, X, y, l2)
-        return w
-
-    return jax.vmap(one, in_axes=(0, 0), out_axes=1)(Xs, ys)
+from .base import (MTLProblem, MTLResult, default_runtime, iterate_recorder,
+                   register)
 
 
 def _subspace_pursuit(prob: MTLProblem, rounds: int, direction: str,
                       record_every: int, sv_iters: int, l2: float,
-                      newton_damping: float = 1e-6) -> MTLResult:
+                      newton_damping: float = 1e-6, runtime=None) -> MTLResult:
+    rt = default_runtime(prob, runtime)
     m, p = prob.m, prob.p
     loss = prob.loss
     max_k = rounds
-
-    def worker_message(W, Xs, ys):
-        if direction == "gradient":
-            per = jax.vmap(lambda w, X, y: lm.task_grad(loss, w, X, y, prob.l2),
-                           in_axes=(1, 0, 0), out_axes=1)
-            return per(W, Xs, ys) / m
-        per = jax.vmap(
-            lambda w, X, y: lm.newton_direction(loss, w, X, y, prob.l2,
-                                                newton_damping),
-            in_axes=(1, 0, 0), out_axes=1)
-        return per(W, Xs, ys)
-
-    @partial(jax.jit, donate_argnums=(0,))
-    def round_step(U, mask, W, k, Xs, ys):
-        G = worker_message(W, Xs, ys)               # workers -> master
-        u, _, _ = leading_sv(G, iters=sv_iters)     # master
-        if direction == "newton":
-            u = gram_schmidt_append(U, u, mask)     # Alg 6 lines 7-9
-        U = U.at[:, k].set(u)                       # workers append
-        mask = mask.at[k].set(1.0)
-        W = _masked_refit_data(prob, U, mask, l2, Xs, ys)  # workers re-fit
-        return U, mask, W
-
-    U = jnp.zeros((p, max_k), prob.Xs.dtype)
-    mask = jnp.zeros((max_k,), prob.Xs.dtype)
-    W = jnp.zeros((p, m), prob.Xs.dtype)
     name = "dgsp" if direction == "gradient" else "dnsp"
-    comm = CommLog(m=m)
-    res = MTLResult(name, W, comm)
-    res.record(0, W)
-    for t in range(rounds):
-        comm.begin_round()
-        comm.send("worker->master", 1, p,
-                  "gradient" if direction == "gradient" else "newton dir")
-        U, mask, W = round_step(U, mask, W, t, prob.Xs, prob.ys)
-        comm.send("master->worker", 1, p, "new basis vector u")
-        if (t + 1) % record_every == 0 or t == rounds - 1:
-            res.record(t + 1, W)
-    res.W = W
-    res.extras["U"] = U
-    res.extras["mask"] = mask
+
+    def msg(w, X, y):
+        if direction == "newton":
+            return lm.newton_direction(loss, w, X, y, prob.l2, newton_damping)
+        return lm.task_grad(loss, w, X, y, prob.l2) / m
+
+    def body(k, state, Xs, ys):
+        U, mask, W_local = state["U"], state["mask"], state["W"]
+        G_local = rt.worker_map(msg, in_axes=(1, 0, 0), out_axes=1)(
+            W_local, Xs, ys)
+        G = rt.gather_columns(
+            G_local, "gradient" if direction == "gradient" else "newton dir")
+        u, _, _ = leading_sv(G, iters=sv_iters)        # master
+        if direction == "newton":
+            u = gram_schmidt_append(U, u, mask)        # Alg 6 lines 7-9
+        u = rt.broadcast(u, "new basis vector u")
+        U = U.at[:, k].set(u)                          # workers append
+        mask = mask.at[k].set(1.0)
+        Um = U * mask[None, :]
+
+        def refit(X, y):
+            w, _ = lm.projected_erm(loss, Um, X, y, l2)
+            return w
+
+        W_local = rt.worker_map(refit, in_axes=(0, 0), out_axes=1)(Xs, ys)
+        return {"U": U, "mask": mask, "W": W_local}
+
+    state = {"U": jnp.zeros((p, max_k), prob.Xs.dtype),
+             "mask": jnp.zeros((max_k,), prob.Xs.dtype),
+             "W": jnp.zeros((p, m), prob.Xs.dtype)}
+    res = MTLResult(name, state["W"], rt.comm)
+    res.record(0, state["W"])
+    state = rt.run_rounds(rounds, body, state, sharded=("W",),
+                          on_round=iterate_recorder(res, rounds, record_every))
+    res.W = state["W"]
+    res.extras["U"] = state["U"]
+    res.extras["mask"] = state["mask"]
     return res
 
 
 @register("dgsp")
 def dgsp(prob: MTLProblem, rounds: int = 20, record_every: int = 1,
-         sv_iters: int = 60, l2: float = 0.0, **_) -> MTLResult:
+         sv_iters: int = 60, l2: float = 0.0, runtime=None, **_) -> MTLResult:
     return _subspace_pursuit(prob, rounds, "gradient", record_every,
-                             sv_iters, l2 if l2 else prob.l2)
+                             sv_iters, l2 if l2 else prob.l2, runtime=runtime)
 
 
 @register("dnsp")
 def dnsp(prob: MTLProblem, rounds: int = 20, record_every: int = 1,
          sv_iters: int = 60, l2: float = 0.0, damping: float = 1e-4,
-         **_) -> MTLResult:
+         runtime=None, **_) -> MTLResult:
     return _subspace_pursuit(prob, rounds, "newton", record_every,
                              sv_iters, l2 if l2 else prob.l2,
-                             newton_damping=damping)
+                             newton_damping=damping, runtime=runtime)
 
 
 @register("altmin")
 def altmin(prob: MTLProblem, rank: int = None, rounds: int = 30,
-           record_every: int = 1, l2: float = 1e-6, **_) -> MTLResult:
+           record_every: int = 1, l2: float = 1e-6, u_grad_steps: int = 20,
+           runtime=None, **_) -> MTLResult:
     """Alternating minimization over W = U V^T (Jain et al.; App-H baseline).
 
     V-step is an exact per-task projected ERM (local). U-step minimizes the
     global squared objective over U given V — for squared loss this is a
-    p*r linear system assembled from per-task moments; for logistic we take
-    damped Newton-free gradient steps on U (few, it is a refit heuristic).
+    p*r linear system assembled from per-task moments (one sum_tasks
+    collective); for logistic we take a few gradient steps on U, each one
+    a gather of per-task gradient columns.
     """
+    rt = default_runtime(prob, runtime)
     m, p = prob.m, prob.p
     r = int(rank if rank is not None else prob.r)
     loss = prob.loss
     key = jax.random.PRNGKey(0)
     U0 = jnp.linalg.qr(jax.random.normal(key, (p, r), prob.Xs.dtype))[0]
 
-    def v_step(U, Xs, ys):
+    def v_of(U, Xs, ys):
         def one(X, y):
             _, v = lm.projected_erm(loss, U, X, y, max(l2, 1e-9))
             return v
-        return jax.vmap(one, in_axes=(0, 0), out_axes=1)(Xs, ys)
+        return rt.worker_map(one, in_axes=(0, 0), out_axes=1)(Xs, ys)  # (r, L)
 
-    def u_step(U, V, Xs, ys):
+    def body(k, state, Xs, ys):
+        U = state["U"]
+        V = v_of(U, Xs, ys)
         if loss.name == "squared":
-            # min_U (1/2nm) sum_j ||X_j U v_j - y_j||^2: vec(U) solve.
+            # min_U (1/2nm) sum_j ||X_j U v_j - y_j||^2: vec(U) solve from
+            # per-task moments, summed on the master.
             def moments(X, y, v):
                 G = X.T @ X / prob.n                    # (p, p)
                 A_j = jnp.kron(jnp.outer(v, v), G)      # (p r, p r)
                 b_j = jnp.kron(v, X.T @ y / prob.n)     # (p r,)
                 return A_j, b_j
-            A_all, b_all = jax.vmap(moments, in_axes=(0, 0, 1))(
+            A_all, b_all = rt.worker_map(moments, in_axes=(0, 0, 1))(
                 Xs, ys, V)
-            Amat = jnp.sum(A_all, 0) / m + l2 * jnp.eye(p * r, dtype=U.dtype)
-            b = jnp.sum(b_all, 0) / m
+            Amat = rt.sum_tasks(A_all, "per-task moment matrices") / m \
+                + l2 * jnp.eye(p * r, dtype=U.dtype)
+            b = rt.sum_tasks(b_all, "per-task moment vectors") / m
             vecU = jnp.linalg.solve(Amat, b)
-            return vecU.reshape(r, p).T
-        # logistic: gradient steps on U
-        def gloss(Uf):
-            W = Uf @ V
-            return lm.global_loss(loss, W, Xs, ys, prob.l2)
-        g = jax.grad(gloss)
-        def body(_, Uc):
-            return Uc - 1.0 * g(Uc)
-        return jax.lax.fori_loop(0, 20, body, U)
+            U_new = vecU.reshape(r, p).T
+        else:
+            # logistic: gradient steps on U; each step gathers the fresh
+            # per-task gradient columns (an honest round of collectives).
+            V_full = rt.gather_columns(V, "v coefficients")
+            U_new = U
+            for _ in range(u_grad_steps):
+                G_loc = rt.worker_map(
+                    lambda v, X, y: lm.task_grad(loss, U_new @ v, X, y,
+                                                 prob.l2),
+                    in_axes=(1, 0, 0), out_axes=1)(V, Xs, ys)
+                G = rt.gather_columns(G_loc, "gradient columns")
+                U_new = U_new - (G @ V_full.T) / m
+        U_new = rt.broadcast(U_new, "updated U", vectors=r, dim=p)
+        V2 = v_of(U_new, Xs, ys)
+        return {"U": U_new, "W": U_new @ V2}
 
-    @jax.jit
-    def round_step(U, Xs, ys):
-        V = v_step(U, Xs, ys)
-        U_new = u_step(U, V, Xs, ys)
-        return U_new, U_new @ v_step(U_new, Xs, ys)
-
-    U = U0
-    comm = CommLog(m=m)
-    res = MTLResult("altmin", jnp.zeros((p, m), prob.Xs.dtype), comm)
-    W = jnp.zeros((p, m), prob.Xs.dtype)
-    res.record(0, W)
-    for t in range(rounds):
-        comm.begin_round()
-        comm.send("worker->master", r, p, "per-task moments (r columns)")
-        U, W = round_step(U, prob.Xs, prob.ys)
-        comm.send("master->worker", r, p, "updated U")
-        if (t + 1) % record_every == 0 or t == rounds - 1:
-            res.record(t + 1, W)
-    res.W = W
-    res.extras["U"] = U
+    state = {"U": U0, "W": jnp.zeros((p, m), prob.Xs.dtype)}
+    res = MTLResult("altmin", state["W"], rt.comm)
+    res.record(0, state["W"])
+    state = rt.run_rounds(rounds, body, state, sharded=("W",),
+                          on_round=iterate_recorder(res, rounds, record_every))
+    res.W = state["W"]
+    res.extras["U"] = state["U"]
     return res

@@ -1,0 +1,14 @@
+"""repro.runtime — one protocol API, interchangeable execution backends.
+
+Solvers call the primitives (worker_map / gather_columns / broadcast /
+local_slice / sum_tasks / gather_tasks / axis_index) and the driver
+(run_rounds / one_shot); ``SimRuntime`` executes them as a vmap over
+the task axis, ``MeshRuntime`` as shard_map collectives over a real
+"tasks" mesh axis. See DESIGN.md.
+"""
+from .base import ProtocolRuntime, make_runtime
+from .sim import SimRuntime
+from .mesh import MeshRuntime, task_mesh
+
+__all__ = ["ProtocolRuntime", "SimRuntime", "MeshRuntime", "task_mesh",
+           "make_runtime"]

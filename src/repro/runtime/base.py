@@ -1,0 +1,269 @@
+"""Backend-agnostic runtime for the paper's master/worker protocol.
+
+Every algorithm in the paper (Table 1) is an instance of one round
+structure:
+
+    workers:  compute a per-task message from local data      (worker_map)
+    send:     task-columns flow to the master                 (gather_columns /
+                                                               gather_tasks /
+                                                               sum_tasks)
+    master:   a small dense computation on the gathered state (plain jax ops)
+    reply:    the master's answer returns to the workers      (broadcast)
+
+A :class:`ProtocolRuntime` provides exactly those primitives, plus a
+driver (:meth:`run_rounds` / :meth:`one_shot`) that executes the round
+body and keeps the communication ledger.  Two backends implement the
+primitives:
+
+* ``SimRuntime``  — the simulated cluster: the "worker view" holds all
+  ``m`` tasks, ``worker_map`` is a vmap over the full task axis and the
+  collectives are identities.
+* ``MeshRuntime`` — the task axis is a REAL mesh axis: the round body
+  runs under ``shard_map``, ``worker_map`` vmaps over the per-chip task
+  shard and ``gather_columns`` is a ``lax.all_gather`` (the
+  replicated-master pattern, DESIGN.md §4).
+
+Solvers are written ONCE against the primitives and run unchanged on
+either backend; the two can only disagree by a floating-point rounding
+margin because they execute the same per-task ops in the same order.
+
+Communication accounting (the paper's unit: p-dimensional vectors per
+machine, Table 1) is emitted by the primitives themselves at trace time
+and replayed into the :class:`~repro.core.comm.CommLog` once per
+executed round — the ledger and the physical collective traffic share a
+single source of truth and cannot drift apart.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.comm import CommLog
+
+# A round body: (k, state, Xs, ys) -> state.  ``k`` is the (traced)
+# round index, ``state`` a flat dict of arrays, ``Xs``/``ys`` the
+# worker-local data view ((m,n,p)/(m,n) under sim; the per-chip shard
+# under mesh).
+RoundBody = Callable[[jnp.ndarray, Dict[str, jnp.ndarray], jnp.ndarray,
+                      jnp.ndarray], Dict[str, jnp.ndarray]]
+
+
+@dataclasses.dataclass
+class _WireEvent:
+    """One primitive call recorded while tracing a round body."""
+    direction: str      # "worker->master" | "master->worker"
+    vectors: int        # ledger: vectors per machine (paper accounting)
+    dim: int            # ledger: dimension of each vector
+    note: str
+    wire_floats: int    # protocol floats this chip's simulated machines
+                        # contribute to the collective = L x per-machine
+                        # payload (for psum the physical wire bytes can be
+                        # lower — the chip pre-reduces its L tasks locally;
+                        # 0 for broadcast under the replicated master and
+                        # for everything under SimRuntime)
+
+
+class ProtocolRuntime:
+    """Abstract backend. Holds the problem, the ledger, and the driver."""
+
+    name = "abstract"
+
+    def __init__(self, prob):
+        self.prob = prob
+        self.comm = CommLog(m=prob.m)
+        # worker->master protocol floats contributed by this chip's
+        # simulated machines across all collectives so far — the ledger's
+        # per-machine uplink times tasks-per-chip (mesh backend; stays 0
+        # under sim where no collective runs).  For all_gather this IS
+        # the physical payload; for psum the chip pre-reduces locally so
+        # physical wire bytes are payload/L.
+        self.collective_floats_per_chip = 0
+        self._recording = False
+        self._template: list[_WireEvent] = []
+        self._used = False
+
+    # ------------------------------------------------------------------
+    # topology
+    # ------------------------------------------------------------------
+    @property
+    def num_tasks(self) -> int:
+        return self.prob.m
+
+    @property
+    def local_tasks(self) -> int:
+        """Tasks held by one worker view (m under sim, m/devices under mesh)."""
+        raise NotImplementedError
+
+    # ------------------------------------------------------------------
+    # protocol primitives — call these inside a round body only
+    # ------------------------------------------------------------------
+    def worker_map(self, fn, in_axes, out_axes=0):
+        """Lift a per-task computation over the worker-local task axis.
+
+        Identical on both backends (a vmap); what differs is the extent
+        of the mapped axis: all m tasks under sim, the per-chip shard
+        under mesh.
+        """
+        return jax.vmap(fn, in_axes=in_axes, out_axes=out_axes)
+
+    def axis_index(self) -> jnp.ndarray:
+        """Index of this worker view along the task axis (0 under sim)."""
+        raise NotImplementedError
+
+    def local_slice(self, x: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+        """This worker view's task-columns of a replicated master array.
+
+        Free in both backends (the replicated master already lives on
+        every chip); charged nothing — the charge sits on ``broadcast``
+        when the master publishes updated state.
+        """
+        raise NotImplementedError
+
+    def gather_columns(self, x: jnp.ndarray, note: str = "") -> jnp.ndarray:
+        """workers -> master: stack per-task column messages to (d, m).
+
+        ``x`` is (d, L) with L = ``local_tasks``; the result is the full
+        (d, m) matrix on the (replicated) master.  Ledger: each machine
+        sends 1 vector of dimension d.
+        """
+        raise NotImplementedError
+
+    def gather_tasks(self, x: jnp.ndarray, note: str = "") -> jnp.ndarray:
+        """workers -> master: gather a per-task payload along axis 0.
+
+        ``x`` is (L, ...); result is (m, ...).  Ledger: each machine
+        sends prod(shape[1:-1]) vectors of dimension shape[-1] (e.g. the
+        Centralize baseline shipping its (n, p) design = n p-vectors).
+        """
+        raise NotImplementedError
+
+    def sum_tasks(self, x: jnp.ndarray, note: str = "") -> jnp.ndarray:
+        """workers -> master: sum a per-task payload over ALL m tasks.
+
+        ``x`` is (L, ...); result is the (...)-shaped global sum on the
+        (replicated) master.  Ledger: each machine sends its payload
+        once, as prod(shape[1:-1]) vectors of dimension shape[-1].
+        """
+        raise NotImplementedError
+
+    def broadcast(self, x: jnp.ndarray, note: str = "",
+                  vectors: Optional[int] = None,
+                  dim: Optional[int] = None) -> jnp.ndarray:
+        """master -> workers: publish master state.
+
+        A no-op computationally (the replicated master is already
+        everywhere) but it is the protocol's downlink and is charged:
+        a (d,) vector costs 1 vector of dim d per machine; a (d, m)
+        matrix costs each machine its own column (1 vector of dim d);
+        any other matrix is charged column-wise to every machine.
+        Pass ``vectors``/``dim`` (both) to override (e.g. AltMin's (p, r)
+        basis counted as r p-vectors).
+        """
+        if (vectors is None) != (dim is None):
+            raise ValueError("broadcast accounting override needs both "
+                             "vectors= and dim=, or neither")
+        if vectors is None:
+            if x.ndim == 1:
+                vectors, dim = 1, x.shape[0]
+            elif x.ndim == 2 and x.shape[1] == self.prob.m:
+                vectors, dim = 1, x.shape[0]
+            elif x.ndim == 2:
+                vectors, dim = x.shape[1], x.shape[0]
+            else:
+                vectors, dim = int(x.size // x.shape[-1]), x.shape[-1]
+        self._charge("master->worker", vectors, dim, note, wire=0)
+        return x
+
+    # ------------------------------------------------------------------
+    # ledger plumbing
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _payload_vectors(x) -> Tuple[int, int]:
+        """Ledger (vectors, dim) of one task's payload in a per-task
+        stack ``x`` of shape (L, ...): prod(shape[1:-1]) vectors of
+        dimension shape[-1]."""
+        payload = x.shape[1:]
+        vectors = 1
+        for s in payload[:-1]:
+            vectors *= int(s)
+        return vectors, int(payload[-1])
+
+    def _charge(self, direction: str, vectors: int, dim: int, note: str,
+                wire: int) -> None:
+        if self._recording:
+            self._template.append(
+                _WireEvent(direction, int(vectors), int(dim), note, int(wire)))
+
+    def _replay_round(self, count_round: bool) -> None:
+        if count_round:
+            self.comm.begin_round()
+        for ev in self._template:
+            self.comm.send(ev.direction, ev.vectors, ev.dim, ev.note)
+            self.collective_floats_per_chip += ev.wire_floats
+
+    # ------------------------------------------------------------------
+    # drivers
+    # ------------------------------------------------------------------
+    def _compile(self, body: RoundBody, state, sharded):
+        """Return step(t:int, state) -> state with data bound as args."""
+        raise NotImplementedError
+
+    def run_rounds(self, rounds: int, body: RoundBody,
+                   state: Dict[str, jnp.ndarray],
+                   sharded: Sequence[str] = (),
+                   on_round=None, count_rounds: bool = True
+                   ) -> Dict[str, jnp.ndarray]:
+        """Execute ``rounds`` protocol rounds of ``body``.
+
+        ``state`` is a dict of GLOBAL arrays; leaves named in
+        ``sharded`` live on the workers, split along their LAST axis
+        (task columns) under the mesh backend; everything else is
+        replicated master state.  Returned/recorded state is always
+        global, so callers never see backend-specific shapes.
+
+        The first execution traces the body; the primitive calls
+        recorded during that trace become the per-round communication
+        template replayed into ``self.comm`` after every round (every
+        round of one solver runs the same collectives — a property of
+        all Table-1 protocols).  ``on_round(t, state)`` runs host-side
+        after each round (snapshotting iterates, etc.).
+        """
+        if self._used:
+            raise RuntimeError(
+                "a ProtocolRuntime carries one solve's ledger and cannot "
+                "be reused — its CommLog and collective-traffic counters "
+                "would accumulate across solves; construct a fresh runtime "
+                "(or let repro.solve build one) per call")
+        self._used = True
+        step = self._compile(body, state, tuple(sharded))
+        self._template = []
+        self._recording = True
+        for t in range(rounds):
+            state = step(t, state)   # first call traces + records
+            self._recording = False
+            self._replay_round(count_rounds)
+            if on_round is not None:
+                on_round(t, state)
+        return state
+
+    def one_shot(self, body: RoundBody, state: Dict[str, jnp.ndarray],
+                 sharded: Sequence[str] = (), count_round: bool = True
+                 ) -> Dict[str, jnp.ndarray]:
+        """Single protocol exchange (the one-shot baselines)."""
+        return self.run_rounds(1, body, state, sharded=sharded,
+                               count_rounds=count_round)
+
+
+def make_runtime(backend: str, prob, *, mesh=None, axis: str = "tasks"
+                 ) -> ProtocolRuntime:
+    """Construct a fresh runtime for one solve. ``backend``: "sim"|"mesh"."""
+    if backend == "sim":
+        from .sim import SimRuntime
+        return SimRuntime(prob)
+    if backend == "mesh":
+        from .mesh import MeshRuntime
+        return MeshRuntime(prob, mesh=mesh, axis=axis)
+    raise ValueError(f"unknown backend {backend!r}; have 'sim', 'mesh'")

@@ -1,4 +1,9 @@
-"""shard_map distributed implementations vs. the vmap simulated cluster.
+"""Mesh-backend execution vs. the simulated cluster.
+
+Both backends now run the SAME solver bodies through the runtime
+primitives (repro.runtime), so they can only differ by floating-point
+rounding — the tolerances here are accordingly tight (the historical
+hand-written shard_map path drifted and allowed 1e-4 / 1e-3).
 
 Runs in a subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=4
 so the parent pytest process keeps its single-device view (required by the
@@ -14,7 +19,8 @@ import pytest
 SCRIPT = textwrap.dedent("""
     import jax, jax.numpy as jnp
     assert len(jax.devices()) == 4, jax.devices()
-    from repro.core.methods import MTLProblem, get_solver
+    import repro
+    from repro.core.methods import MTLProblem
     from repro.core.distributed import (task_mesh, dgsp_distributed,
                                         proxgd_distributed)
     from repro.data.synthetic import SimSpec, generate
@@ -24,32 +30,46 @@ SCRIPT = textwrap.dedent("""
     prob = MTLProblem.make(Xs, ys, "squared", A=2.0, r=3)
     mesh = task_mesh()
 
+    # ---- compat shims still work and agree with the registry ----------
     res_d = dgsp_distributed(prob, rounds=4, mesh=mesh)
-    res_v = get_solver("dgsp")(prob, rounds=4)
+    res_v = repro.solve(prob, method="dgsp", backend="sim", rounds=4)
     err = float(jnp.max(jnp.abs(res_d.W - res_v.W)))
-    assert err < 1e-4, f"dgsp mismatch {err}"
+    assert err < 1e-5, f"dgsp mismatch {err}"
     # Table-1 traffic: 1 p-vector per simulated machine per round
     assert res_d.collective_floats_per_chip == 4 * (12 // 4) * 40
 
     res_dn = dgsp_distributed(prob, rounds=4, mesh=mesh, newton=True,
                               damping=1e-4)
-    res_vn = get_solver("dnsp")(prob, rounds=4, damping=1e-4)
+    res_vn = repro.solve(prob, method="dnsp", backend="sim", rounds=4,
+                         damping=1e-4)
     err = float(jnp.max(jnp.abs(res_dn.W - res_vn.W)))
-    assert err < 1e-4, f"dnsp mismatch {err}"
+    assert err < 1e-5, f"dnsp mismatch {err}"
 
     res_p = proxgd_distributed(prob, rounds=20, mesh=mesh, lam=0.01)
-    res_vp = get_solver("proxgd")(prob, rounds=20, lam=0.01, init="zeros")
+    res_vp = repro.solve(prob, method="proxgd", backend="sim", rounds=20,
+                         lam=0.01, init="zeros")
     err = float(jnp.max(jnp.abs(res_p.W - res_vp.W)))
-    assert err < 1e-4, f"proxgd mismatch {err}"
+    assert err < 1e-5, f"proxgd mismatch {err}"
+
+    # ---- the front door reaches the same mesh path --------------------
+    res_f = repro.solve(prob, method="dgsp", backend="mesh", mesh=mesh,
+                        rounds=4)
+    assert res_f.extras["backend"] == "mesh"
+    err = float(jnp.max(jnp.abs(res_f.W - res_d.W)))
+    assert err == 0.0, f"front door != shim ({err})"
+    # ledger is emitted by the primitives: 2 p-vectors per round (Table 1)
+    assert res_f.comm.per_round_vectors() == 2
+    assert res_f.extras["collective_floats_per_chip"] == 4 * (12 // 4) * 40
 
     # logistic path through the distributed refit
     spec2 = SimSpec(p=20, m=8, r=2, n=100, task="classification")
     Xs2, ys2, W2, S2 = generate(jax.random.PRNGKey(1), spec2)
     prob2 = MTLProblem.make(Xs2, ys2, "logistic", A=2.0, r=2)
     res2 = dgsp_distributed(prob2, rounds=2, mesh=mesh, l2=1e-3)
-    res2v = get_solver("dgsp")(prob2, rounds=2, l2=1e-3)
+    res2v = repro.solve(prob2, method="dgsp", backend="sim", rounds=2,
+                        l2=1e-3)
     err = float(jnp.max(jnp.abs(res2.W - res2v.W)))
-    assert err < 1e-3, f"logistic dgsp mismatch {err}"
+    assert err < 1e-4, f"logistic dgsp mismatch {err}"
     print("DISTRIBUTED_OK")
 """)
 

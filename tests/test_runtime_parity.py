@@ -1,0 +1,138 @@
+"""Cross-backend parity matrix: every registered solver, sim vs mesh.
+
+The tentpole invariant of repro.runtime: a solver body written against
+the protocol primitives produces (i) the same predictors, (ii) the same
+communication ledger on every backend, and (iii) mesh-measured
+collective traffic that equals the ledger's worker->master floats times
+tasks-per-chip — all three by construction, checked here empirically.
+
+The matrix runs once in a subprocess (4 simulated devices via
+XLA_FLAGS), printing one machine-readable line per solver; the
+parametrized tests then assert on their own solver's line, so a failure
+names the offending method.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+# Every registered solver with mesh-friendly hyperparameters.  bestrep
+# needs the oracle subspace; it is built inside the script from W*.
+SOLVERS = ["local", "svd_trunc", "bestrep", "centralize", "proxgd",
+           "accproxgd", "admm", "dfw", "dgsp", "dnsp", "altmin"]
+
+SCRIPT = textwrap.dedent("""
+    import jax, jax.numpy as jnp
+    assert len(jax.devices()) == 4, jax.devices()
+    import repro
+    from repro.core.methods import MTLProblem, solver_names
+    from repro.data.synthetic import SimSpec, generate
+
+    spec = SimSpec(p=30, m=8, r=3, n=50)
+    Xs, ys, Wstar, Sigma = generate(jax.random.PRNGKey(0), spec)
+    prob = MTLProblem.make(Xs, ys, "squared", A=2.0, r=3)
+    Ustar = jnp.linalg.svd(Wstar, full_matrices=False)[0][:, :3]
+    per_chip = prob.m // len(jax.devices())
+
+    CASES = {
+        "local": {}, "svd_trunc": {}, "bestrep": {"U_star": Ustar},
+        "centralize": {"lam": 0.01, "iters": 100},
+        "proxgd": {"lam": 0.01, "rounds": 8},
+        "accproxgd": {"lam": 0.01, "rounds": 8},
+        "admm": {"lam": 0.01, "rho": 0.5, "rounds": 6},
+        "dfw": {"rounds": 6},
+        "dgsp": {"rounds": 3},
+        "dnsp": {"rounds": 3, "damping": 0.5, "l2": 1e-3},
+        "altmin": {"rounds": 3},
+    }
+    assert set(CASES) == set(solver_names()), "matrix must cover registry"
+
+    # logistic: the loss-specific worker branches (ADMM Newton step,
+    # AltMin gradient U-step, logistic ERM refits) under shard_map
+    lspec = SimSpec(p=16, m=8, r=2, n=60, task="classification")
+    lXs, lys, lW, lS = generate(jax.random.PRNGKey(2), lspec)
+    lprob = MTLProblem.make(lXs, lys, "logistic", A=2.0, r=2)
+    LOGISTIC = {
+        "local": {}, "svd_trunc": {},
+        "proxgd": {"lam": 0.01, "rounds": 4},
+        "admm": {"lam": 0.01, "rho": 0.5, "rounds": 3},
+        "dgsp": {"rounds": 2, "l2": 1e-3},
+        "dnsp": {"rounds": 2, "damping": 0.5, "l2": 1e-3},
+        "altmin": {"rounds": 2, "u_grad_steps": 5},
+    }
+
+    def check(tag, problem, name, kw):
+        rs = repro.solve(problem, method=name, backend="sim", **kw)
+        rm = repro.solve(problem, method=name, backend="mesh", **kw)
+        err = float(jnp.max(jnp.abs(rs.W - rm.W)))
+        ledger_eq = (rs.comm.summary() == rm.comm.summary()
+                     and [ (e.round, e.direction, e.vectors, e.dim)
+                           for e in rs.comm.events ]
+                     == [ (e.round, e.direction, e.vectors, e.dim)
+                           for e in rm.comm.events ])
+        meas = rm.extras["collective_floats_per_chip"]
+        expect = rm.comm.floats_by_direction("worker->master") * per_chip
+        print(f"{tag} {name} err={err:.3e} ledger_eq={int(ledger_eq)} "
+              f"meas={meas} expect={expect}")
+
+    for name, kw in CASES.items():
+        check("PARITY", prob, name, kw)
+    for name, kw in LOGISTIC.items():
+        check("PARITYL", lprob, name, kw)
+""")
+
+@pytest.fixture(scope="module")
+def parity_lines():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stdout + out.stderr
+    return {
+        (line.split()[0], line.split()[1]):
+            dict(kv.split("=") for kv in line.split()[2:])
+        for line in out.stdout.splitlines()
+        if line.startswith(("PARITY ", "PARITYL "))}
+
+
+# the loss-specific worker branches re-checked on a logistic problem
+LOGISTIC_SOLVERS = ["local", "svd_trunc", "proxgd", "admm", "dgsp", "dnsp",
+                    "altmin"]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("solver", SOLVERS)
+def test_sim_equals_mesh(parity_lines, solver):
+    """solve(method=M, backend="sim") == solve(method=M, backend="mesh")."""
+    row = parity_lines[("PARITY", solver)]
+    assert float(row["err"]) < 1e-4, row
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("solver", LOGISTIC_SOLVERS)
+def test_sim_equals_mesh_logistic(parity_lines, solver):
+    """The logistic worker branches (Newton/gradient refits) agree too."""
+    row = parity_lines[("PARITYL", solver)]
+    assert float(row["err"]) < 1e-4, row
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("solver", SOLVERS)
+def test_commlog_identical_across_backends(parity_lines, solver):
+    """The primitive-emitted ledger is backend-independent."""
+    assert parity_lines[("PARITY", solver)]["ledger_eq"] == "1"
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("tag,solver",
+                         [("PARITY", s) for s in SOLVERS]
+                         + [("PARITYL", s) for s in LOGISTIC_SOLVERS])
+def test_measured_collectives_match_ledger(parity_lines, tag, solver):
+    """Physical all-gather floats per chip == ledger worker->master floats
+    per machine x tasks-per-chip (the Table-1 cross-check)."""
+    row = parity_lines[(tag, solver)]
+    assert row["meas"] == row["expect"], row
