@@ -20,6 +20,7 @@ BENCHES = [
     ("fig3_correlated", "Fig 3: correlated features, SVD-trunc failure"),
     ("fig4_real", "Fig 4/8: real-data surrogates"),
     ("distributed_bench", "shard_map vs simulated equivalence + traffic"),
+    ("solver_bench", "solver drivers: eager vs scan, raw vs Gram"),
     ("kernels_bench", "Pallas kernel micro-benchmarks"),
     ("roofline_table", "roofline terms per (arch x shape) from dry-run"),
 ]

@@ -1,0 +1,157 @@
+"""Solver hot-path benchmark: eager vs scanned driver, raw vs Gram path.
+
+Measures end-to-end ``repro.solve`` wall-clock (a fresh runtime per
+call, compile included — exactly what a user pays) and rounds/sec for
+the round-loop solvers on both backends, across the 2x2 of execution
+drivers (eager python loop vs fused ``lax.scan``) and worker gradient
+paths (raw ``(n, p)`` recompute vs cached Gram statistics).  Also sweeps
+every registered solver for scanned-vs-eager ledger parity — the
+analytic template×rounds replay must be bit-identical to the eager
+ledger on both backends.
+
+Writes ``BENCH_solvers.json`` at the repo root so the perf trajectory is
+tracked across PRs:
+
+    PYTHONPATH=src python -m benchmarks.solver_bench [--tiny]
+
+``--tiny`` shrinks the spec for CI smoke runs (same code paths).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+import repro
+from repro.core.methods import MTLProblem, solver_names
+from repro.data.synthetic import SimSpec, generate
+from repro.runtime import task_mesh
+
+from .common import emit
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+# The headline spec (ISSUE 2 acceptance): proxgd, squared loss, sim
+# backend, 50 rounds — scanned+Gram must beat the PR-1 eager/raw
+# baseline by >= 3x end to end.
+FULL = dict(p=200, m=32, n=2000, rounds=50)
+TINY = dict(p=30, m=8, n=100, rounds=10)
+
+
+def _solve_timed(prob, **kw):
+    t0 = time.perf_counter()
+    res = repro.solve(prob, **kw)
+    jax.block_until_ready(res.W)
+    return res, time.perf_counter() - t0
+
+
+def _ledger(res):
+    return [(e.round, e.direction, e.vectors, e.dim, e.note)
+            for e in res.comm.events]
+
+
+def bench_proxgd(spec: dict, backend: str, mesh=None) -> dict:
+    """The 2x2: (eager|scan) x (raw|gram) end-to-end proxgd timings."""
+    sim = SimSpec(p=spec["p"], m=spec["m"], r=5, n=spec["n"])
+    Xs, ys, _, _ = generate(jax.random.PRNGKey(0), sim)
+    probs = {"gram": MTLProblem.make(Xs, ys, "squared", A=2.0, r=5),
+             "raw": MTLProblem.make(Xs, ys, "squared", A=2.0, r=5,
+                                    gram=False)}
+    rounds = spec["rounds"]
+    out = {}
+    final = {}
+    for path, prob in probs.items():
+        for driver, scan in (("eager", False), ("scan", True)):
+            res, secs = _solve_timed(prob, method="proxgd", backend=backend,
+                                     mesh=mesh, rounds=rounds, lam=0.01,
+                                     scan=scan)
+            out[f"{driver}_{path}_s"] = round(secs, 4)
+            out[f"rounds_per_sec_{driver}_{path}"] = round(rounds / secs, 2)
+            final[(driver, path)] = res.W
+            emit(f"solvers/proxgd_{backend}_{driver}_{path}", secs,
+                 {"rounds_per_sec": rounds / secs})
+    out["speedup_scan_gram_vs_eager_raw"] = round(
+        out["eager_raw_s"] / out["scan_gram_s"], 2)
+    out["max_abs_diff_across_modes"] = float(max(
+        jnp.max(jnp.abs(final[a] - final[b]))
+        for a in final for b in final))
+    return out
+
+
+def ledger_parity(spec: dict, backend: str, mesh=None) -> dict:
+    """scanned-vs-eager ledger + traffic parity for EVERY solver."""
+    sim = SimSpec(p=spec["p"], m=spec["m"], r=3, n=min(spec["n"], 100))
+    Xs, ys, Wstar, _ = generate(jax.random.PRNGKey(1), sim)
+    prob = MTLProblem.make(Xs, ys, "squared", A=2.0, r=3)
+    Ustar = jnp.linalg.svd(Wstar, full_matrices=False)[0][:, :3]
+    cases = {
+        "local": {}, "svd_trunc": {}, "bestrep": {"U_star": Ustar},
+        "centralize": {"lam": 0.01, "iters": 50},
+        "proxgd": {"lam": 0.01, "rounds": 5},
+        "accproxgd": {"lam": 0.01, "rounds": 5},
+        "admm": {"lam": 0.01, "rho": 0.5, "rounds": 4},
+        "dfw": {"rounds": 4},
+        "dgsp": {"rounds": 3},
+        "dnsp": {"rounds": 3, "damping": 0.5, "l2": 1e-3},
+        "altmin": {"rounds": 3},
+    }
+    missing = set(solver_names()) - set(cases)
+    assert not missing, f"bench must cover the registry; missing {missing}"
+    out = {}
+    for name, kw in cases.items():
+        re_, _ = _solve_timed(prob, method=name, backend=backend, mesh=mesh,
+                              scan=False, **kw)
+        rs, _ = _solve_timed(prob, method=name, backend=backend, mesh=mesh,
+                             scan=True, **kw)
+        out[name] = bool(
+            _ledger(re_) == _ledger(rs)
+            and re_.comm.rounds == rs.comm.rounds
+            and re_.extras["collective_floats_per_chip"]
+            == rs.extras["collective_floats_per_chip"]
+            and float(jnp.max(jnp.abs(re_.W - rs.W))) < 1e-6)
+    return out
+
+
+def main(out_dir: str = "results/bench", tiny: bool = False,
+         out_json: str | None = None) -> dict:
+    spec = TINY if tiny else FULL
+    mesh = task_mesh()
+    report = {
+        "spec": dict(spec, tiny=tiny),
+        "meta": {"jax_backend": jax.default_backend(),
+                 "devices": len(jax.devices())},
+        "proxgd": {"sim": bench_proxgd(spec, "sim"),
+                   "mesh": bench_proxgd(spec, "mesh", mesh=mesh)},
+        "ledger_parity": {"sim": ledger_parity(spec, "sim"),
+                          "mesh": ledger_parity(spec, "mesh", mesh=mesh)},
+    }
+    report["ledger_parity"]["all_solvers_bit_identical"] = all(
+        all(v.values()) for v in report["ledger_parity"].values()
+        if isinstance(v, dict))
+    path = out_json or os.path.join(ROOT, "BENCH_solvers.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    speed = report["proxgd"]["sim"]["speedup_scan_gram_vs_eager_raw"]
+    print(f"solver_bench: wrote {path} "
+          f"(sim proxgd scan+gram vs eager+raw: {speed}x)", flush=True)
+    if not report["ledger_parity"]["all_solvers_bit_identical"]:
+        raise AssertionError(
+            "scanned-vs-eager ledger parity violated — see "
+            f"ledger_parity in {path}")
+    return report
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke spec (small shapes, same code paths)")
+    ap.add_argument("--out", default="results/bench")
+    ap.add_argument("--json", default=None,
+                    help="output path (default: <repo>/BENCH_solvers.json)")
+    args = ap.parse_args()
+    main(args.out, tiny=args.tiny, out_json=args.json)

@@ -13,6 +13,7 @@ from .runtime.base import ProtocolRuntime, make_runtime
 
 def solve(prob, method: str = "dgsp", backend: str = "sim", *,
           mesh=None, axis: str = "tasks", rounds: Optional[int] = None,
+          scan: Optional[bool] = None,
           runtime: Optional[ProtocolRuntime] = None, **hp):
     """Run one registered solver on one backend.
 
@@ -26,6 +27,11 @@ def solve(prob, method: str = "dgsp", backend: str = "sim", *,
         devices) and the task axis name.
     rounds: communication rounds, forwarded when given (one-shot
         baselines take none).
+    scan: True (the default inside every solver) fuses the whole round
+        loop into one device-resident ``lax.scan`` dispatch; False runs
+        the eager one-jitted-step-per-round driver.  Ledger, snapshots
+        and results are identical either way
+        (``tests/test_runtime_parity.py``).
     runtime: pass an explicit ProtocolRuntime instead of backend/mesh.
     **hp: solver hyper-parameters (lam, eta, damping, ...).
 
@@ -44,6 +50,8 @@ def solve(prob, method: str = "dgsp", backend: str = "sim", *,
         runtime = make_runtime(backend, prob, mesh=mesh, axis=axis)
     if rounds is not None:
         hp["rounds"] = rounds
+    if scan is not None:
+        hp["scan"] = scan
     res = get_solver(method)(prob, runtime=runtime, **hp)
     res.extras["backend"] = runtime.name
     res.extras["collective_floats_per_chip"] = \

@@ -25,6 +25,12 @@ class MTLProblem:
     A: float = 1.0             # predictor-norm bound, Assumption 2.1
     r: int = 5                 # assumed rank bound, Assumption 2.3
     l2: float = 0.0            # optional ridge (real-data experiments, App. H)
+    # Cached per-task Gram statistics A_j = X_j^T X_j / n (m, p, p) and
+    # b_j = X_j^T y_j / n (m, p), computed once in `make` for the
+    # squared loss — every round's gradient/Hessian/ridge solve then
+    # costs O(p^2) per task instead of O(n p) (repro.core.worker_ops).
+    gram_A: Optional[jnp.ndarray] = None
+    gram_b: Optional[jnp.ndarray] = None
 
     @property
     def m(self) -> int:
@@ -43,10 +49,27 @@ class MTLProblem:
         # ||W*||_* <= sqrt(r m) A, eq. (2.2)
         return float(jnp.sqrt(self.r * self.m) * self.A)
 
+    def worker_data(self) -> Dict[str, jnp.ndarray]:
+        """The per-task data leaves the runtime binds into round bodies
+        (each stacked over the task axis; sharded along it under mesh)."""
+        d = {"Xs": self.Xs, "ys": self.ys}
+        if self.gram_A is not None:
+            d["gram_A"], d["gram_b"] = self.gram_A, self.gram_b
+        return d
+
     @classmethod
-    def make(cls, Xs, ys, loss_name: str = "squared", **kw) -> "MTLProblem":
-        return cls(Xs=jnp.asarray(Xs), ys=jnp.asarray(ys),
-                   loss=get_loss(loss_name), **kw)
+    def make(cls, Xs, ys, loss_name: str = "squared", gram: bool = True,
+             **kw) -> "MTLProblem":
+        """``gram=True`` (default) precomputes the per-task Gram cache
+        for the squared loss; ``gram=False`` keeps the raw-data path
+        (the pre-cache baseline, kept for benchmarks and fallback)."""
+        Xs, ys = jnp.asarray(Xs), jnp.asarray(ys)
+        loss = get_loss(loss_name)
+        prob = cls(Xs=Xs, ys=ys, loss=loss, **kw)
+        if gram and loss.name == "squared":
+            from ..worker_ops import gram_stats
+            prob.gram_A, prob.gram_b = gram_stats(Xs, ys)
+        return prob
 
 
 @dataclasses.dataclass
@@ -65,15 +88,13 @@ class MTLResult:
         self.iterates.append(W)
 
 
-def iterate_recorder(res: "MTLResult", rounds: int, record_every: int,
-                     key: str = "W"):
-    """on_round callback snapshotting one state leaf into the result
-    every ``record_every`` rounds (and always the final round) — the
-    shared cadence for every iterative solver's Fig 1-3 curves."""
-    def on_round(t, state):
-        if (t + 1) % record_every == 0 or t == rounds - 1:
-            res.record(t + 1, state[key])
-    return on_round
+def iterate_recorder(res: "MTLResult", record_every: int, key: str = "W"):
+    """RecordSpec snapshotting one state leaf into the result every
+    ``record_every`` rounds (and always the final round) — the shared
+    cadence for every iterative solver's Fig 1-3 curves, honored by both
+    the eager and the scanned driver (runtime.RecordSpec)."""
+    from ...runtime.base import RecordSpec
+    return RecordSpec(sink=res, every=record_every, key=key)
 
 
 def default_runtime(prob: MTLProblem, runtime=None):

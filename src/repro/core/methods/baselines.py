@@ -4,7 +4,9 @@ These are the brackets the iterative methods are measured against
 (Propositions 2.2 / 2.5 and the §5 "One-shot SVD truncation" discussion).
 Like the iterative solvers they are written against the runtime
 primitives, so even the one-shot exchanges (ship-local-solution /
-ship-all-data) run as real collectives on the mesh backend.
+ship-all-data) run as real collectives on the mesh backend, and their
+worker ERM solves use the Gram cache for the squared loss
+(repro.core.worker_ops).
 """
 from __future__ import annotations
 
@@ -12,36 +14,49 @@ import jax
 import jax.numpy as jnp
 
 from .. import linear_model as lm
+from .. import worker_ops
 from ..svd_ops import sv_shrink, svd_truncate, nuclear_norm
 from .base import MTLProblem, MTLResult, default_runtime, register
 
 
 def _local_fit(prob: MTLProblem, l2: float):
     """Per-task constrained ERM (Prop 2.2): solve, then project to the
-    A-ball. The atomic worker computation shared by Local / SVD-trunc."""
+    A-ball. The atomic worker computation shared by Local / SVD-trunc
+    (the raw-data path; squared loss with a Gram cache goes through
+    ``_local_columns`` instead)."""
     def one(X, y):
         return lm.project_l2_ball(lm.erm(prob.loss, X, y, l2), prob.A)
     return one
 
 
+def _local_columns(prob: MTLProblem, data, l2: float) -> jnp.ndarray:
+    """Worker-local constrained ERM columns (p, L), Gram-dispatched."""
+    if prob.loss.name == "squared" and worker_ops.has_gram(data):
+        W = worker_ops.ridge_columns(data, l2)
+        return jax.vmap(lambda w: lm.project_l2_ball(w, prob.A),
+                        in_axes=1, out_axes=1)(W)
+    one = _local_fit(prob, l2)
+    return jax.vmap(one, in_axes=(0, 0), out_axes=1)(data["Xs"], data["ys"])
+
+
 def _local_W(prob: MTLProblem, l2: float) -> jnp.ndarray:
     """Host-side Local solution (used as an init by the convex solvers)."""
-    one = _local_fit(prob, l2)
-    return jax.vmap(one, in_axes=(0, 0), out_axes=1)(prob.Xs, prob.ys)
+    return _local_columns(prob, prob.worker_data(), l2)
 
 
 @register("local")
-def local(prob: MTLProblem, l2: float = 1e-6, runtime=None, **_) -> MTLResult:
+def local(prob: MTLProblem, l2: float = 1e-6, runtime=None,
+          scan: bool = True, **_) -> MTLResult:
     """Per-machine ERM; zero communication."""
     rt = default_runtime(prob, runtime)
-    one = _local_fit(prob, max(l2, prob.l2))
+    l2 = max(l2, prob.l2)
 
-    def body(k, state, Xs, ys):
-        return {"W": rt.worker_map(one, in_axes=(0, 0), out_axes=1)(Xs, ys)}
+    def body(k, state, data):
+        return {"W": _local_columns(prob, data, l2)}
 
     state = rt.one_shot(body, {"W": jnp.zeros((prob.p, prob.m),
                                               prob.Xs.dtype)},
-                        sharded=("W",), count_round=False)
+                        sharded=("W",), count_round=False, scan=scan)
     res = MTLResult("local", state["W"], rt.comm)
     res.record(0, state["W"])
     return res
@@ -49,24 +64,24 @@ def local(prob: MTLProblem, l2: float = 1e-6, runtime=None, **_) -> MTLResult:
 
 @register("svd_trunc")
 def svd_trunc(prob: MTLProblem, l2: float = 1e-6, rank: int | None = None,
-              runtime=None, **_) -> MTLResult:
+              runtime=None, scan: bool = True, **_) -> MTLResult:
     """One-shot SVD truncation of the Local solution (§5).
 
     Each worker ships its local w_hat (1 vector of dim p) to the master,
     which truncates to rank r and ships each column back (1 vector).
     """
     rt = default_runtime(prob, runtime)
-    one = _local_fit(prob, max(l2, prob.l2))
+    l2 = max(l2, prob.l2)
     r = int(rank if rank is not None else prob.r)
 
-    def body(k, state, Xs, ys):
-        W_local = rt.worker_map(one, in_axes=(0, 0), out_axes=1)(Xs, ys)
+    def body(k, state, data):
+        W_local = _local_columns(prob, data, l2)
         W_full = rt.gather_columns(W_local, "local solution")
         W_t = svd_truncate(W_full, r)
         return {"W": rt.broadcast(W_t, "truncated column")}
 
     state = rt.one_shot(body, {"W": jnp.zeros((prob.p, prob.m),
-                                              prob.Xs.dtype)})
+                                              prob.Xs.dtype)}, scan=scan)
     res = MTLResult("svd_trunc", state["W"], rt.comm)
     res.record(1, state["W"])
     return res
@@ -74,20 +89,19 @@ def svd_trunc(prob: MTLProblem, l2: float = 1e-6, rank: int | None = None,
 
 @register("bestrep")
 def bestrep(prob: MTLProblem, U_star: jnp.ndarray = None, runtime=None,
-            **_) -> MTLResult:
+            scan: bool = True, **_) -> MTLResult:
     """Oracle: fit in the TRUE subspace U* (not realizable in practice)."""
     if U_star is None:
         raise ValueError("bestrep needs the oracle U_star")
     rt = default_runtime(prob, runtime)
 
-    def body(k, state, Xs, ys):
-        def refit(X, y):
-            return lm.projected_erm(prob.loss, U_star, X, y, prob.l2)[0]
-        return {"W": rt.worker_map(refit, in_axes=(0, 0), out_axes=1)(Xs, ys)}
+    def body(k, state, data):
+        W, _ = worker_ops.projected_solves(prob.loss, U_star, data, prob.l2)
+        return {"W": W}
 
     state = rt.one_shot(body, {"W": jnp.zeros((prob.p, prob.m),
                                               prob.Xs.dtype)},
-                        sharded=("W",), count_round=False)
+                        sharded=("W",), count_round=False, scan=scan)
     res = MTLResult("bestrep", state["W"], rt.comm)
     res.record(0, state["W"])
     return res
@@ -95,7 +109,8 @@ def bestrep(prob: MTLProblem, U_star: jnp.ndarray = None, runtime=None,
 
 @register("centralize")
 def centralize(prob: MTLProblem, lam: float = None, iters: int = 400,
-               tol: float = 1e-9, runtime=None, **_) -> MTLResult:
+               tol: float = 1e-9, runtime=None, scan: bool = True,
+               **_) -> MTLResult:
     """Nuclear-norm regularized ERM with all data on the master (eq. 2.3).
 
     Solved to optimality with FISTA (accelerated prox gradient) — the
@@ -111,7 +126,8 @@ def centralize(prob: MTLProblem, lam: float = None, iters: int = 400,
     from .convex import data_smoothness
     eta = 1.0 / data_smoothness(prob)
 
-    def body(k, state, Xs, ys):
+    def body(k, state, data):
+        Xs, ys = data["Xs"], data["ys"]
         Xy = jnp.concatenate([Xs, ys[..., None]], axis=-1)   # (L, n, p+1)
         Xy = rt.gather_tasks(Xy, "ship all local data")       # (m, n, p+1)
         Xs_full, ys_full = Xy[..., :-1], Xy[..., -1]
@@ -129,7 +145,8 @@ def centralize(prob: MTLProblem, lam: float = None, iters: int = 400,
                                     None, length=iters)
         return {"W": rt.broadcast(W, "final predictor")}
 
-    state = rt.one_shot(body, {"W": jnp.zeros((p, m), prob.Xs.dtype)})
+    state = rt.one_shot(body, {"W": jnp.zeros((p, m), prob.Xs.dtype)},
+                        scan=scan)
     W = state["W"]
     res = MTLResult("centralize", W, rt.comm,
                     extras={"lam": float(lam),

@@ -9,18 +9,21 @@ DFW      (Algorithm 3 / Appendix B): master computes only the LEADING
                         singular pair of the gradient.    2p per round.
 
 Each solver is a round body against the runtime primitives: workers
-compute on their local task columns (local_slice + worker_map), the
-gradient matrix is assembled with gather_columns, the master step runs
-on the (replicated) gathered state, and broadcast publishes the update.
-The driver snapshots the iterate every ``record_every`` rounds (rounds
-are the unit of the paper's plots).
+compute on their local task columns (local_slice + the worker_ops
+dispatch layer — Gram fast path for squared loss, Pallas kernel on TPU,
+XLA reference elsewhere), the gradient matrix is assembled with
+gather_columns, the master step runs on the (replicated) gathered state,
+and broadcast publishes the update.  ``scan=True`` (default) fuses the
+whole round loop into one device-resident lax.scan; the driver snapshots
+the iterate every ``record_every`` rounds in either mode (rounds are the
+unit of the paper's plots).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from .. import linear_model as lm
+from .. import worker_ops
 from ..svd_ops import leading_sv, sv_shrink
 from .base import (MTLProblem, MTLResult, default_runtime, iterate_recorder,
                    register)
@@ -35,17 +38,22 @@ def data_smoothness(prob: MTLProblem) -> float:
     extra communication: each worker can send its scalar with its first
     gradient; we charge nothing, consistent with the paper's accounting
     of vectors only). Identical on every backend, so sim and mesh runs
-    share the step size.
+    share the step size.  Uses the cached Gram matrices when present —
+    no pass over the raw (n, p) designs.
     """
-    def spec(X):
-        C = X.T @ X / X.shape[0]
+    def spec(C):
         v = jnp.ones((C.shape[0],), C.dtype) / jnp.sqrt(C.shape[0])
         def body(_, v):
             w = C @ v
             return w / jnp.maximum(jnp.linalg.norm(w), 1e-30)
         v = jax.lax.fori_loop(0, 50, body, v)
         return v @ (C @ v)
-    lmax = jnp.max(jax.vmap(spec)(prob.Xs))
+
+    if prob.gram_A is not None:
+        lmax = jnp.max(jax.vmap(spec)(prob.gram_A))
+    else:
+        lmax = jnp.max(jax.vmap(
+            lambda X: spec(X.T @ X / X.shape[0]))(prob.Xs))
     return float(prob.loss.smoothness * lmax)
 
 
@@ -61,29 +69,25 @@ def _init_W(prob: MTLProblem, init: str) -> jnp.ndarray:
     raise ValueError(init)
 
 
-def _grad_columns(rt, prob, Z, Xs, ys, note):
+def _grad_columns(rt, prob, Z, data, note):
     """Workers differentiate their local columns of Z; master gathers."""
-    loss, m = prob.loss, prob.m
-
-    def g(w, X, y):
-        return lm.task_grad(loss, w, X, y, prob.l2) / m
-
     Z_local = rt.local_slice(Z)
-    G_local = rt.worker_map(g, in_axes=(1, 0, 0), out_axes=1)(Z_local, Xs, ys)
+    G_local = worker_ops.grad_columns(prob.loss, Z_local, data,
+                                      prob.l2) / prob.m
     return rt.gather_columns(G_local, note)
 
 
 @register("proxgd")
 def proxgd(prob: MTLProblem, lam: float = 1e-3, rounds: int = 200,
            eta: float = None, init: str = "local", record_every: int = 1,
-           runtime=None, **_) -> MTLResult:
+           runtime=None, scan: bool = True, **_) -> MTLResult:
     rt = default_runtime(prob, runtime)
     if eta is None:
         eta = 1.0 / data_smoothness(prob)
     m = prob.m
 
-    def body(k, state, Xs, ys):
-        G = _grad_columns(rt, prob, state["W"], Xs, ys, "gradient column")
+    def body(k, state, data):
+        G = _grad_columns(rt, prob, state["W"], data, "gradient column")
         # master prox step (3.3); grad of (1/m)sum L_nj carries 1/m, the
         # per-task smoothness is H/m so the per-W step uses eta*m
         W_new = sv_shrink(state["W"] - eta * m * G, eta * m * lam)
@@ -93,8 +97,8 @@ def proxgd(prob: MTLProblem, lam: float = 1e-3, rounds: int = 200,
     res = MTLResult("proxgd", state["W"], rt.comm,
                     extras={"lam": lam, "eta": eta})
     res.record(0, state["W"])
-    state = rt.run_rounds(rounds, body, state,
-                          on_round=iterate_recorder(res, rounds, record_every))
+    state = rt.run_rounds(rounds, body, state, scan=scan,
+                          record=iterate_recorder(res, record_every))
     res.W = state["W"]
     return res
 
@@ -102,15 +106,15 @@ def proxgd(prob: MTLProblem, lam: float = 1e-3, rounds: int = 200,
 @register("accproxgd")
 def accproxgd(prob: MTLProblem, lam: float = 1e-3, rounds: int = 200,
               eta: float = None, init: str = "local", record_every: int = 1,
-              runtime=None, **_) -> MTLResult:
+              runtime=None, scan: bool = True, **_) -> MTLResult:
     rt = default_runtime(prob, runtime)
     if eta is None:
         eta = 1.0 / data_smoothness(prob)
     m = prob.m
 
-    def body(k, state, Xs, ys):
+    def body(k, state, data):
         W, Z, t = state["W"], state["Z"], state["t"]
-        G = _grad_columns(rt, prob, Z, Xs, ys, "gradient at Z")
+        G = _grad_columns(rt, prob, Z, data, "gradient at Z")
         W_new = sv_shrink(Z - eta * m * G, eta * m * lam)      # (3.4)
         t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
         Z_new = W_new + ((t - 1.0) / t_new) * (W_new - W)       # (3.5)
@@ -122,8 +126,8 @@ def accproxgd(prob: MTLProblem, lam: float = 1e-3, rounds: int = 200,
     res = MTLResult("accproxgd", state["W"], rt.comm,
                     extras={"lam": lam, "eta": eta})
     res.record(0, state["W"])
-    state = rt.run_rounds(rounds, body, state,
-                          on_round=iterate_recorder(res, rounds, record_every))
+    state = rt.run_rounds(rounds, body, state, scan=scan,
+                          record=iterate_recorder(res, record_every))
     res.W = state["W"]
     return res
 
@@ -131,16 +135,23 @@ def accproxgd(prob: MTLProblem, lam: float = 1e-3, rounds: int = 200,
 @register("admm")
 def admm(prob: MTLProblem, lam: float = 1e-3, rho: float = 1.0,
          rounds: int = 200, record_every: int = 1, newton_iters: int = 8,
-         runtime=None, **_) -> MTLResult:
+         runtime=None, scan: bool = True, **_) -> MTLResult:
     """Appendix A. Worker step (A.1) is a regularized ERM:
         w_j+ = argmin_w L_nj(w)/m + <w - z_j, q_j> + rho/2 ||w - z_j||^2.
-    Squared loss: closed form. Logistic: a few Newton steps (strongly
-    convex objective, Newton converges fast).
+    Squared loss: closed form (from the Gram cache when present —
+    per-round cost independent of n). Logistic: a few Newton steps
+    (strongly convex objective, Newton converges fast).
     """
     rt = default_runtime(prob, runtime)
     loss, m, p = prob.loss, prob.m, prob.p
+    use_gram = loss.name == "squared" and prob.gram_A is not None
+
+    def solve_gram(A, b, z, q):
+        Amat = A / m + (rho + prob.l2 / m) * jnp.eye(p, dtype=A.dtype)
+        return jnp.linalg.solve(Amat, b / m + rho * z - q)
 
     def worker_solve(X, y, z, q, w0):
+        from .. import linear_model as lm
         n = X.shape[0]
         if loss.name == "squared":
             Amat = X.T @ X / (n * m) \
@@ -155,11 +166,18 @@ def admm(prob: MTLProblem, lam: float = 1e-3, rho: float = 1.0,
             return w - jnp.linalg.solve(H, g)
         return jax.lax.fori_loop(0, newton_iters, newton, w0)
 
-    def body(k, state, Xs, ys):
+    def body(k, state, data):
         W_local, Z, Q = state["W"], state["Z"], state["Q"]
         z_loc, q_loc = rt.local_slice(Z), rt.local_slice(Q)
-        W_local = rt.worker_map(worker_solve, in_axes=(0, 0, 1, 1, 1),
-                                out_axes=1)(Xs, ys, z_loc, q_loc, W_local)
+        if use_gram:
+            W_local = rt.worker_map(solve_gram, in_axes=(0, 0, 1, 1),
+                                    out_axes=1)(data["gram_A"],
+                                                data["gram_b"],
+                                                z_loc, q_loc)
+        else:
+            W_local = rt.worker_map(worker_solve, in_axes=(0, 0, 1, 1, 1),
+                                    out_axes=1)(data["Xs"], data["ys"],
+                                                z_loc, q_loc, W_local)
         W_full = rt.gather_columns(W_local, "local w")
         Z_new = sv_shrink(W_full + Q / rho, lam / rho)           # (A.2)
         Q_new = Q + rho * (W_full - Z_new)                        # (A.3)
@@ -173,9 +191,9 @@ def admm(prob: MTLProblem, lam: float = 1e-3, rho: float = 1.0,
                     extras={"lam": lam, "rho": rho})
     res.record(0, state["W"])
     # consensus variable Z is the estimator
-    state = rt.run_rounds(rounds, body, state, sharded=("W",),
-                          on_round=iterate_recorder(res, rounds,
-                                                    record_every, key="Z"))
+    state = rt.run_rounds(rounds, body, state, sharded=("W",), scan=scan,
+                          record=iterate_recorder(res, record_every,
+                                                  key="Z"))
     res.W = state["Z"]
     return res
 
@@ -183,16 +201,16 @@ def admm(prob: MTLProblem, lam: float = 1e-3, rho: float = 1.0,
 @register("dfw")
 def dfw(prob: MTLProblem, radius: float = None, rounds: int = 200,
         record_every: int = 1, sv_iters: int = 60, runtime=None,
-        **_) -> MTLResult:
+        scan: bool = True, **_) -> MTLResult:
     """Appendix B: Frank-Wolfe over {||W||_* <= R}; master only needs the
     leading singular pair of the gradient (power iteration)."""
     rt = default_runtime(prob, runtime)
     if radius is None:
         radius = prob.nuclear_radius
 
-    def body(k, state, Xs, ys):
+    def body(k, state, data):
         W = state["W"]
-        G = _grad_columns(rt, prob, W, Xs, ys, "gradient column")
+        G = _grad_columns(rt, prob, W, data, "gradient column")
         u, s, v = leading_sv(G, iters=sv_iters)
         gamma = 2.0 / (k.astype(W.dtype) + 2.0)
         # w_j <- (1-gamma) w_j - gamma R v_j u  (B.1)
@@ -202,7 +220,7 @@ def dfw(prob: MTLProblem, radius: float = None, rounds: int = 200,
     state = {"W": jnp.zeros((prob.p, prob.m), prob.Xs.dtype)}
     res = MTLResult("dfw", state["W"], rt.comm, extras={"radius": radius})
     res.record(0, state["W"])
-    state = rt.run_rounds(rounds, body, state,
-                          on_round=iterate_recorder(res, rounds, record_every))
+    state = rt.run_rounds(rounds, body, state, scan=scan,
+                          record=iterate_recorder(res, record_every))
     res.W = state["W"]
     return res

@@ -13,7 +13,11 @@ AltMin (Appendix H comparison): alternating minimization over W = U V^T.
 
 Each solver is written ONCE against the runtime primitives
 (worker_map / gather_columns / broadcast, see repro.runtime) and runs
-unchanged on the simulated cluster or a real device mesh.
+unchanged on the simulated cluster or a real device mesh.  The worker
+computations (gradient / Newton messages, projected re-fits) go through
+the repro.core.worker_ops dispatch layer: with the squared loss the
+cached per-task Gram statistics replace every pass over the raw (n, p)
+designs, so a round costs O(p^2 k) per task instead of O(n p k).
 
 Implementation note: the projection matrix is kept at a static width
 ``max_k = rounds`` with a column-validity mask so each round's refit jits
@@ -25,7 +29,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .. import linear_model as lm
+from .. import worker_ops
 from ..svd_ops import gram_schmidt_append, leading_sv
 from .base import (MTLProblem, MTLResult, default_runtime, iterate_recorder,
                    register)
@@ -33,22 +37,23 @@ from .base import (MTLProblem, MTLResult, default_runtime, iterate_recorder,
 
 def _subspace_pursuit(prob: MTLProblem, rounds: int, direction: str,
                       record_every: int, sv_iters: int, l2: float,
-                      newton_damping: float = 1e-6, runtime=None) -> MTLResult:
+                      newton_damping: float = 1e-6, runtime=None,
+                      scan: bool = True) -> MTLResult:
     rt = default_runtime(prob, runtime)
     m, p = prob.m, prob.p
     loss = prob.loss
     max_k = rounds
     name = "dgsp" if direction == "gradient" else "dnsp"
 
-    def msg(w, X, y):
+    def messages(W_local, data):
         if direction == "newton":
-            return lm.newton_direction(loss, w, X, y, prob.l2, newton_damping)
-        return lm.task_grad(loss, w, X, y, prob.l2) / m
+            return worker_ops.newton_columns(loss, W_local, data, prob.l2,
+                                             newton_damping)
+        return worker_ops.grad_columns(loss, W_local, data, prob.l2) / m
 
-    def body(k, state, Xs, ys):
+    def body(k, state, data):
         U, mask, W_local = state["U"], state["mask"], state["W"]
-        G_local = rt.worker_map(msg, in_axes=(1, 0, 0), out_axes=1)(
-            W_local, Xs, ys)
+        G_local = messages(W_local, data)
         G = rt.gather_columns(
             G_local, "gradient" if direction == "gradient" else "newton dir")
         u, _, _ = leading_sv(G, iters=sv_iters)        # master
@@ -58,12 +63,7 @@ def _subspace_pursuit(prob: MTLProblem, rounds: int, direction: str,
         U = U.at[:, k].set(u)                          # workers append
         mask = mask.at[k].set(1.0)
         Um = U * mask[None, :]
-
-        def refit(X, y):
-            w, _ = lm.projected_erm(loss, Um, X, y, l2)
-            return w
-
-        W_local = rt.worker_map(refit, in_axes=(0, 0), out_axes=1)(Xs, ys)
+        W_local, _ = worker_ops.projected_solves(loss, Um, data, l2)
         return {"U": U, "mask": mask, "W": W_local}
 
     state = {"U": jnp.zeros((p, max_k), prob.Xs.dtype),
@@ -71,8 +71,8 @@ def _subspace_pursuit(prob: MTLProblem, rounds: int, direction: str,
              "W": jnp.zeros((p, m), prob.Xs.dtype)}
     res = MTLResult(name, state["W"], rt.comm)
     res.record(0, state["W"])
-    state = rt.run_rounds(rounds, body, state, sharded=("W",),
-                          on_round=iterate_recorder(res, rounds, record_every))
+    state = rt.run_rounds(rounds, body, state, sharded=("W",), scan=scan,
+                          record=iterate_recorder(res, record_every))
     res.W = state["W"]
     res.extras["U"] = state["U"]
     res.extras["mask"] = state["mask"]
@@ -81,31 +81,34 @@ def _subspace_pursuit(prob: MTLProblem, rounds: int, direction: str,
 
 @register("dgsp")
 def dgsp(prob: MTLProblem, rounds: int = 20, record_every: int = 1,
-         sv_iters: int = 60, l2: float = 0.0, runtime=None, **_) -> MTLResult:
+         sv_iters: int = 60, l2: float = 0.0, runtime=None,
+         scan: bool = True, **_) -> MTLResult:
     return _subspace_pursuit(prob, rounds, "gradient", record_every,
-                             sv_iters, l2 if l2 else prob.l2, runtime=runtime)
+                             sv_iters, l2 if l2 else prob.l2,
+                             runtime=runtime, scan=scan)
 
 
 @register("dnsp")
 def dnsp(prob: MTLProblem, rounds: int = 20, record_every: int = 1,
          sv_iters: int = 60, l2: float = 0.0, damping: float = 1e-4,
-         runtime=None, **_) -> MTLResult:
+         runtime=None, scan: bool = True, **_) -> MTLResult:
     return _subspace_pursuit(prob, rounds, "newton", record_every,
                              sv_iters, l2 if l2 else prob.l2,
-                             newton_damping=damping, runtime=runtime)
+                             newton_damping=damping, runtime=runtime,
+                             scan=scan)
 
 
 @register("altmin")
 def altmin(prob: MTLProblem, rank: int = None, rounds: int = 30,
            record_every: int = 1, l2: float = 1e-6, u_grad_steps: int = 20,
-           runtime=None, **_) -> MTLResult:
+           runtime=None, scan: bool = True, **_) -> MTLResult:
     """Alternating minimization over W = U V^T (Jain et al.; App-H baseline).
 
     V-step is an exact per-task projected ERM (local). U-step minimizes the
     global squared objective over U given V — for squared loss this is a
     p*r linear system assembled from per-task moments (one sum_tasks
-    collective); for logistic we take a few gradient steps on U, each one
-    a gather of per-task gradient columns.
+    collective, Gram-cached); for logistic we take a few gradient steps on
+    U, each one a gather of per-task gradient columns.
     """
     rt = default_runtime(prob, runtime)
     m, p = prob.m, prob.p
@@ -114,25 +117,29 @@ def altmin(prob: MTLProblem, rank: int = None, rounds: int = 30,
     key = jax.random.PRNGKey(0)
     U0 = jnp.linalg.qr(jax.random.normal(key, (p, r), prob.Xs.dtype))[0]
 
-    def v_of(U, Xs, ys):
-        def one(X, y):
-            _, v = lm.projected_erm(loss, U, X, y, max(l2, 1e-9))
-            return v
-        return rt.worker_map(one, in_axes=(0, 0), out_axes=1)(Xs, ys)  # (r, L)
+    def v_of(U, data):
+        _, V = worker_ops.projected_solves(loss, U, data, max(l2, 1e-9))
+        return V                                        # (r, L)
 
-    def body(k, state, Xs, ys):
+    def body(k, state, data):
         U = state["U"]
-        V = v_of(U, Xs, ys)
+        V = v_of(U, data)
         if loss.name == "squared":
             # min_U (1/2nm) sum_j ||X_j U v_j - y_j||^2: vec(U) solve from
             # per-task moments, summed on the master.
-            def moments(X, y, v):
-                G = X.T @ X / prob.n                    # (p, p)
-                A_j = jnp.kron(jnp.outer(v, v), G)      # (p r, p r)
-                b_j = jnp.kron(v, X.T @ y / prob.n)     # (p r,)
-                return A_j, b_j
-            A_all, b_all = rt.worker_map(moments, in_axes=(0, 0, 1))(
-                Xs, ys, V)
+            if worker_ops.has_gram(data):
+                def moments(A, b, v):
+                    return jnp.kron(jnp.outer(v, v), A), jnp.kron(v, b)
+                A_all, b_all = rt.worker_map(moments, in_axes=(0, 0, 1))(
+                    data["gram_A"], data["gram_b"], V)
+            else:
+                def moments(X, y, v):
+                    G = X.T @ X / prob.n                    # (p, p)
+                    A_j = jnp.kron(jnp.outer(v, v), G)      # (p r, p r)
+                    b_j = jnp.kron(v, X.T @ y / prob.n)     # (p r,)
+                    return A_j, b_j
+                A_all, b_all = rt.worker_map(moments, in_axes=(0, 0, 1))(
+                    data["Xs"], data["ys"], V)
             Amat = rt.sum_tasks(A_all, "per-task moment matrices") / m \
                 + l2 * jnp.eye(p * r, dtype=U.dtype)
             b = rt.sum_tasks(b_all, "per-task moment vectors") / m
@@ -144,21 +151,19 @@ def altmin(prob: MTLProblem, rank: int = None, rounds: int = 30,
             V_full = rt.gather_columns(V, "v coefficients")
             U_new = U
             for _ in range(u_grad_steps):
-                G_loc = rt.worker_map(
-                    lambda v, X, y: lm.task_grad(loss, U_new @ v, X, y,
-                                                 prob.l2),
-                    in_axes=(1, 0, 0), out_axes=1)(V, Xs, ys)
+                G_loc = worker_ops.grad_columns(loss, U_new @ V, data,
+                                                prob.l2)
                 G = rt.gather_columns(G_loc, "gradient columns")
                 U_new = U_new - (G @ V_full.T) / m
         U_new = rt.broadcast(U_new, "updated U", vectors=r, dim=p)
-        V2 = v_of(U_new, Xs, ys)
+        V2 = v_of(U_new, data)
         return {"U": U_new, "W": U_new @ V2}
 
     state = {"U": U0, "W": jnp.zeros((p, m), prob.Xs.dtype)}
     res = MTLResult("altmin", state["W"], rt.comm)
     res.record(0, state["W"])
-    state = rt.run_rounds(rounds, body, state, sharded=("W",),
-                          on_round=iterate_recorder(res, rounds, record_every))
+    state = rt.run_rounds(rounds, body, state, sharded=("W",), scan=scan,
+                          record=iterate_recorder(res, record_every))
     res.W = state["W"]
     res.extras["U"] = state["U"]
     return res

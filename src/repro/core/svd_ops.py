@@ -37,10 +37,11 @@ def leading_sv(G: jnp.ndarray, iters: int = 60, seed: int = 0
     v0 = v0 / jnp.maximum(jnp.linalg.norm(v0), 1e-30)
 
     def body(_, v):
-        u = G @ v
-        u = u / jnp.maximum(jnp.linalg.norm(u), 1e-30)
-        v = G.T @ u
-        return v / jnp.maximum(jnp.linalg.norm(v), 1e-30)
+        # One matvec pair, ONE normalization: iterating v <- G^T G v / ||.||
+        # needs no intermediate unit-norm u (its scale cancels in the
+        # normalization), halving the norm/divide traffic per step.
+        w = G.T @ (G @ v)
+        return w / jnp.maximum(jnp.linalg.norm(w), 1e-30)
 
     v = jax.lax.fori_loop(0, iters, body, v0)
     u = G @ v

@@ -1,0 +1,156 @@
+"""Per-loss dispatch for the worker hot path.
+
+Every round of every gradient-based solver has each worker evaluate
+per-task quantities of its local data — the gradient column
+``(1/n) X_j^T l'(X_j w_j)`` above all.  This module picks the cheapest
+correct implementation per loss and per backend:
+
+* ``gram``   — squared loss with cached per-task Gram statistics
+               ``A_j = X_j^T X_j / n``, ``b_j = X_j^T y_j / n``
+               (computed ONCE at :meth:`MTLProblem.make`): the gradient
+               is ``A_j w_j - b_j``, the Hessian is ``A_j`` — per-round
+               cost independent of ``n`` and no HBM traffic over the raw
+               ``(n, p)`` designs.
+* ``pallas`` — the fused :mod:`repro.kernels.mtl_grad` TPU kernel for
+               the raw path (logistic, or squared without Gram cache):
+               one streaming pass over ``X_j``, residuals never
+               round-trip to HBM.
+* ``xla``    — the reference vmap over :mod:`repro.core.linear_model`,
+               the CPU fallback and the oracle the other two are tested
+               against (``tests/test_kernels.py``).
+
+Every function takes the worker-local ``data`` dict the runtime binds
+into the round body (``Xs``/``ys`` plus ``gram_A``/``gram_b`` when
+cached), so the same call works inside vmap (sim) and shard_map (mesh).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import linear_model as lm
+from .losses import Loss
+
+
+def gram_stats(Xs: jnp.ndarray, ys: jnp.ndarray
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-task sufficient statistics for the squared loss.
+
+    Xs: (m, n, p); ys: (m, n)  ->  A (m, p, p), b (m, p) with
+    A_j = X_j^T X_j / n and b_j = X_j^T y_j / n.
+    """
+    n = Xs.shape[1]
+    A = jnp.einsum("jni,jnk->jik", Xs, Xs) / n
+    b = jnp.einsum("jni,jn->ji", Xs, ys) / n
+    return A, b
+
+
+def has_gram(data: Dict[str, jnp.ndarray]) -> bool:
+    return "gram_A" in data
+
+
+def _resolve_impl(loss: Loss, data: Dict[str, jnp.ndarray],
+                  impl: Optional[str]) -> str:
+    if impl is not None:
+        return impl
+    if loss.name == "squared" and has_gram(data):
+        return "gram"
+    if jax.default_backend() == "tpu" and loss.name in ("squared",
+                                                        "logistic"):
+        return "pallas"
+    return "xla"
+
+
+def grad_columns(loss: Loss, W_cols: jnp.ndarray,
+                 data: Dict[str, jnp.ndarray], l2: float = 0.0,
+                 impl: Optional[str] = None) -> jnp.ndarray:
+    """Per-task gradient columns ``grad L_nj(w_j)``: (p, L) from (p, L).
+
+    Callers apply the global objective's 1/m factor themselves (the
+    convention of :mod:`repro.core.linear_model`).
+    """
+    impl = _resolve_impl(loss, data, impl)
+    if impl == "gram":
+        G = jnp.einsum("jik,kj->ij", data["gram_A"], W_cols) \
+            - data["gram_b"].T
+    elif impl == "pallas":
+        from ..kernels.mtl_grad import task_gradients
+        G = task_gradients(data["Xs"], data["ys"], W_cols.T,
+                           loss=loss.name).T.astype(W_cols.dtype)
+    elif impl == "xla":
+        G = jax.vmap(lambda w, X, y: lm.task_grad(loss, w, X, y),
+                     in_axes=(1, 0, 0), out_axes=1)(
+            W_cols, data["Xs"], data["ys"])
+    else:
+        raise ValueError(f"unknown gradient impl {impl!r}; "
+                         "have 'gram', 'pallas', 'xla'")
+    if l2:
+        G = G + l2 * W_cols
+    return G
+
+
+def newton_columns(loss: Loss, W_cols: jnp.ndarray,
+                   data: Dict[str, jnp.ndarray], l2: float = 0.0,
+                   damping: float = 1e-6) -> jnp.ndarray:
+    """DNSP worker messages ``(hess L_nj)^-1 grad L_nj``: (p, L).
+
+    Squared loss with Gram cache: Hessian IS ``A_j`` — one (p, p) solve
+    per task, no pass over the raw data.
+    """
+    if loss.name == "squared" and has_gram(data):
+        p = W_cols.shape[0]
+        eye = jnp.eye(p, dtype=W_cols.dtype)
+
+        def one(A, b, w):
+            g = A @ w - b + l2 * w
+            return jnp.linalg.solve(A + (l2 + damping) * eye, g)
+
+        return jax.vmap(one, in_axes=(0, 0, 1), out_axes=1)(
+            data["gram_A"], data["gram_b"], W_cols)
+    return jax.vmap(
+        lambda w, X, y: lm.newton_direction(loss, w, X, y, l2, damping),
+        in_axes=(1, 0, 0), out_axes=1)(W_cols, data["Xs"], data["ys"])
+
+
+def ridge_columns(data: Dict[str, jnp.ndarray], l2: float) -> jnp.ndarray:
+    """Per-task ridge solutions (p, L) from the Gram cache (squared loss).
+
+    The Local baseline / proxgd "local" init without an O(n p^2) refit
+    per solve.  Requires ``gram_A``/``gram_b`` in ``data``.
+    """
+    A, b = data["gram_A"], data["gram_b"]
+    p = A.shape[-1]
+    eye = jnp.eye(p, dtype=A.dtype)
+    return jax.vmap(lambda Aj, bj: jnp.linalg.solve(Aj + l2 * eye, bj),
+                    in_axes=(0, 0), out_axes=1)(A, b)
+
+
+def projected_solves(loss: Loss, U: jnp.ndarray,
+                     data: Dict[str, jnp.ndarray], l2: float = 0.0,
+                     iters: int = 25) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """The DGSP/DNSP/AltMin re-fit ``v_j = argmin_v L_nj(U v)``.
+
+    Returns (W_cols (p, L), V (k, L)) with ``W = U V``.  Squared loss
+    with Gram cache: the projected normal equations are
+    ``U^T A_j U v = U^T b_j`` — cost k^2 p per task instead of n p k.
+    """
+    if loss.name == "squared" and has_gram(data):
+        k = U.shape[1]
+        eye = jnp.eye(k, dtype=U.dtype)
+
+        def one(A, b):
+            Ak = U.T @ (A @ U) + max(l2, 1e-9) * eye
+            return jnp.linalg.solve(Ak, U.T @ b)
+
+        V = jax.vmap(one, in_axes=(0, 0), out_axes=1)(
+            data["gram_A"], data["gram_b"])
+        return U @ V, V
+
+    def one(X, y):
+        return lm.projected_erm(loss, U, X, y, l2, iters)
+
+    W, V = jax.vmap(one, in_axes=(0, 0), out_axes=(1, 1))(
+        data["Xs"], data["ys"])
+    return W, V

@@ -6,9 +6,9 @@ local_slice / sum_tasks / gather_tasks / axis_index) and the driver
 the task axis, ``MeshRuntime`` as shard_map collectives over a real
 "tasks" mesh axis. See DESIGN.md.
 """
-from .base import ProtocolRuntime, make_runtime
+from .base import ProtocolRuntime, RecordSpec, make_runtime
 from .sim import SimRuntime
 from .mesh import MeshRuntime, task_mesh
 
-__all__ = ["ProtocolRuntime", "SimRuntime", "MeshRuntime", "task_mesh",
-           "make_runtime"]
+__all__ = ["ProtocolRuntime", "RecordSpec", "SimRuntime", "MeshRuntime",
+           "task_mesh", "make_runtime"]

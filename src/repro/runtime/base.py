@@ -36,19 +36,41 @@ single source of truth and cannot drift apart.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..core.comm import CommLog
 
-# A round body: (k, state, Xs, ys) -> state.  ``k`` is the (traced)
-# round index, ``state`` a flat dict of arrays, ``Xs``/``ys`` the
-# worker-local data view ((m,n,p)/(m,n) under sim; the per-chip shard
-# under mesh).
-RoundBody = Callable[[jnp.ndarray, Dict[str, jnp.ndarray], jnp.ndarray,
-                      jnp.ndarray], Dict[str, jnp.ndarray]]
+# A round body: (k, state, data) -> state.  ``k`` is the (traced) round
+# index, ``state`` a flat dict of arrays, ``data`` the worker-local data
+# view — a dict with at least ``Xs`` (m,n,p) / ``ys`` (m,n) plus any
+# cached per-task statistics (``gram_A``/``gram_b``), every leaf stacked
+# over the task axis (the full stack under sim; the per-chip shard under
+# mesh).
+RoundBody = Callable[[jnp.ndarray, Dict[str, jnp.ndarray],
+                      Dict[str, jnp.ndarray]], Dict[str, jnp.ndarray]]
+
+
+@dataclasses.dataclass
+class RecordSpec:
+    """Snapshot cadence for one state leaf, driver-mode agnostic.
+
+    ``sink.record(round, value)`` receives ``state[key]`` after every
+    ``every``-th round (and always after the final round) — host-side
+    per round under the eager driver, from the stacked scan outputs
+    under the scanned driver.  Replaces the old ``on_round`` callback,
+    which could not exist inside a fused ``lax.scan`` round loop.
+    """
+    sink: object          # anything with .record(rnd: int, value)
+    every: int = 1
+    key: str = "W"
+
+    def snap_rounds(self, rounds: int) -> List[int]:
+        """0-indexed rounds whose post-state is snapshotted (static)."""
+        return [t for t in range(rounds)
+                if (t + 1) % self.every == 0 or t == rounds - 1]
 
 
 @dataclasses.dataclass
@@ -207,14 +229,103 @@ class ProtocolRuntime:
     # ------------------------------------------------------------------
     # drivers
     # ------------------------------------------------------------------
+    def _worker_data(self) -> Dict[str, jnp.ndarray]:
+        """The data dict bound as step arguments (never closure
+        constants, so XLA cannot constant-fold cached Gram matrices)."""
+        wd = getattr(self.prob, "worker_data", None)
+        return wd() if wd is not None else {"Xs": self.prob.Xs,
+                                            "ys": self.prob.ys}
+
     def _compile(self, body: RoundBody, state, sharded):
         """Return step(t:int, state) -> state with data bound as args."""
         raise NotImplementedError
 
+    def _compile_scan(self, body: RoundBody, state, sharded, rounds: int,
+                      record: Optional[RecordSpec]):
+        """Return fn(state) -> (state, snaps) running ALL rounds in one
+        device-resident ``lax.scan`` (snaps stacked over snapshot index;
+        () when ``record`` is None)."""
+        raise NotImplementedError
+
+    def _scan_program(self, body: RoundBody, rounds: int,
+                      record: Optional[RecordSpec]):
+        """The backend-shared scan core: program(state, data) ->
+        (state, snaps).
+
+        Snapshots are written into a preallocated (n_snaps, ...) buffer
+        carried through the scan — stacked scan outputs replace the
+        eager driver's host-side record callback, so ``record_every``
+        histories survive the fusion without materializing every round.
+        The per-round write slots are derived from the SAME
+        ``snap_rounds`` list the driver uses to size the buffer and map
+        snapshots back to round numbers — one source of truth for the
+        cadence.
+        """
+        if record is not None:
+            snap_at = record.snap_rounds(rounds)
+            slots = [-1] * rounds            # slots[t] = snapshot index
+            for i, t in enumerate(snap_at):
+                slots[t] = i
+
+        def program(state, data):
+            ks = jnp.arange(rounds, dtype=jnp.int32)
+            if record is None:
+                def step(st, k):
+                    return body(k, st, data), None
+                state, _ = jax.lax.scan(step, state, ks)
+                return state, ()
+
+            leaf = state[record.key]
+            snaps0 = jnp.zeros((len(snap_at),) + leaf.shape, leaf.dtype)
+            slot_of = jnp.asarray(slots, jnp.int32)
+
+            def step(carry, k):
+                st, snaps = carry
+                st = body(k, st, data)
+                slot = slot_of[k]
+                snaps = jax.lax.cond(
+                    slot >= 0,
+                    lambda s: jax.lax.dynamic_update_index_in_dim(
+                        s, st[record.key], slot, 0),
+                    lambda s: s, snaps)
+                return (st, snaps), None
+
+            (state, snaps), _ = jax.lax.scan(step, (state, snaps0), ks)
+            return state, snaps
+
+        return program
+
+    @staticmethod
+    def _state_donation():
+        """argnums donating the state arg of the fused scan call (arg 0).
+        CPU jit does not support buffer donation; skip there."""
+        return () if jax.default_backend() == "cpu" else (0,)
+
+    @staticmethod
+    def _shield_donated(state, donate):
+        """Copy state leaves once before a donating call.  The scanned
+        driver consumes its ``state`` argument, but callers may still
+        hold references to the INITIAL leaves (e.g. the round-0 snapshot
+        in an MTLResult) — a one-time (p, m) copy against ``rounds`` of
+        in-place carry updates."""
+        if not donate:
+            return state
+        return jax.tree.map(lambda x: jnp.array(x, copy=True), state)
+
+    def _claim(self) -> None:
+        if self._used:
+            raise RuntimeError(
+                "a ProtocolRuntime carries one solve's ledger and cannot "
+                "be reused — its CommLog and collective-traffic counters "
+                "would accumulate across solves; construct a fresh runtime "
+                "(or let repro.solve build one) per call")
+        self._used = True
+
     def run_rounds(self, rounds: int, body: RoundBody,
                    state: Dict[str, jnp.ndarray],
                    sharded: Sequence[str] = (),
-                   on_round=None, count_rounds: bool = True
+                   record: Optional[RecordSpec] = None,
+                   count_rounds: bool = True, scan: bool = False
                    ) -> Dict[str, jnp.ndarray]:
         """Execute ``rounds`` protocol rounds of ``body``.
 
@@ -224,37 +335,50 @@ class ProtocolRuntime:
         replicated master state.  Returned/recorded state is always
         global, so callers never see backend-specific shapes.
 
-        The first execution traces the body; the primitive calls
-        recorded during that trace become the per-round communication
-        template replayed into ``self.comm`` after every round (every
-        round of one solver runs the same collectives — a property of
-        all Table-1 protocols).  ``on_round(t, state)`` runs host-side
-        after each round (snapshotting iterates, etc.).
+        ``scan=False`` dispatches one jitted step per round from a host
+        loop; ``scan=True`` fuses the whole round loop into a single
+        device-resident ``lax.scan`` call (donated state buffers, one
+        dispatch per solve).  Both drivers share one accounting story:
+        the body is traced exactly once, the primitive calls recorded
+        during that trace become the per-round communication template,
+        and the driver replays ``template × rounds`` into ``self.comm``
+        — valid because every round of one solver runs the same
+        collectives (the static round structure of all Table-1
+        protocols, DESIGN.md §5), so the ledger is bit-identical across
+        drivers by construction.  ``record`` snapshots one state leaf on
+        a ``record_every`` cadence in either mode.
         """
-        if self._used:
-            raise RuntimeError(
-                "a ProtocolRuntime carries one solve's ledger and cannot "
-                "be reused — its CommLog and collective-traffic counters "
-                "would accumulate across solves; construct a fresh runtime "
-                "(or let repro.solve build one) per call")
-        self._used = True
-        step = self._compile(body, state, tuple(sharded))
+        self._claim()
         self._template = []
         self._recording = True
+        if scan:
+            fn = self._compile_scan(body, state, tuple(sharded), rounds,
+                                    record)
+            state, snaps = fn(state)    # traces once: records the template
+            self._recording = False
+            for _ in range(rounds):
+                self._replay_round(count_rounds)
+            if record is not None:
+                for i, t in enumerate(record.snap_rounds(rounds)):
+                    record.sink.record(t + 1, snaps[i])
+            return state
+
+        step = self._compile(body, state, tuple(sharded))
+        snap_at = set(record.snap_rounds(rounds)) if record else ()
         for t in range(rounds):
             state = step(t, state)   # first call traces + records
             self._recording = False
             self._replay_round(count_rounds)
-            if on_round is not None:
-                on_round(t, state)
+            if record is not None and t in snap_at:
+                record.sink.record(t + 1, state[record.key])
         return state
 
     def one_shot(self, body: RoundBody, state: Dict[str, jnp.ndarray],
-                 sharded: Sequence[str] = (), count_round: bool = True
-                 ) -> Dict[str, jnp.ndarray]:
+                 sharded: Sequence[str] = (), count_round: bool = True,
+                 scan: bool = False) -> Dict[str, jnp.ndarray]:
         """Single protocol exchange (the one-shot baselines)."""
         return self.run_rounds(1, body, state, sharded=sharded,
-                               count_rounds=count_round)
+                               count_rounds=count_round, scan=scan)
 
 
 def make_runtime(backend: str, prob, *, mesh=None, axis: str = "tasks"

@@ -88,8 +88,8 @@ class MeshRuntime(ProtocolRuntime):
         self._charge("worker->master", vectors, dim, note, wire=x.size)
         return jax.lax.psum(jnp.sum(x, axis=0), self.axis)
 
-    def _compile(self, body, state, sharded):
-        axis, mesh = self.axis, self.mesh
+    def _specs(self, state, sharded):
+        axis = self.axis
 
         def spec(leaf, shard_it):
             nd = jnp.ndim(leaf)
@@ -98,15 +98,35 @@ class MeshRuntime(ProtocolRuntime):
             return P(*([None] * nd))
 
         state_specs = {n: spec(v, n in sharded) for n, v in state.items()}
-        data_spec = lambda a: P(axis, *([None] * (jnp.ndim(a) - 1)))
+        data = self._worker_data()
+        # every data leaf is a per-task stack: sharded along axis 0
+        data_specs = {n: P(axis, *([None] * (jnp.ndim(v) - 1)))
+                      for n, v in data.items()}
+        return state_specs, data, data_specs
 
-        fn = shard_map(lambda k, s, Xs, ys: body(k, s, Xs, ys),
-                       mesh=mesh,
-                       in_specs=(P(), state_specs,
-                                 data_spec(self.prob.Xs),
-                                 data_spec(self.prob.ys)),
+    def _compile(self, body, state, sharded):
+        state_specs, data, data_specs = self._specs(state, sharded)
+        fn = shard_map(lambda k, s, d: body(k, s, d),
+                       mesh=self.mesh,
+                       in_specs=(P(), state_specs, data_specs),
                        out_specs=state_specs,
                        **_NO_REP_CHECK)
         step = jax.jit(fn)
-        prob = self.prob
-        return lambda t, s: step(jnp.int32(t), s, prob.Xs, prob.ys)
+        return lambda t, s: step(jnp.int32(t), s, data)
+
+    def _compile_scan(self, body, state, sharded, rounds, record):
+        state_specs, data, data_specs = self._specs(state, sharded)
+        program = self._scan_program(body, rounds, record)
+        if record is None:
+            snaps_spec = ()
+        else:
+            leaf_spec = state_specs[record.key]
+            snaps_spec = P(None, *leaf_spec)   # leading snapshot axis
+        fn = shard_map(program,
+                       mesh=self.mesh,
+                       in_specs=(state_specs, data_specs),
+                       out_specs=(state_specs, snaps_spec),
+                       **_NO_REP_CHECK)
+        donate = self._state_donation()
+        step = jax.jit(fn, donate_argnums=donate)
+        return lambda s: step(self._shield_donated(s, donate), data)

@@ -45,8 +45,15 @@ class SimRuntime(ProtocolRuntime):
         # Data enters as jit ARGUMENTS (not closure constants) so XLA
         # does not constant-fold per-task Gram matrices at compile time.
         @jax.jit
-        def step(k, state, Xs, ys):
-            return body(k, state, Xs, ys)
+        def step(k, state, data):
+            return body(k, state, data)
 
-        prob = self.prob
-        return lambda t, s: step(jnp.int32(t), s, prob.Xs, prob.ys)
+        data = self._worker_data()
+        return lambda t, s: step(jnp.int32(t), s, data)
+
+    def _compile_scan(self, body, state, sharded, rounds, record):
+        program = self._scan_program(body, rounds, record)
+        data = self._worker_data()
+        donate = self._state_donation()
+        step = jax.jit(program, donate_argnums=donate)
+        return lambda s: step(self._shield_donated(s, donate), data)

@@ -1,15 +1,22 @@
-"""Cross-backend parity matrix: every registered solver, sim vs mesh.
+"""Cross-backend and cross-driver parity matrix for every solver.
 
-The tentpole invariant of repro.runtime: a solver body written against
-the protocol primitives produces (i) the same predictors, (ii) the same
-communication ledger on every backend, and (iii) mesh-measured
-collective traffic that equals the ledger's worker->master floats times
-tasks-per-chip — all three by construction, checked here empirically.
+Two tentpole invariants of repro.runtime are checked empirically here:
+
+* backend parity — a solver body written against the protocol
+  primitives produces (i) the same predictors, (ii) the same
+  communication ledger on every backend, and (iii) mesh-measured
+  collective traffic that equals the ledger's worker->master floats
+  times tasks-per-chip;
+* driver parity — the fused ``lax.scan`` driver (``scan=True``) and the
+  eager one-dispatch-per-round driver produce the same final ``W``, the
+  same snapshot history, a bit-identical CommLog ledger, and identical
+  ``collective_floats_per_chip`` on BOTH backends (the analytic
+  template×rounds replay, DESIGN.md §7).
 
 The matrix runs once in a subprocess (4 simulated devices via
-XLA_FLAGS), printing one machine-readable line per solver; the
-parametrized tests then assert on their own solver's line, so a failure
-names the offending method.
+XLA_FLAGS), printing one machine-readable line per solver per check;
+the parametrized tests then assert on their own solver's line, so a
+failure names the offending method.
 """
 import os
 import subprocess
@@ -36,12 +43,14 @@ SCRIPT = textwrap.dedent("""
     Ustar = jnp.linalg.svd(Wstar, full_matrices=False)[0][:, :3]
     per_chip = prob.m // len(jax.devices())
 
+    # record_every != 1 on a couple of cases so the scanned driver's
+    # stacked-snapshot cadence is exercised, not just the every-round one.
     CASES = {
         "local": {}, "svd_trunc": {}, "bestrep": {"U_star": Ustar},
         "centralize": {"lam": 0.01, "iters": 100},
-        "proxgd": {"lam": 0.01, "rounds": 8},
+        "proxgd": {"lam": 0.01, "rounds": 8, "record_every": 3},
         "accproxgd": {"lam": 0.01, "rounds": 8},
-        "admm": {"lam": 0.01, "rho": 0.5, "rounds": 6},
+        "admm": {"lam": 0.01, "rho": 0.5, "rounds": 6, "record_every": 2},
         "dfw": {"rounds": 6},
         "dgsp": {"rounds": 3},
         "dnsp": {"rounds": 3, "damping": 0.5, "l2": 1e-3},
@@ -63,19 +72,37 @@ SCRIPT = textwrap.dedent("""
         "altmin": {"rounds": 2, "u_grad_steps": 5},
     }
 
+    def ledger(res):
+        return [(e.round, e.direction, e.vectors, e.dim, e.note)
+                for e in res.comm.events]
+
     def check(tag, problem, name, kw):
-        rs = repro.solve(problem, method=name, backend="sim", **kw)
-        rm = repro.solve(problem, method=name, backend="mesh", **kw)
+        runs = {(b, s): repro.solve(problem, method=name, backend=b,
+                                    scan=s, **kw)
+                for b in ("sim", "mesh") for s in (False, True)}
+        rs, rm = runs[("sim", True)], runs[("mesh", True)]
         err = float(jnp.max(jnp.abs(rs.W - rm.W)))
         ledger_eq = (rs.comm.summary() == rm.comm.summary()
-                     and [ (e.round, e.direction, e.vectors, e.dim)
-                           for e in rs.comm.events ]
-                     == [ (e.round, e.direction, e.vectors, e.dim)
-                           for e in rm.comm.events ])
+                     and ledger(rs) == ledger(rm))
         meas = rm.extras["collective_floats_per_chip"]
         expect = rm.comm.floats_by_direction("worker->master") * per_chip
         print(f"{tag} {name} err={err:.3e} ledger_eq={int(ledger_eq)} "
               f"meas={meas} expect={expect}")
+        for b in ("sim", "mesh"):
+            re_, rsc = runs[(b, False)], runs[(b, True)]
+            werr = float(jnp.max(jnp.abs(re_.W - rsc.W)))
+            hist_eq = (re_.rounds_axis == rsc.rounds_axis
+                       and len(re_.iterates) == len(rsc.iterates))
+            hist_err = max((float(jnp.max(jnp.abs(a - b_)))
+                            for a, b_ in zip(re_.iterates, rsc.iterates)),
+                           default=0.0)
+            leq = (ledger(re_) == ledger(rsc)
+                   and re_.comm.rounds == rsc.comm.rounds)
+            ceq = (re_.extras["collective_floats_per_chip"]
+                   == rsc.extras["collective_floats_per_chip"])
+            print(f"SCANEQ {b} {tag} {name} werr={werr:.3e} "
+                  f"hist_eq={int(hist_eq)} hist_err={hist_err:.3e} "
+                  f"ledger_eq={int(leq)} coll_eq={int(ceq)}")
 
     for name, kw in CASES.items():
         check("PARITY", prob, name, kw)
@@ -90,13 +117,18 @@ def parity_lines():
     env["PYTHONPATH"] = os.path.abspath(
         os.path.join(os.path.dirname(__file__), "..", "src"))
     out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
-                         capture_output=True, text=True, timeout=900)
+                         capture_output=True, text=True, timeout=1500)
     assert out.returncode == 0, out.stdout + out.stderr
-    return {
-        (line.split()[0], line.split()[1]):
-            dict(kv.split("=") for kv in line.split()[2:])
-        for line in out.stdout.splitlines()
-        if line.startswith(("PARITY ", "PARITYL "))}
+    lines = {}
+    for line in out.stdout.splitlines():
+        toks = line.split()
+        if line.startswith(("PARITY ", "PARITYL ")):
+            lines[(toks[0], toks[1])] = dict(
+                kv.split("=") for kv in toks[2:])
+        elif line.startswith("SCANEQ "):
+            lines[("SCANEQ", toks[1], toks[2], toks[3])] = dict(
+                kv.split("=") for kv in toks[4:])
+    return lines
 
 
 # the loss-specific worker branches re-checked on a logistic problem
@@ -136,3 +168,21 @@ def test_measured_collectives_match_ledger(parity_lines, tag, solver):
     per machine x tasks-per-chip (the Table-1 cross-check)."""
     row = parity_lines[(tag, solver)]
     assert row["meas"] == row["expect"], row
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", ["sim", "mesh"])
+@pytest.mark.parametrize("tag,solver",
+                         [("PARITY", s) for s in SOLVERS]
+                         + [("PARITYL", s) for s in LOGISTIC_SOLVERS])
+def test_scanned_equals_eager(parity_lines, backend, tag, solver):
+    """The fused lax.scan driver reproduces the eager per-round driver:
+    final W and snapshot history to float-fusion tolerance, CommLog
+    ledger and measured collective floats EXACTLY (the template×rounds
+    replay is analytic, DESIGN.md §7)."""
+    row = parity_lines[("SCANEQ", backend, tag, solver)]
+    assert float(row["werr"]) < 1e-6, row
+    assert row["hist_eq"] == "1", row
+    assert float(row["hist_err"]) < 1e-6, row
+    assert row["ledger_eq"] == "1", row
+    assert row["coll_eq"] == "1", row

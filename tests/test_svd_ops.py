@@ -18,13 +18,16 @@ def _mat(p=20, m=10, seed=0, rank=None):
 
 @pytest.mark.parametrize("seed", range(4))
 def test_leading_sv_matches_full_svd(seed):
+    # tolerance tightened from 1e-4 after the one-normalization-per-step
+    # restructuring of the power iteration (iterating on G^T G doubles
+    # the convergence rate per matvec pair) — guards numeric drift.
     M = _mat(seed=seed)
     u, s, v = svd_ops.leading_sv(M, iters=200)
     U, S, Vt = jnp.linalg.svd(M, full_matrices=False)
-    np.testing.assert_allclose(float(s), float(S[0]), rtol=1e-4)
+    np.testing.assert_allclose(float(s), float(S[0]), rtol=1e-5)
     # direction up to sign
-    assert abs(float(u @ U[:, 0])) > 1 - 1e-4
-    assert abs(float(v @ Vt[0, :])) > 1 - 1e-4
+    assert abs(float(u @ U[:, 0])) > 1 - 1e-5
+    assert abs(float(v @ Vt[0, :])) > 1 - 1e-5
 
 
 def test_leading_sv_unit_norm_and_deterministic():
