@@ -12,7 +12,8 @@ from .runtime.base import ProtocolRuntime, make_runtime
 
 
 def solve(prob, method: str = "dgsp", backend: str = "sim", *,
-          mesh=None, axis: str = "tasks", rounds: Optional[int] = None,
+          mesh=None, axis: str = "tasks", data_shards: int = 1,
+          data_axis: str = "data", rounds: Optional[int] = None,
           scan: Optional[bool] = None,
           runtime: Optional[ProtocolRuntime] = None, **hp):
     """Run one registered solver on one backend.
@@ -20,11 +21,27 @@ def solve(prob, method: str = "dgsp", backend: str = "sim", *,
     Parameters
     ----------
     prob: MTLProblem — the per-task datasets + structural constants.
+        Built with ``MTLProblem.make(..., gram=True)`` (the default)
+        the squared-loss worker path uses cached per-task Gram
+        statistics, making every round O(p²) per task independent of n;
+        ``gram=False`` keeps the raw ``(n, p)`` path (DESIGN.md §7).
     method: registry name (``repro.core.solver_names()``).
     backend: "sim" (vmap over the task axis, single process) or "mesh"
         (shard_map over a real "tasks" mesh axis, replicated master).
     mesh / axis: mesh backend only — the device mesh (defaults to all
-        devices) and the task axis name.
+        devices) and the task axis name.  Pass a 2-D mesh from
+        ``repro.runtime.task_data_mesh`` (or just ``data_shards=``) to
+        shard within tasks.
+    data_shards: shard each task's n samples across this many devices
+        along a second ``data_axis`` mesh axis (DESIGN.md §8) — the
+        large-n scaling lever: per-task sample statistics are reduced
+        over the data axis (Gram cache: one psum of per-shard partial
+        Grams per solve; raw paths: pmean per use), while tasks-axis
+        semantics — and the CommLog — are unchanged.  Under
+        ``backend="sim"`` the data axis is emulated with a reshaped
+        ``vmap`` so 2-D runs are testable on one device.  Default 1
+        (the paper's one-machine-per-task layout).
+    data_axis: name of the data mesh axis (2-D mesh backend only).
     rounds: communication rounds, forwarded when given (one-shot
         baselines take none).
     scan: True (the default inside every solver) fuses the whole round
@@ -36,24 +53,36 @@ def solve(prob, method: str = "dgsp", backend: str = "sim", *,
     **hp: solver hyper-parameters (lam, eta, damping, ...).
 
     Returns the solver's MTLResult; ``result.comm`` is the protocol
-    ledger and ``result.extras`` carries ``backend`` plus the measured
-    ``collective_floats_per_chip`` — worker->master protocol floats the
-    chip's simulated machines fed into collectives (the all-gather
-    payload; psum contributions counted before the chip's local
-    pre-reduction). Equals the ledger's worker->master floats x
-    tasks-per-chip by construction; 0 under sim where no collective
-    runs.
+    ledger — ALWAYS in the paper's Table-1 tasks-axis units, and
+    bit-identical across backends, drivers and ``data_shards`` —
+    and ``result.extras`` carries:
+
+    * ``backend`` / ``data_shards`` — how the solve executed;
+    * ``collective_floats_per_chip`` — measured worker->master protocol
+      floats the chip's simulated machines fed into tasks-axis
+      collectives (the all-gather payload; psum contributions counted
+      before the chip's local pre-reduction).  Equals the ledger's
+      worker->master floats x tasks-per-chip by construction; 0 under
+      sim where no collective runs.
+    * ``data_collective_floats_per_chip`` — measured data-axis
+      collective floats per chip (Gram-cache psum + raw-path
+      reductions).  Never charged to the ledger; 0 under sim or when
+      ``data_shards == 1``.
     """
     from .core.methods import get_solver
 
     if runtime is None:
-        runtime = make_runtime(backend, prob, mesh=mesh, axis=axis)
+        runtime = make_runtime(backend, prob, mesh=mesh, axis=axis,
+                               data_axis=data_axis, data_shards=data_shards)
     if rounds is not None:
         hp["rounds"] = rounds
     if scan is not None:
         hp["scan"] = scan
     res = get_solver(method)(prob, runtime=runtime, **hp)
     res.extras["backend"] = runtime.name
+    res.extras["data_shards"] = runtime.data_shards
     res.extras["collective_floats_per_chip"] = \
         runtime.collective_floats_per_chip
+    res.extras["data_collective_floats_per_chip"] = \
+        runtime.data_collective_floats_per_chip
     return res

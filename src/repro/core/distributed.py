@@ -1,13 +1,19 @@
 """Compatibility shims for the old hand-written shard_map entry points.
 
-The real implementation lives in ``repro.runtime`` (one protocol API,
-``SimRuntime``/``MeshRuntime`` backends) and the solvers in
-``core/methods`` — every solver now runs on a real "tasks" mesh axis via
-``repro.solve(prob, method=..., backend="mesh")``.  This module keeps
-the historical ``dgsp_distributed`` / ``proxgd_distributed`` signatures
-as thin wrappers over that front door; no round-body logic is duplicated
-here (see DESIGN.md §4 for the replicated-master pattern the mesh
-backend implements).
+No distributed logic lives here anymore.  The protocol runtime is
+``repro.runtime`` (``ProtocolRuntime`` primitives with ``SimRuntime`` /
+``MeshRuntime`` backends — 1-D over a "tasks" axis or 2-D over
+``("tasks", "data")``, DESIGN.md §3-4, §8), the solver bodies live in
+``core/methods``, and the supported entry point is
+
+    repro.solve(prob, method=..., backend="mesh",
+                data_shards=...)            # optional within-task sharding
+
+This module only preserves the historical ``dgsp_distributed`` /
+``proxgd_distributed`` call signatures as thin wrappers over that front
+door, returning the historical ``DistributedResult`` shape; both now
+also accept ``data_shards=`` and forward it.  New code should call
+``repro.solve`` directly.
 """
 from __future__ import annotations
 
@@ -17,12 +23,17 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 
 from ..api import solve
-from ..runtime.mesh import MeshRuntime, task_mesh  # noqa: F401 (re-export)
+from ..runtime.mesh import (MeshRuntime, task_mesh,  # noqa: F401 (re-export)
+                            task_data_mesh)
 from .methods.base import MTLProblem
 
 
 @dataclasses.dataclass
 class DistributedResult:
+    """The shim-era result: final predictors + the measured tasks-axis
+    collective traffic (``repro.solve`` returns the richer MTLResult —
+    ledger, iterates, per-axis traffic — this keeps only what the
+    historical callers read)."""
     W: jnp.ndarray
     U: jnp.ndarray | None
     rounds: int
@@ -32,13 +43,17 @@ class DistributedResult:
 def dgsp_distributed(prob: MTLProblem, rounds: int, mesh: Mesh,
                      axis: str = "tasks", l2: float = 0.0,
                      sv_iters: int = 60, newton: bool = False,
-                     damping: float = 1e-4) -> DistributedResult:
-    """DGSP/DNSP with the task axis on a device mesh (compat shim)."""
+                     damping: float = 1e-4,
+                     data_shards: int = 1) -> DistributedResult:
+    """DGSP (or DNSP with ``newton=True``) on a device mesh — a compat
+    wrapper over ``repro.solve(..., backend="mesh")``.  ``mesh`` may be
+    1-D over ``axis`` or 2-D with a "data" axis (``task_data_mesh``);
+    ``data_shards`` forwards to the runtime (see DESIGN.md §8)."""
     kw = dict(rounds=rounds, sv_iters=sv_iters, l2=l2)
     if newton:
         kw["damping"] = damping
     res = solve(prob, method="dnsp" if newton else "dgsp", backend="mesh",
-                mesh=mesh, axis=axis, **kw)
+                mesh=mesh, axis=axis, data_shards=data_shards, **kw)
     U = res.extras["U"] * res.extras["mask"][None, :]
     return DistributedResult(
         W=res.W, U=U, rounds=rounds,
@@ -47,11 +62,14 @@ def dgsp_distributed(prob: MTLProblem, rounds: int, mesh: Mesh,
 
 def proxgd_distributed(prob: MTLProblem, rounds: int, mesh: Mesh,
                        axis: str = "tasks", lam: float = 1e-3,
-                       eta: float | None = None) -> DistributedResult:
-    """Distributed proximal gradient (compat shim; starts from W = 0 as
-    the historical implementation did)."""
+                       eta: float | None = None,
+                       data_shards: int = 1) -> DistributedResult:
+    """Distributed proximal gradient (Algorithm 4) on a device mesh — a
+    compat wrapper over ``repro.solve``.  Starts from W = 0 as the
+    historical implementation did; ``data_shards`` as above."""
     res = solve(prob, method="proxgd", backend="mesh", mesh=mesh, axis=axis,
-                rounds=rounds, lam=lam, eta=eta, init="zeros")
+                data_shards=data_shards, rounds=rounds, lam=lam, eta=eta,
+                init="zeros")
     return DistributedResult(
         W=res.W, U=None, rounds=rounds,
         collective_floats_per_chip=res.extras["collective_floats_per_chip"])

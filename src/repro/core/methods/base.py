@@ -51,7 +51,12 @@ class MTLProblem:
 
     def worker_data(self) -> Dict[str, jnp.ndarray]:
         """The per-task data leaves the runtime binds into round bodies
-        (each stacked over the task axis; sharded along it under mesh)."""
+        (each stacked over the task axis; sharded along it under mesh).
+        ``Xs``/``ys`` carry the per-task SAMPLE axis at position 1 —
+        under a 2-D runtime (``data_shards > 1``) that axis is
+        additionally sharded across the "data" mesh axis, and the Gram
+        leaves are REPLACED by a psum of per-shard partial Grams
+        (``runtime.SAMPLE_AXIS_LEAVES``, DESIGN.md §8)."""
         d = {"Xs": self.Xs, "ys": self.ys}
         if self.gram_A is not None:
             d["gram_A"], d["gram_b"] = self.gram_A, self.gram_b
@@ -60,9 +65,13 @@ class MTLProblem:
     @classmethod
     def make(cls, Xs, ys, loss_name: str = "squared", gram: bool = True,
              **kw) -> "MTLProblem":
-        """``gram=True`` (default) precomputes the per-task Gram cache
-        for the squared loss; ``gram=False`` keeps the raw-data path
-        (the pre-cache baseline, kept for benchmarks and fallback)."""
+        """Build a problem from stacked per-task data.
+
+        ``gram=True`` (default) precomputes the per-task Gram cache for
+        the squared loss, making every solver round O(p²) per task
+        independent of n; ``gram=False`` keeps the raw-data path (the
+        pre-cache baseline, kept for benchmarks and fallback — and the
+        path exercised per-round by the data axis, DESIGN.md §7-8)."""
         Xs, ys = jnp.asarray(Xs), jnp.asarray(ys)
         loss = get_loss(loss_name)
         prob = cls(Xs=Xs, ys=ys, loss=loss, **kw)

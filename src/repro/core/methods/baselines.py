@@ -19,24 +19,14 @@ from ..svd_ops import sv_shrink, svd_truncate, nuclear_norm
 from .base import MTLProblem, MTLResult, default_runtime, register
 
 
-def _local_fit(prob: MTLProblem, l2: float):
-    """Per-task constrained ERM (Prop 2.2): solve, then project to the
-    A-ball. The atomic worker computation shared by Local / SVD-trunc
-    (the raw-data path; squared loss with a Gram cache goes through
-    ``_local_columns`` instead)."""
-    def one(X, y):
-        return lm.project_l2_ball(lm.erm(prob.loss, X, y, l2), prob.A)
-    return one
-
-
-def _local_columns(prob: MTLProblem, data, l2: float) -> jnp.ndarray:
-    """Worker-local constrained ERM columns (p, L), Gram-dispatched."""
-    if prob.loss.name == "squared" and worker_ops.has_gram(data):
-        W = worker_ops.ridge_columns(data, l2)
-        return jax.vmap(lambda w: lm.project_l2_ball(w, prob.A),
-                        in_axes=1, out_axes=1)(W)
-    one = _local_fit(prob, l2)
-    return jax.vmap(one, in_axes=(0, 0), out_axes=1)(data["Xs"], data["ys"])
+def _local_columns(prob: MTLProblem, data, l2: float, rt=None) -> jnp.ndarray:
+    """Worker-local constrained ERM columns (p, L): solve (Prop 2.2),
+    then project to the A-ball.  The ERM solve dispatches through
+    ``worker_ops.erm_columns`` (Gram cache / closed form / Newton, with
+    data-axis reductions when ``rt`` is a 2-D runtime)."""
+    W = worker_ops.erm_columns(prob.loss, data, l2, rt=rt)
+    return jax.vmap(lambda w: lm.project_l2_ball(w, prob.A),
+                    in_axes=1, out_axes=1)(W)
 
 
 def _local_W(prob: MTLProblem, l2: float) -> jnp.ndarray:
@@ -52,7 +42,7 @@ def local(prob: MTLProblem, l2: float = 1e-6, runtime=None,
     l2 = max(l2, prob.l2)
 
     def body(k, state, data):
-        return {"W": _local_columns(prob, data, l2)}
+        return {"W": _local_columns(prob, data, l2, rt=rt)}
 
     state = rt.one_shot(body, {"W": jnp.zeros((prob.p, prob.m),
                                               prob.Xs.dtype)},
@@ -75,7 +65,7 @@ def svd_trunc(prob: MTLProblem, l2: float = 1e-6, rank: int | None = None,
     r = int(rank if rank is not None else prob.r)
 
     def body(k, state, data):
-        W_local = _local_columns(prob, data, l2)
+        W_local = _local_columns(prob, data, l2, rt=rt)
         W_full = rt.gather_columns(W_local, "local solution")
         W_t = svd_truncate(W_full, r)
         return {"W": rt.broadcast(W_t, "truncated column")}
@@ -96,7 +86,8 @@ def bestrep(prob: MTLProblem, U_star: jnp.ndarray = None, runtime=None,
     rt = default_runtime(prob, runtime)
 
     def body(k, state, data):
-        W, _ = worker_ops.projected_solves(prob.loss, U_star, data, prob.l2)
+        W, _ = worker_ops.projected_solves(prob.loss, U_star, data, prob.l2,
+                                           rt=rt)
         return {"W": W}
 
     state = rt.one_shot(body, {"W": jnp.zeros((prob.p, prob.m),
@@ -128,7 +119,11 @@ def centralize(prob: MTLProblem, lam: float = None, iters: int = 400,
 
     def body(k, state, data):
         Xs, ys = data["Xs"], data["ys"]
-        Xy = jnp.concatenate([Xs, ys[..., None]], axis=-1)   # (L, n, p+1)
+        Xy = jnp.concatenate([Xs, ys[..., None]], axis=-1)   # (L, n', p+1)
+        # under 2-D sharding the rows live across data shards: rebuild
+        # the full sample axis first (measured, uncharged) so the
+        # charged tasks-axis shipment keeps its Table-1 shape
+        Xy = rt.gather_samples(Xy, axis=1, note="sample shards")
         Xy = rt.gather_tasks(Xy, "ship all local data")       # (m, n, p+1)
         Xs_full, ys_full = Xy[..., :-1], Xy[..., -1]
 

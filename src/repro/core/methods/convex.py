@@ -70,10 +70,14 @@ def _init_W(prob: MTLProblem, init: str) -> jnp.ndarray:
 
 
 def _grad_columns(rt, prob, Z, data, note):
-    """Workers differentiate their local columns of Z; master gathers."""
+    """Workers differentiate their local columns of Z; master gathers.
+
+    The worker_ops dispatch receives the runtime so raw-path gradients
+    computed on a data shard are pmean-reduced over the data axis
+    before the (tasks-axis, charged) gather."""
     Z_local = rt.local_slice(Z)
     G_local = worker_ops.grad_columns(prob.loss, Z_local, data,
-                                      prob.l2) / prob.m
+                                      prob.l2, rt=rt) / prob.m
     return rt.gather_columns(G_local, note)
 
 
@@ -139,45 +143,20 @@ def admm(prob: MTLProblem, lam: float = 1e-3, rho: float = 1.0,
     """Appendix A. Worker step (A.1) is a regularized ERM:
         w_j+ = argmin_w L_nj(w)/m + <w - z_j, q_j> + rho/2 ||w - z_j||^2.
     Squared loss: closed form (from the Gram cache when present —
-    per-round cost independent of n). Logistic: a few Newton steps
-    (strongly convex objective, Newton converges fast).
+    per-round cost independent of n; from data-axis-reduced moments
+    under 2-D sharding). Logistic: a few Newton steps (strongly convex
+    objective, Newton converges fast), reducing per step across data
+    shards.  All of it dispatched by ``worker_ops.prox_columns``.
     """
     rt = default_runtime(prob, runtime)
     loss, m, p = prob.loss, prob.m, prob.p
-    use_gram = loss.name == "squared" and prob.gram_A is not None
-
-    def solve_gram(A, b, z, q):
-        Amat = A / m + (rho + prob.l2 / m) * jnp.eye(p, dtype=A.dtype)
-        return jnp.linalg.solve(Amat, b / m + rho * z - q)
-
-    def worker_solve(X, y, z, q, w0):
-        from .. import linear_model as lm
-        n = X.shape[0]
-        if loss.name == "squared":
-            Amat = X.T @ X / (n * m) \
-                + (rho + prob.l2 / m) * jnp.eye(p, dtype=X.dtype)
-            b = X.T @ y / (n * m) + rho * z - q
-            return jnp.linalg.solve(Amat, b)
-
-        def newton(_, w):
-            g = lm.task_grad(loss, w, X, y, prob.l2) / m + q + rho * (w - z)
-            H = lm.task_hessian(loss, w, X, y, prob.l2) / m \
-                + rho * jnp.eye(p, dtype=X.dtype)
-            return w - jnp.linalg.solve(H, g)
-        return jax.lax.fori_loop(0, newton_iters, newton, w0)
 
     def body(k, state, data):
         W_local, Z, Q = state["W"], state["Z"], state["Q"]
         z_loc, q_loc = rt.local_slice(Z), rt.local_slice(Q)
-        if use_gram:
-            W_local = rt.worker_map(solve_gram, in_axes=(0, 0, 1, 1),
-                                    out_axes=1)(data["gram_A"],
-                                                data["gram_b"],
-                                                z_loc, q_loc)
-        else:
-            W_local = rt.worker_map(worker_solve, in_axes=(0, 0, 1, 1, 1),
-                                    out_axes=1)(data["Xs"], data["ys"],
-                                                z_loc, q_loc, W_local)
+        W_local = worker_ops.prox_columns(loss, data, z_loc, q_loc, W_local,
+                                          rho, m, prob.l2,
+                                          iters=newton_iters, rt=rt)
         W_full = rt.gather_columns(W_local, "local w")
         Z_new = sv_shrink(W_full + Q / rho, lam / rho)           # (A.2)
         Q_new = Q + rho * (W_full - Z_new)                        # (A.3)

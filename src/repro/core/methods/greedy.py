@@ -48,8 +48,9 @@ def _subspace_pursuit(prob: MTLProblem, rounds: int, direction: str,
     def messages(W_local, data):
         if direction == "newton":
             return worker_ops.newton_columns(loss, W_local, data, prob.l2,
-                                             newton_damping)
-        return worker_ops.grad_columns(loss, W_local, data, prob.l2) / m
+                                             newton_damping, rt=rt)
+        return worker_ops.grad_columns(loss, W_local, data, prob.l2,
+                                       rt=rt) / m
 
     def body(k, state, data):
         U, mask, W_local = state["U"], state["mask"], state["W"]
@@ -63,7 +64,7 @@ def _subspace_pursuit(prob: MTLProblem, rounds: int, direction: str,
         U = U.at[:, k].set(u)                          # workers append
         mask = mask.at[k].set(1.0)
         Um = U * mask[None, :]
-        W_local, _ = worker_ops.projected_solves(loss, Um, data, l2)
+        W_local, _ = worker_ops.projected_solves(loss, Um, data, l2, rt=rt)
         return {"U": U, "mask": mask, "W": W_local}
 
     state = {"U": jnp.zeros((p, max_k), prob.Xs.dtype),
@@ -118,7 +119,8 @@ def altmin(prob: MTLProblem, rank: int = None, rounds: int = 30,
     U0 = jnp.linalg.qr(jax.random.normal(key, (p, r), prob.Xs.dtype))[0]
 
     def v_of(U, data):
-        _, V = worker_ops.projected_solves(loss, U, data, max(l2, 1e-9))
+        _, V = worker_ops.projected_solves(loss, U, data, max(l2, 1e-9),
+                                           rt=rt)
         return V                                        # (r, L)
 
     def body(k, state, data):
@@ -133,13 +135,21 @@ def altmin(prob: MTLProblem, rank: int = None, rounds: int = 30,
                 A_all, b_all = rt.worker_map(moments, in_axes=(0, 0, 1))(
                     data["gram_A"], data["gram_b"], V)
             else:
-                def moments(X, y, v):
-                    G = X.T @ X / prob.n                    # (p, p)
-                    A_j = jnp.kron(jnp.outer(v, v), G)      # (p r, p r)
-                    b_j = jnp.kron(v, X.T @ y / prob.n)     # (p r,)
-                    return A_j, b_j
+                # per-task second moments from the local rows; the /n
+                # uses the GLOBAL sample count, so the data-axis psum
+                # reassembles the full-task statistics (identity off
+                # 2-D runtimes) before the kron lift
+                def stats(X, y):
+                    return X.T @ X / prob.n, X.T @ y / prob.n
+                G_all, g_all = rt.worker_map(stats, in_axes=(0, 0))(
+                    data["Xs"], data["ys"])
+                G_all = rt.psum_data(G_all, "per-task gram shards")
+                g_all = rt.psum_data(g_all, "per-task Xty shards")
+
+                def moments(G, g, v):
+                    return jnp.kron(jnp.outer(v, v), G), jnp.kron(v, g)
                 A_all, b_all = rt.worker_map(moments, in_axes=(0, 0, 1))(
-                    data["Xs"], data["ys"], V)
+                    G_all, g_all, V)
             Amat = rt.sum_tasks(A_all, "per-task moment matrices") / m \
                 + l2 * jnp.eye(p * r, dtype=U.dtype)
             b = rt.sum_tasks(b_all, "per-task moment vectors") / m
@@ -152,7 +162,7 @@ def altmin(prob: MTLProblem, rank: int = None, rounds: int = 30,
             U_new = U
             for _ in range(u_grad_steps):
                 G_loc = worker_ops.grad_columns(loss, U_new @ V, data,
-                                                prob.l2)
+                                                prob.l2, rt=rt)
                 G = rt.gather_columns(G_loc, "gradient columns")
                 U_new = U_new - (G @ V_full.T) / m
         U_new = rt.broadcast(U_new, "updated U", vectors=r, dim=p)

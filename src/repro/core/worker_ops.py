@@ -22,6 +22,19 @@ correct implementation per loss and per backend:
 Every function takes the worker-local ``data`` dict the runtime binds
 into the round body (``Xs``/``ys`` plus ``gram_A``/``gram_b`` when
 cached), so the same call works inside vmap (sim) and shard_map (mesh).
+
+Data-axis sharding (DESIGN.md §8).  Under a 2-D ``("tasks", "data")``
+runtime the ``Xs``/``ys`` leaves hold only ``n / data_shards`` rows per
+task.  Pass the runtime as ``rt=`` and every raw-path sample statistic
+is reduced over the data axis (``rt.pmean_data`` — identity when
+``data_shards == 1``, a real collective on the 2-D mesh): gradients and
+Hessians are averaged across shards before any solve, iterative refits
+reduce once per Newton/gradient step, and the Pallas kernel's per-shard
+output is reduced exactly like the XLA reference's.  The Gram path
+needs no reduction — the 2-D runtime rebuilds the cache as a psum of
+per-shard partial Grams before the round loop, so ``gram_A``/``gram_b``
+are already global.  ``rt=None`` keeps the historical single-shard
+behaviour bit-for-bit.
 """
 from __future__ import annotations
 
@@ -34,21 +47,71 @@ from . import linear_model as lm
 from .losses import Loss
 
 
-def gram_stats(Xs: jnp.ndarray, ys: jnp.ndarray
+def gram_stats(Xs: jnp.ndarray, ys: jnp.ndarray, data_shards: int = 1
                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Per-task sufficient statistics for the squared loss.
 
     Xs: (m, n, p); ys: (m, n)  ->  A (m, p, p), b (m, p) with
     A_j = X_j^T X_j / n and b_j = X_j^T y_j / n.
+
+    ``data_shards > 1`` computes the SAME statistics as a sum of
+    per-shard partial Grams over contiguous row blocks of n — the
+    reduction order of the 2-D runtime's psum (DESIGN.md §8), which
+    agrees with the monolithic order only to float rounding.  Used by
+    ``SimRuntime``'s 2-D emulation so sim and mesh shard identically.
     """
-    n = Xs.shape[1]
-    A = jnp.einsum("jni,jnk->jik", Xs, Xs) / n
-    b = jnp.einsum("jni,jn->ji", Xs, ys) / n
+    m, n, p = Xs.shape
+    if data_shards == 1:
+        A = jnp.einsum("jni,jnk->jik", Xs, Xs) / n
+        b = jnp.einsum("jni,jn->ji", Xs, ys) / n
+        return A, b
+    if n % data_shards:
+        raise ValueError(f"n={n} not divisible by data_shards={data_shards}")
+    Xr = Xs.reshape(m, data_shards, n // data_shards, p)
+    yr = ys.reshape(m, data_shards, n // data_shards)
+    A = (jnp.einsum("jsni,jsnk->jsik", Xr, Xr) / n).sum(axis=1)
+    b = (jnp.einsum("jsni,jsn->jsi", Xr, yr) / n).sum(axis=1)
     return A, b
 
 
 def has_gram(data: Dict[str, jnp.ndarray]) -> bool:
     return "gram_A" in data
+
+
+def _sharded(rt) -> bool:
+    return rt is not None and rt.data_shards > 1
+
+
+def _pmean(rt, x, note, repeats: int = 1):
+    """Average ``x`` over the data axis; identity off the 2-D runtimes."""
+    return rt.pmean_data(x, note, repeats=repeats) if _sharded(rt) else x
+
+
+def _moments(rt, Xs, ys, note) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-task second moments of (possibly data-sharded) rows:
+    A (L, d, d) = X^T X / n, b (L, d) = X^T y / n — each shard's einsum
+    over its local rows, pmean-reduced over the data axis (identity,
+    with local n == global n, off the 2-D runtimes).  The ONE reduction
+    convention every closed-form sharded solve goes through."""
+    n_loc = Xs.shape[1]
+    A = _pmean(rt, jnp.einsum("jni,jnk->jik", Xs, Xs) / n_loc,
+               note + " gram shards")
+    b = _pmean(rt, jnp.einsum("jni,jn->ji", Xs, ys) / n_loc,
+               note + " Xty shards")
+    return A, b
+
+
+def _grad_hess(loss: Loss, W_cols: jnp.ndarray, Xs: jnp.ndarray,
+               ys: jnp.ndarray, l2: float
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Stacked per-task gradient (d, L) and Hessian (L, d, d) over the
+    local rows — the pair every Newton-style sharded path pmean-reduces
+    before its solve."""
+    g = jax.vmap(lambda w, X, y: lm.task_grad(loss, w, X, y, l2),
+                 in_axes=(1, 0, 0), out_axes=1)(W_cols, Xs, ys)
+    H = jax.vmap(lambda w, X, y: lm.task_hessian(loss, w, X, y, l2),
+                 in_axes=(1, 0, 0), out_axes=0)(W_cols, Xs, ys)
+    return g, H
 
 
 def _resolve_impl(loss: Loss, data: Dict[str, jnp.ndarray],
@@ -65,11 +128,15 @@ def _resolve_impl(loss: Loss, data: Dict[str, jnp.ndarray],
 
 def grad_columns(loss: Loss, W_cols: jnp.ndarray,
                  data: Dict[str, jnp.ndarray], l2: float = 0.0,
-                 impl: Optional[str] = None) -> jnp.ndarray:
+                 impl: Optional[str] = None, rt=None) -> jnp.ndarray:
     """Per-task gradient columns ``grad L_nj(w_j)``: (p, L) from (p, L).
 
     Callers apply the global objective's 1/m factor themselves (the
-    convention of :mod:`repro.core.linear_model`).
+    convention of :mod:`repro.core.linear_model`).  ``impl`` forces a
+    raw-path implementation ("gram" | "pallas" | "xla"); by default the
+    cheapest correct one is picked at trace time.  With ``rt=`` a 2-D
+    runtime, the raw paths (Pallas kernel included) compute on this
+    shard's rows and are ``pmean``-reduced over the data axis.
     """
     impl = _resolve_impl(loss, data, impl)
     if impl == "gram":
@@ -79,10 +146,12 @@ def grad_columns(loss: Loss, W_cols: jnp.ndarray,
         from ..kernels.mtl_grad import task_gradients
         G = task_gradients(data["Xs"], data["ys"], W_cols.T,
                            loss=loss.name).T.astype(W_cols.dtype)
+        G = _pmean(rt, G, "gradient shards")
     elif impl == "xla":
         G = jax.vmap(lambda w, X, y: lm.task_grad(loss, w, X, y),
                      in_axes=(1, 0, 0), out_axes=1)(
             W_cols, data["Xs"], data["ys"])
+        G = _pmean(rt, G, "gradient shards")
     else:
         raise ValueError(f"unknown gradient impl {impl!r}; "
                          "have 'gram', 'pallas', 'xla'")
@@ -93,11 +162,14 @@ def grad_columns(loss: Loss, W_cols: jnp.ndarray,
 
 def newton_columns(loss: Loss, W_cols: jnp.ndarray,
                    data: Dict[str, jnp.ndarray], l2: float = 0.0,
-                   damping: float = 1e-6) -> jnp.ndarray:
+                   damping: float = 1e-6, rt=None) -> jnp.ndarray:
     """DNSP worker messages ``(hess L_nj)^-1 grad L_nj``: (p, L).
 
     Squared loss with Gram cache: Hessian IS ``A_j`` — one (p, p) solve
-    per task, no pass over the raw data.
+    per task, no pass over the raw data.  Raw path under a 2-D runtime:
+    per-shard gradients and Hessians are ``pmean``-reduced over the
+    data axis BEFORE the solve (the Newton direction is nonlinear in
+    the data, so the reduction cannot commute past it).
     """
     if loss.name == "squared" and has_gram(data):
         p = W_cols.shape[0]
@@ -109,6 +181,15 @@ def newton_columns(loss: Loss, W_cols: jnp.ndarray,
 
         return jax.vmap(one, in_axes=(0, 0, 1), out_axes=1)(
             data["gram_A"], data["gram_b"], W_cols)
+    if _sharded(rt):
+        p = W_cols.shape[0]
+        eye = jnp.eye(p, dtype=W_cols.dtype)
+        g, H = _grad_hess(loss, W_cols, data["Xs"], data["ys"], l2)
+        g = rt.pmean_data(g, "newton grad shards")
+        H = rt.pmean_data(H, "newton hess shards")
+        return jax.vmap(lambda Hj, gj: jnp.linalg.solve(Hj + damping * eye,
+                                                        gj),
+                        in_axes=(0, 1), out_axes=1)(H, g)
     return jax.vmap(
         lambda w, X, y: lm.newton_direction(loss, w, X, y, l2, damping),
         in_axes=(1, 0, 0), out_axes=1)(W_cols, data["Xs"], data["ys"])
@@ -118,7 +199,8 @@ def ridge_columns(data: Dict[str, jnp.ndarray], l2: float) -> jnp.ndarray:
     """Per-task ridge solutions (p, L) from the Gram cache (squared loss).
 
     The Local baseline / proxgd "local" init without an O(n p^2) refit
-    per solve.  Requires ``gram_A``/``gram_b`` in ``data``.
+    per solve.  Requires ``gram_A``/``gram_b`` in ``data`` (already
+    global under 2-D sharding — the runtime psums the cache).
     """
     A, b = data["gram_A"], data["gram_b"]
     p = A.shape[-1]
@@ -127,14 +209,110 @@ def ridge_columns(data: Dict[str, jnp.ndarray], l2: float) -> jnp.ndarray:
                     in_axes=(0, 0), out_axes=1)(A, b)
 
 
+def _newton_cols(loss: Loss, Xs: jnp.ndarray, ys: jnp.ndarray, l2: float,
+                 iters: int, rt, damping: float = 1e-8) -> jnp.ndarray:
+    """Stacked damped-Newton ERM over (possibly data-sharded) rows.
+
+    Xs: (L, n_loc, d); ys: (L, n_loc) -> V (d, L).  The data-axis
+    reduction happens once per Newton step (two pmeans: gradient +
+    Hessian), charged with ``repeats=iters`` since the loop body is
+    traced once.
+    """
+    L, _, d = Xs.shape
+    eye = jnp.eye(d, dtype=Xs.dtype)
+
+    def body(_, V):
+        g, H = _grad_hess(loss, V, Xs, ys, l2)
+        g = _pmean(rt, g, "erm newton grad", repeats=iters)
+        H = _pmean(rt, H, "erm newton hess", repeats=iters)
+        step = jax.vmap(
+            lambda Hj, gj: jnp.linalg.solve(Hj + damping * eye, gj),
+            in_axes=(0, 1), out_axes=1)(H, g)
+        return V - step
+
+    return jax.lax.fori_loop(0, iters, body, jnp.zeros((d, L), Xs.dtype))
+
+
+def erm_columns(loss: Loss, data: Dict[str, jnp.ndarray], l2: float,
+                rt=None, iters: int = 25) -> jnp.ndarray:
+    """Per-task unconstrained ERM solutions (p, L) — the Local baseline's
+    worker computation, dispatched like the gradients:
+
+    * Gram cache present: one (p, p) ridge solve per task.
+    * squared, raw: closed form from (data-axis-reduced) moments.
+    * smooth non-quadratic: damped Newton, reducing per step under 2-D.
+    """
+    if loss.name == "squared" and has_gram(data):
+        return ridge_columns(data, l2)
+    Xs, ys = data["Xs"], data["ys"]
+    if not _sharded(rt):
+        return jax.vmap(lambda X, y: lm.erm(loss, X, y, l2, iters),
+                        in_axes=(0, 0), out_axes=1)(Xs, ys)
+    if loss.name == "squared":
+        A, b = _moments(rt, Xs, ys, "erm")
+        p = A.shape[-1]
+        eye = jnp.eye(p, dtype=A.dtype)
+        return jax.vmap(lambda Aj, bj: jnp.linalg.solve(Aj + l2 * eye, bj),
+                        in_axes=(0, 0), out_axes=1)(A, b)
+    return _newton_cols(loss, Xs, ys, l2, iters, rt)
+
+
+def prox_columns(loss: Loss, data: Dict[str, jnp.ndarray],
+                 Z_cols: jnp.ndarray, Q_cols: jnp.ndarray,
+                 W0_cols: jnp.ndarray, rho: float, m: int, l2: float = 0.0,
+                 iters: int = 8, rt=None) -> jnp.ndarray:
+    """The ADMM worker step (Appendix A.1), per task:
+
+        w_j+ = argmin_w  L_nj(w)/m + <w - z_j, q_j> + rho/2 ||w - z_j||^2
+
+    Z_cols/Q_cols/W0_cols: (p, L) -> (p, L).  Squared loss: closed form
+    (from the Gram cache when present; otherwise from raw — or
+    data-axis-reduced — moments).  Smooth non-quadratic losses: a few
+    damped Newton steps on the strongly convex subproblem, reducing the
+    data-dependent gradient/Hessian across shards per step under 2-D.
+    """
+    p = Z_cols.shape[0]
+    eye = jnp.eye(p, dtype=Z_cols.dtype)
+    if loss.name == "squared":
+        if has_gram(data):
+            A, b = data["gram_A"], data["gram_b"]
+        else:
+            A, b = _moments(rt, data["Xs"], data["ys"], "prox")
+
+        def one(Aj, bj, z, q):
+            Amat = Aj / m + (rho + l2 / m) * eye
+            return jnp.linalg.solve(Amat, bj / m + rho * z - q)
+
+        return jax.vmap(one, in_axes=(0, 0, 1, 1), out_axes=1)(
+            A, b, Z_cols, Q_cols)
+
+    Xs, ys = data["Xs"], data["ys"]
+
+    def newton(_, W):
+        g, H = _grad_hess(loss, W, Xs, ys, l2)
+        g = _pmean(rt, g, "prox newton grad", repeats=iters)
+        H = _pmean(rt, H, "prox newton hess", repeats=iters)
+        g = g / m + Q_cols + rho * (W - Z_cols)
+        step = jax.vmap(
+            lambda Hj, gj: jnp.linalg.solve(Hj / m + rho * eye, gj),
+            in_axes=(0, 1), out_axes=1)(H, g)
+        return W - step
+
+    return jax.lax.fori_loop(0, iters, newton, W0_cols)
+
+
 def projected_solves(loss: Loss, U: jnp.ndarray,
                      data: Dict[str, jnp.ndarray], l2: float = 0.0,
-                     iters: int = 25) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                     iters: int = 25, rt=None
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """The DGSP/DNSP/AltMin re-fit ``v_j = argmin_v L_nj(U v)``.
 
     Returns (W_cols (p, L), V (k, L)) with ``W = U V``.  Squared loss
     with Gram cache: the projected normal equations are
     ``U^T A_j U v = U^T b_j`` — cost k^2 p per task instead of n p k.
+    Raw paths under a 2-D runtime project the LOCAL rows (``X_j U`` on
+    the shard) and reduce the k-dimensional normal equations — or each
+    Newton step for non-quadratic losses — over the data axis.
     """
     if loss.name == "squared" and has_gram(data):
         k = U.shape[1]
@@ -146,6 +324,20 @@ def projected_solves(loss: Loss, U: jnp.ndarray,
 
         V = jax.vmap(one, in_axes=(0, 0), out_axes=1)(
             data["gram_A"], data["gram_b"])
+        return U @ V, V
+
+    if _sharded(rt):
+        Xs, ys = data["Xs"], data["ys"]
+        XU = jax.vmap(lambda X: X @ U)(Xs)          # (L, n_loc, k)
+        k = U.shape[1]
+        if loss.name == "squared":
+            Ak, bk = _moments(rt, XU, ys, "projected")
+            eye = jnp.eye(k, dtype=U.dtype)
+            V = jax.vmap(lambda Aj, bj: jnp.linalg.solve(
+                Aj + max(l2, 1e-9) * eye, bj),
+                in_axes=(0, 0), out_axes=1)(Ak, bk)
+        else:
+            V = _newton_cols(loss, XU, ys, max(l2, 1e-9), iters, rt)
         return U @ V, V
 
     def one(X, y):

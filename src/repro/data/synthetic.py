@@ -47,21 +47,39 @@ def feature_cov(p: int, corr_decay: float, dtype=jnp.float32) -> jnp.ndarray:
             ).astype(dtype)
 
 
-def _sample_features(key: jax.Array, m: int, n: int, Sigma_chol: jnp.ndarray
-                     ) -> jnp.ndarray:
+def _sample_features(key: jax.Array, m: int, n: int, Sigma_chol: jnp.ndarray,
+                     chunks: int = 1) -> jnp.ndarray:
+    """N(0, Sigma) features (m, n, p).  ``chunks > 1`` draws the sample
+    axis in ``n / chunks`` blocks with per-block keys, bounding the
+    transient (raw-normal + correlated) buffer pair for large n — the
+    within-task scaling regime (DESIGN.md §8).  Chunked draws differ
+    from the single-key stream, so a spec's dataset is reproducible per
+    (key, chunks) pair."""
     p = Sigma_chol.shape[0]
-    z = jax.random.normal(key, (m, n, p), Sigma_chol.dtype)
-    return z @ Sigma_chol.T
+    if chunks == 1:
+        z = jax.random.normal(key, (m, n, p), Sigma_chol.dtype)
+        return z @ Sigma_chol.T
+    if n % chunks:
+        raise ValueError(f"n={n} not divisible by sample_chunks={chunks}")
+    parts = [jax.random.normal(k, (m, n // chunks, p), Sigma_chol.dtype)
+             @ Sigma_chol.T
+             for k in jax.random.split(key, chunks)]
+    return jnp.concatenate(parts, axis=1)
 
 
-def generate(key: jax.Array, spec: SimSpec
+def generate(key: jax.Array, spec: SimSpec, sample_chunks: int = 1
              ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Returns (Xs (m,n,p), ys (m,n), W* (p,m), Sigma (p,p))."""
+    """Returns (Xs (m,n,p), ys (m,n), W* (p,m), Sigma (p,p)).
+
+    ``sample_chunks > 1`` generates the feature tensor in blocks along
+    the sample axis (see ``_sample_features``) — used by the large-n
+    benchmarks where a monolithic (m, n, p) normal draw doubles peak
+    memory."""
     kw, kx, ky = jax.random.split(key, 3)
     Wstar = make_wstar(kw, spec.p, spec.m, spec.r)
     Sigma = feature_cov(spec.p, spec.corr_decay)
     chol = jnp.linalg.cholesky(Sigma + 1e-9 * jnp.eye(spec.p))
-    Xs = _sample_features(kx, spec.m, spec.n, chol)
+    Xs = _sample_features(kx, spec.m, spec.n, chol, chunks=sample_chunks)
     margins = jnp.einsum("mnp,pm->mn", Xs, Wstar)
     if spec.task == "regression":
         ys = margins + spec.noise * jax.random.normal(ky, margins.shape)

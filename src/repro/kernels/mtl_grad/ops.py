@@ -13,7 +13,14 @@ def _on_cpu() -> bool:
 def task_gradients(X, y, W, *, loss: str = "squared", br: int = 256,
                    interpret=None):
     """X: (m,n,p); y: (m,n); W: (m,p) -> per-task gradient matrix
-    columns G (m, p), f32."""
+    columns G (m, p), f32.
+
+    The row axis may be a DATA SHARD rather than the full sample set:
+    the kernel normalizes by the rows it sees, so under a 2-D
+    ``("tasks", "data")`` runtime each chip streams its
+    ``n / data_shards`` rows and ``worker_ops.grad_columns`` pmean-
+    reduces the per-shard outputs over the data axis (DESIGN.md §8) —
+    the kernel itself needs no collective awareness."""
     interpret = _on_cpu() if interpret is None else interpret
     return task_gradients_mnp(X, y, W, loss=loss, br=br,
                               interpret=interpret)

@@ -1,14 +1,17 @@
 """repro.runtime — one protocol API, interchangeable execution backends.
 
 Solvers call the primitives (worker_map / gather_columns / broadcast /
-local_slice / sum_tasks / gather_tasks / axis_index) and the driver
-(run_rounds / one_shot); ``SimRuntime`` executes them as a vmap over
-the task axis, ``MeshRuntime`` as shard_map collectives over a real
-"tasks" mesh axis. See DESIGN.md.
+local_slice / sum_tasks / gather_tasks / axis_index, plus the
+data-axis reductions pmean_data / psum_data / gather_samples) and the
+driver (run_rounds / one_shot); ``SimRuntime`` executes them as a vmap
+over the task axis, ``MeshRuntime`` as shard_map collectives over a
+real "tasks" mesh axis — optionally 2-D, ``("tasks", "data")``, with
+each task's samples sharded across ``data_shards`` devices
+(DESIGN.md §3, §8).
 """
 from .base import ProtocolRuntime, RecordSpec, make_runtime
 from .sim import SimRuntime
-from .mesh import MeshRuntime, task_mesh
+from .mesh import MeshRuntime, task_mesh, task_data_mesh
 
 __all__ = ["ProtocolRuntime", "RecordSpec", "SimRuntime", "MeshRuntime",
-           "task_mesh", "make_runtime"]
+           "task_mesh", "task_data_mesh", "make_runtime"]

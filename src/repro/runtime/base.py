@@ -27,11 +27,26 @@ Solvers are written ONCE against the primitives and run unchanged on
 either backend; the two can only disagree by a floating-point rounding
 margin because they execute the same per-task ops in the same order.
 
+The data axis (DESIGN.md §8).  The paper pins each task to one
+"machine", but nothing stops a machine from being a GROUP of devices
+that shard the task's ``n`` samples.  ``data_shards > 1`` turns the
+runtime into a 2-D ``("tasks", "data")`` mesh: each task's ``(n, p)``
+rows are split into ``data_shards`` blocks along the sample axis, and
+per-task sample statistics (gradients, Hessians, Gram matrices) are
+reduced over the data axis with :meth:`pmean_data` / :meth:`psum_data`
+(``lax.pmean``/``psum`` under the mesh backend, identities when
+``data_shards == 1``).  ``SimRuntime`` emulates the second axis with a
+reshaped ``vmap(axis_name="data")`` so 2-D semantics are testable on a
+single CPU device.
+
 Communication accounting (the paper's unit: p-dimensional vectors per
 machine, Table 1) is emitted by the primitives themselves at trace time
 and replayed into the :class:`~repro.core.comm.CommLog` once per
 executed round — the ledger and the physical collective traffic share a
-single source of truth and cannot drift apart.
+single source of truth and cannot drift apart.  The ledger charges
+ONLY tasks-axis traffic (so it stays in the paper's Table-1 units and
+is bit-identical for any ``data_shards``); data-axis collectives are
+measured separately into ``data_collective_floats_per_chip``.
 """
 from __future__ import annotations
 
@@ -48,9 +63,17 @@ from ..core.comm import CommLog
 # view — a dict with at least ``Xs`` (m,n,p) / ``ys`` (m,n) plus any
 # cached per-task statistics (``gram_A``/``gram_b``), every leaf stacked
 # over the task axis (the full stack under sim; the per-chip shard under
-# mesh).
+# mesh).  With ``data_shards > 1`` the leaves named in
+# ``SAMPLE_AXIS_LEAVES`` are additionally split along their sample axis
+# (axis 1), so the body sees ``(L, n/data_shards, ...)`` blocks.
 RoundBody = Callable[[jnp.ndarray, Dict[str, jnp.ndarray],
                       Dict[str, jnp.ndarray]], Dict[str, jnp.ndarray]]
+
+# Worker-data leaves whose axis 1 is the per-task SAMPLE axis — these
+# are the leaves a 2-D runtime shards along the "data" mesh axis.
+# Derived statistics (``gram_A``/``gram_b``) carry no sample axis and
+# stay replicated across data shards.
+SAMPLE_AXIS_LEAVES = frozenset({"Xs", "ys"})
 
 
 @dataclasses.dataclass
@@ -103,8 +126,19 @@ class ProtocolRuntime:
         # the physical payload; for psum the chip pre-reduces locally so
         # physical wire bytes are payload/L.
         self.collective_floats_per_chip = 0
+        # data-axis collective floats contributed by this chip (psum /
+        # pmean / all_gather over the "data" mesh axis).  NEVER charged
+        # to the CommLog — the ledger stays in the paper's Table-1
+        # tasks-axis units — but measured here so 2-D runs can report
+        # their within-task sharding traffic (DESIGN.md §8).  0 under
+        # sim and whenever data_shards == 1.
+        self.data_collective_floats_per_chip = 0
+        # number of shards along the data axis; subclasses overwrite
+        self.data_shards = 1
+        self.data_axis = "data"
         self._recording = False
         self._template: list[_WireEvent] = []
+        self._data_template: list[int] = []
         self._used = False
 
     # ------------------------------------------------------------------
@@ -119,6 +153,11 @@ class ProtocolRuntime:
         """Tasks held by one worker view (m under sim, m/devices under mesh)."""
         raise NotImplementedError
 
+    @property
+    def local_samples(self) -> int:
+        """Per-task samples held by one worker view: n / data_shards."""
+        return self.prob.n // self.data_shards
+
     # ------------------------------------------------------------------
     # protocol primitives — call these inside a round body only
     # ------------------------------------------------------------------
@@ -127,7 +166,12 @@ class ProtocolRuntime:
 
         Identical on both backends (a vmap); what differs is the extent
         of the mapped axis: all m tasks under sim, the per-chip shard
-        under mesh.
+        under mesh.  With ``data_shards > 1`` the per-task leaves of the
+        ``data`` dict hold only this shard's ``n / data_shards`` rows;
+        sample statistics computed from them must be reduced with
+        :meth:`pmean_data` / :meth:`psum_data` afterwards (the
+        ``repro.core.worker_ops`` helpers do this when handed the
+        runtime).
         """
         return jax.vmap(fn, in_axes=in_axes, out_axes=out_axes)
 
@@ -159,6 +203,9 @@ class ProtocolRuntime:
         ``x`` is (L, ...); result is (m, ...).  Ledger: each machine
         sends prod(shape[1:-1]) vectors of dimension shape[-1] (e.g. the
         Centralize baseline shipping its (n, p) design = n p-vectors).
+        Under 2-D sharding, reassemble sharded sample axes with
+        :meth:`gather_samples` FIRST so the charged event keeps its 1-D
+        shape (bit-identical ledger across mesh layouts).
         """
         raise NotImplementedError
 
@@ -200,6 +247,78 @@ class ProtocolRuntime:
         return x
 
     # ------------------------------------------------------------------
+    # data-axis primitives — within-task sharding (DESIGN.md §8)
+    # ------------------------------------------------------------------
+    def psum_data(self, x: jnp.ndarray, note: str = "",
+                  repeats: int = 1) -> jnp.ndarray:
+        """Sum a per-shard partial statistic over the data axis.
+
+        The reduction that reassembles a per-task quantity whose shards
+        were each computed over ``n / data_shards`` rows with a GLOBAL
+        ``1/n`` normalization (e.g. partial Gram matrices
+        ``X_s^T X_s / n``).  Identity when ``data_shards == 1``.
+
+        Not charged to the CommLog (the ledger stays in tasks-axis
+        Table-1 units); the per-chip payload ``x.size * repeats`` floats
+        is measured into ``data_collective_floats_per_chip``.  Pass
+        ``repeats`` when the call sits inside ``lax`` control flow that
+        executes it more than once per round (e.g. a Newton refit loop)
+        so the measurement stays honest despite single-trace recording.
+        """
+        if self.data_shards == 1:
+            return x
+        if self._count_data_wire:
+            self._charge_data(x.size * repeats)
+        return self._psum_data(x)
+
+    def pmean_data(self, x: jnp.ndarray, note: str = "",
+                   repeats: int = 1) -> jnp.ndarray:
+        """Average a per-shard sample statistic over the data axis.
+
+        The reduction for quantities normalized by the LOCAL row count
+        (e.g. ``lm.task_grad``'s ``(1/n_local) X_s^T l'``): the mean of
+        the per-shard values equals the full-data statistic.  Identity
+        when ``data_shards == 1``; accounting as :meth:`psum_data`.
+        """
+        if self.data_shards == 1:
+            return x
+        if self._count_data_wire:
+            self._charge_data(x.size * repeats)
+        return self._pmean_data(x)
+
+    def gather_samples(self, x: jnp.ndarray, axis: int = 1,
+                       note: str = "") -> jnp.ndarray:
+        """Reassemble the full sample axis from its data shards.
+
+        ``x`` is a per-task stack whose ``axis`` holds this shard's
+        ``n / data_shards`` rows; the result carries all ``n`` rows (in
+        sample order) on every shard.  Identity when
+        ``data_shards == 1``.  Used by protocols that ship raw samples
+        (the Centralize baseline) — call it BEFORE the tasks-axis
+        gather so the charged ledger event keeps its 1-D shape.
+        Measured, never charged, like the other data-axis primitives.
+        """
+        if self.data_shards == 1:
+            return x
+        if self._count_data_wire:
+            self._charge_data(x.size)
+        return self._gather_samples(x, axis)
+
+    # Whether this backend moves real bytes over the data axis (mesh
+    # collectives: yes; the sim emulation: no, mirroring the tasks-axis
+    # wire convention where sim measures 0).
+    _count_data_wire = False
+
+    def _psum_data(self, x):
+        raise NotImplementedError
+
+    def _pmean_data(self, x):
+        raise NotImplementedError
+
+    def _gather_samples(self, x, axis):
+        raise NotImplementedError
+
+    # ------------------------------------------------------------------
     # ledger plumbing
     # ------------------------------------------------------------------
     @staticmethod
@@ -219,12 +338,24 @@ class ProtocolRuntime:
             self._template.append(
                 _WireEvent(direction, int(vectors), int(dim), note, int(wire)))
 
+    def _charge_data(self, floats: int) -> None:
+        """Measure data-axis collective payload (never enters the
+        CommLog).  While the round body is being traced the floats join
+        the per-round template (replayed once per executed round);
+        outside a trace — the one-time Gram-cache setup — they
+        accumulate directly."""
+        if self._recording:
+            self._data_template.append(int(floats))
+        else:
+            self.data_collective_floats_per_chip += int(floats)
+
     def _replay_round(self, count_round: bool) -> None:
         if count_round:
             self.comm.begin_round()
         for ev in self._template:
             self.comm.send(ev.direction, ev.vectors, ev.dim, ev.note)
             self.collective_floats_per_chip += ev.wire_floats
+        self.data_collective_floats_per_chip += sum(self._data_template)
 
     # ------------------------------------------------------------------
     # drivers
@@ -347,9 +478,17 @@ class ProtocolRuntime:
         protocols, DESIGN.md §5), so the ledger is bit-identical across
         drivers by construction.  ``record`` snapshots one state leaf on
         a ``record_every`` cadence in either mode.
+
+        Both drivers work unchanged under 2-D sharding
+        (``data_shards > 1``): the scanned loop sits inside the 2-D
+        ``shard_map`` (or inside the sim emulation's data-axis vmap),
+        tasks-axis collectives replicate across data shards, and the
+        recorded tasks-axis template — hence the CommLog — is
+        bit-identical to the 1-D run.
         """
         self._claim()
         self._template = []
+        self._data_template = []
         self._recording = True
         if scan:
             fn = self._compile_scan(body, state, tuple(sharded), rounds,
@@ -381,13 +520,22 @@ class ProtocolRuntime:
                                count_rounds=count_round, scan=scan)
 
 
-def make_runtime(backend: str, prob, *, mesh=None, axis: str = "tasks"
+def make_runtime(backend: str, prob, *, mesh=None, axis: str = "tasks",
+                 data_axis: str = "data", data_shards: int = 1
                  ) -> ProtocolRuntime:
-    """Construct a fresh runtime for one solve. ``backend``: "sim"|"mesh"."""
+    """Construct a fresh runtime for one solve.
+
+    ``backend``: "sim" | "mesh".  ``data_shards > 1`` shards each
+    task's samples across that many devices (mesh) or emulated shards
+    (sim) along a second ``data_axis`` — see DESIGN.md §8.  ``mesh``
+    may be a prebuilt 1-D or 2-D device mesh; when omitted one is built
+    from all local devices.
+    """
     if backend == "sim":
         from .sim import SimRuntime
-        return SimRuntime(prob)
+        return SimRuntime(prob, data_shards=data_shards)
     if backend == "mesh":
         from .mesh import MeshRuntime
-        return MeshRuntime(prob, mesh=mesh, axis=axis)
+        return MeshRuntime(prob, mesh=mesh, axis=axis, data_axis=data_axis,
+                           data_shards=data_shards)
     raise ValueError(f"unknown backend {backend!r}; have 'sim', 'mesh'")

@@ -17,6 +17,17 @@ into the all-gather (matching the paper's "worker->master: 1 vector"
 per machine) — the runtime counts those floats as they are traced, so
 ``collective_floats_per_chip`` and the CommLog ledger derive from the
 same primitive calls and cannot disagree.
+
+With ``data_shards > 1`` the mesh grows a second axis ("data",
+DESIGN.md §8): each task's ``(n, p)`` rows are sharded across
+``data_shards`` chips (``PartitionSpec("tasks", "data", None)``), the
+per-task Gram cache is rebuilt once per solve as a ``psum`` of
+per-shard partial Grams, raw-path sample statistics reduce over the
+data axis via ``pmean_data``/``psum_data``, and every tasks-axis
+collective (and the replicated master) simply replicates across the
+data shards — the CommLog still charges ONLY tasks-axis traffic while
+the data-axis payloads are measured into
+``data_collective_floats_per_chip``.
 """
 from __future__ import annotations
 
@@ -39,27 +50,62 @@ _NO_REP_CHECK = ({"check_rep": False}
                  if "check_rep" in inspect.signature(shard_map).parameters
                  else {"check_vma": False})
 
-from .base import ProtocolRuntime
+from .base import SAMPLE_AXIS_LEAVES, ProtocolRuntime
 
 
 def task_mesh(n_devices: int | None = None, axis: str = "tasks") -> Mesh:
+    """A 1-D mesh: every device is one worker group on the task axis."""
     devs = jax.devices() if n_devices is None else jax.devices()[:n_devices]
     return jax.make_mesh((len(devs),), (axis,), devices=devs)
+
+
+def task_data_mesh(data_shards: int, n_devices: int | None = None,
+                   axis: str = "tasks", data_axis: str = "data") -> Mesh:
+    """A 2-D ``(tasks, data)`` mesh: ``n_devices / data_shards`` worker
+    groups, each sharding its tasks' samples across ``data_shards``
+    chips (DESIGN.md §8)."""
+    devs = jax.devices() if n_devices is None else jax.devices()[:n_devices]
+    if len(devs) % data_shards:
+        raise ValueError(f"{len(devs)} devices cannot form a mesh with "
+                         f"data_shards={data_shards}")
+    return jax.make_mesh((len(devs) // data_shards, data_shards),
+                         (axis, data_axis), devices=devs)
 
 
 class MeshRuntime(ProtocolRuntime):
     name = "mesh"
 
-    def __init__(self, prob, mesh: Mesh | None = None, axis: str = "tasks"):
+    def __init__(self, prob, mesh: Mesh | None = None, axis: str = "tasks",
+                 data_axis: str = "data", data_shards: int = 1):
         super().__init__(prob)
-        self.mesh = mesh if mesh is not None else task_mesh(axis=axis)
+        if mesh is None:
+            mesh = (task_data_mesh(data_shards, axis=axis,
+                                   data_axis=data_axis)
+                    if data_shards > 1 else task_mesh(axis=axis))
+        if data_axis in mesh.axis_names:
+            mesh_shards = mesh.shape[data_axis]
+            if data_shards not in (1, mesh_shards):
+                raise ValueError(
+                    f"data_shards={data_shards} contradicts the mesh's "
+                    f"{data_axis!r} axis of size {mesh_shards}")
+            data_shards = mesh_shards
+        elif data_shards > 1:
+            raise ValueError(f"data_shards={data_shards} needs a mesh with "
+                             f"a {data_axis!r} axis (task_data_mesh)")
+        self.mesh = mesh
         self.axis = axis
+        self.data_axis = data_axis
+        self.data_shards = int(data_shards)
         ndev = self.mesh.shape[axis]
         if prob.m % ndev:
             raise ValueError(f"m={prob.m} tasks must be divisible by the "
                              f"{ndev} devices on axis {axis!r} (each chip "
                              f"simulates m/devices machines)")
+        if prob.n % self.data_shards:
+            raise ValueError(f"n={prob.n} samples per task must be "
+                             f"divisible by data_shards={self.data_shards}")
         self._per_chip = prob.m // ndev
+        self._gram2d = None
 
     @property
     def local_tasks(self) -> int:
@@ -88,6 +134,58 @@ class MeshRuntime(ProtocolRuntime):
         self._charge("worker->master", vectors, dim, note, wire=x.size)
         return jax.lax.psum(jnp.sum(x, axis=0), self.axis)
 
+    # -- data axis: real collectives over the mesh's "data" axis -------
+    _count_data_wire = True
+
+    def _psum_data(self, x):
+        return jax.lax.psum(x, self.data_axis)
+
+    def _pmean_data(self, x):
+        return jax.lax.pmean(x, self.data_axis)
+
+    def _gather_samples(self, x, axis):
+        return jax.lax.all_gather(x, self.data_axis, axis=axis, tiled=True)
+
+    # ------------------------------------------------------------------
+    # worker data: shard-built Gram cache (2-D only)
+    # ------------------------------------------------------------------
+    def _worker_data(self):
+        data = dict(super()._worker_data())
+        if self.data_shards > 1 and "gram_A" in data:
+            if self._gram2d is None:
+                self._gram2d = self._shard_gram(data["Xs"], data["ys"])
+                # one-time setup traffic: each chip contributes its
+                # L (p, p) + (p,) partials to the psum.  Added directly
+                # (not via _charge_data) — run_rounds may already be
+                # recording its per-round template when the lazy data
+                # build fires, and this psum runs once per solve.
+                p = self.prob.p
+                self.data_collective_floats_per_chip += \
+                    self.local_tasks * (p * p + p)
+            data["gram_A"], data["gram_b"] = self._gram2d
+        return data
+
+    def _shard_gram(self, Xs, ys):
+        """The per-task Gram statistics as a psum of per-shard partial
+        Grams — the 2-D replacement for the monolithic make-time
+        ``gram_stats`` (identical to it up to float rounding; the
+        sharded-vs-unsharded agreement is tested)."""
+        n = self.prob.n
+
+        def program(Xs, ys):            # (L, n/D, p), (L, n/D)
+            A = jnp.einsum("jni,jnk->jik", Xs, Xs) / n
+            b = jnp.einsum("jni,jn->ji", Xs, ys) / n
+            return (jax.lax.psum(A, self.data_axis),
+                    jax.lax.psum(b, self.data_axis))
+
+        fn = shard_map(
+            program, mesh=self.mesh,
+            in_specs=(P(self.axis, self.data_axis, None),
+                      P(self.axis, self.data_axis)),
+            out_specs=(P(self.axis, None, None), P(self.axis, None)),
+            **_NO_REP_CHECK)
+        return jax.jit(fn)(Xs, ys)
+
     def _specs(self, state, sharded):
         axis = self.axis
 
@@ -99,9 +197,18 @@ class MeshRuntime(ProtocolRuntime):
 
         state_specs = {n: spec(v, n in sharded) for n, v in state.items()}
         data = self._worker_data()
-        # every data leaf is a per-task stack: sharded along axis 0
-        data_specs = {n: P(axis, *([None] * (jnp.ndim(v) - 1)))
-                      for n, v in data.items()}
+
+        def data_spec(name, v):
+            # every data leaf is a per-task stack: sharded along axis 0;
+            # sample leaves additionally shard their row axis (axis 1)
+            # across the data axis of a 2-D mesh.  Derived statistics
+            # (the Gram cache) replicate across data shards.
+            rest = [None] * (jnp.ndim(v) - 1)
+            if self.data_shards > 1 and name in SAMPLE_AXIS_LEAVES:
+                rest[0] = self.data_axis
+            return P(axis, *rest)
+
+        data_specs = {n: data_spec(n, v) for n, v in data.items()}
         return state_specs, data, data_specs
 
     def _compile(self, body, state, sharded):

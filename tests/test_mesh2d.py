@@ -1,0 +1,237 @@
+"""2-D ("tasks" x "data") mesh parity matrix (DESIGN.md §8).
+
+The tentpole invariants of within-task sharding, checked per solver:
+
+* result parity — sim ≡ sim-2D ≡ mesh-2D (every per-task statistic is
+  reassembled from its data shards before it is used, so the three
+  executions differ only by reduction-order rounding);
+* ledger invariance — the tasks-axis CommLog is BIT-IDENTICAL across
+  all three (data-axis collectives are measured, never charged: the
+  ledger stays in the paper's Table-1 units for any mesh layout);
+* accounting — mesh-2D tasks-axis collective floats still equal the
+  ledger's worker->master floats x tasks-per-chip, and the measured
+  data-axis floats match the analytic payloads (Gram-cache psum =
+  L(p²+p) once per solve; raw-path pmeans per round).
+
+Like the 1-D matrix this runs once in a subprocess (8 simulated
+devices, a 2x4 mesh), printing one machine-readable line per solver;
+the parametrized tests assert on their own solver's line.
+
+Sharded-vs-unsharded Gram agreement and the single-device sim-2D
+emulation need no devices and run in-process below.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+SOLVERS = ["local", "svd_trunc", "bestrep", "centralize", "proxgd",
+           "accproxgd", "admm", "dfw", "dgsp", "dnsp", "altmin"]
+
+# raw-data (gram=False) cases: the per-round data-axis reductions
+# (altmin included for its psum_data moment reassembly, the one raw
+# reduction not shared with another solver)
+RAW_SOLVERS = ["proxgd", "dgsp", "dnsp", "admm", "local", "altmin"]
+
+# logistic cases: the Newton/gradient refit loops reducing per step
+LOGISTIC_SOLVERS = ["local", "proxgd", "admm", "dgsp", "dnsp", "altmin"]
+
+SCRIPT = textwrap.dedent("""
+    import jax, jax.numpy as jnp
+    assert len(jax.devices()) == 8, jax.devices()
+    import repro
+    from repro.core.methods import MTLProblem, solver_names
+    from repro.data.synthetic import SimSpec, generate
+    from repro.runtime import task_data_mesh
+
+    D = 4                                  # data shards
+    mesh2d = task_data_mesh(D)             # (2 tasks) x (4 data)
+    T = mesh2d.shape["tasks"]
+
+    spec = SimSpec(p=24, m=8, r=3, n=48)
+    Xs, ys, Wstar, Sigma = generate(jax.random.PRNGKey(0), spec)
+    prob = MTLProblem.make(Xs, ys, "squared", A=2.0, r=3)
+    prob_raw = MTLProblem.make(Xs, ys, "squared", A=2.0, r=3, gram=False)
+    Ustar = jnp.linalg.svd(Wstar, full_matrices=False)[0][:, :3]
+    per_chip = prob.m // T
+
+    CASES = {
+        "local": {}, "svd_trunc": {}, "bestrep": {"U_star": Ustar},
+        "centralize": {"lam": 0.01, "iters": 60},
+        "proxgd": {"lam": 0.01, "rounds": 6, "record_every": 2},
+        "accproxgd": {"lam": 0.01, "rounds": 6},
+        "admm": {"lam": 0.01, "rho": 0.5, "rounds": 5},
+        "dfw": {"rounds": 5},
+        "dgsp": {"rounds": 3},
+        "dnsp": {"rounds": 3, "damping": 0.5, "l2": 1e-3},
+        "altmin": {"rounds": 3},
+    }
+    assert set(CASES) == set(solver_names()), "matrix must cover registry"
+
+    lspec = SimSpec(p=16, m=8, r=2, n=48, task="classification")
+    lXs, lys, lW, lS = generate(jax.random.PRNGKey(2), lspec)
+    lprob = MTLProblem.make(lXs, lys, "logistic", A=2.0, r=2)
+    LOGISTIC = {
+        "local": {}, "proxgd": {"lam": 0.01, "rounds": 4},
+        "admm": {"lam": 0.01, "rho": 0.5, "rounds": 3},
+        "dgsp": {"rounds": 2, "l2": 1e-3},
+        "dnsp": {"rounds": 2, "damping": 0.5, "l2": 1e-3},
+        "altmin": {"rounds": 2, "u_grad_steps": 5},
+    }
+
+    def ledger(res):
+        return [(e.round, e.direction, e.vectors, e.dim, e.note)
+                for e in res.comm.events]
+
+    def check(tag, problem, name, kw):
+        r1 = repro.solve(problem, method=name, backend="sim", **kw)
+        r2 = repro.solve(problem, method=name, backend="sim",
+                         data_shards=D, **kw)
+        r3 = repro.solve(problem, method=name, backend="mesh",
+                         mesh=mesh2d, **kw)
+        e_sim2d = float(jnp.max(jnp.abs(r1.W - r2.W)))
+        e_mesh2d = float(jnp.max(jnp.abs(r1.W - r3.W)))
+        ledger_eq = (ledger(r1) == ledger(r2) == ledger(r3)
+                     and r1.comm.summary() == r3.comm.summary())
+        meas = r3.extras["collective_floats_per_chip"]
+        expect = r3.comm.floats_by_direction("worker->master") * per_chip
+        hist_eq = (r1.rounds_axis == r3.rounds_axis
+                   and len(r1.iterates) == len(r3.iterates))
+        dcoll = r3.extras["data_collective_floats_per_chip"]
+        dcoll_sim = r2.extras["data_collective_floats_per_chip"]
+        print(f"{tag} {name} e_sim2d={e_sim2d:.3e} e_mesh2d={e_mesh2d:.3e} "
+              f"ledger_eq={int(ledger_eq)} hist_eq={int(hist_eq)} "
+              f"meas={meas} expect={expect} dcoll={dcoll} "
+              f"dcoll_sim={dcoll_sim} shards={r3.extras['data_shards']}")
+
+    for name, kw in CASES.items():
+        check("P2D", prob, name, kw)
+    for name in %(raw)r:
+        check("P2DRAW", prob_raw, name, CASES[name])
+    for name, kw in LOGISTIC.items():
+        check("P2DL", lprob, name, kw)
+
+    # analytic data-axis payloads (the accounting rule, DESIGN.md §8):
+    # gram solvers measure exactly the one-time cache psum; proxgd on
+    # raw data adds one (p, L) gradient pmean per round.
+    L, p = prob.m // T, prob.p
+    r = repro.solve(prob, method="dgsp", backend="mesh", mesh=mesh2d,
+                    rounds=3)
+    assert r.extras["data_collective_floats_per_chip"] == L * (p * p + p)
+    r = repro.solve(prob_raw, method="proxgd", backend="mesh", mesh=mesh2d,
+                    rounds=6, lam=0.01)
+    assert r.extras["data_collective_floats_per_chip"] == 6 * p * L
+    # 1-D mesh runs measure no data-axis traffic at all
+    r = repro.solve(prob, method="dgsp", backend="mesh", rounds=3)
+    assert r.extras["data_collective_floats_per_chip"] == 0
+    assert r.extras["data_shards"] == 1
+    print("ANALYTIC_OK")
+""") % {"raw": RAW_SOLVERS}
+
+
+@pytest.fixture(scope="module")
+def parity2d_lines():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=1800)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "ANALYTIC_OK" in out.stdout
+    lines = {}
+    for line in out.stdout.splitlines():
+        toks = line.split()
+        if line.startswith(("P2D ", "P2DRAW ", "P2DL ")):
+            lines[(toks[0], toks[1])] = dict(
+                kv.split("=") for kv in toks[2:])
+    return lines
+
+
+def _assert_row(row):
+    assert float(row["e_sim2d"]) < 1e-4, row
+    assert float(row["e_mesh2d"]) < 1e-4, row
+    assert row["ledger_eq"] == "1", row
+    assert row["hist_eq"] == "1", row
+    assert row["meas"] == row["expect"], row
+    assert row["shards"] == "4", row
+    # the sim emulation moves no bytes; the mesh measures real payloads
+    assert row["dcoll_sim"] == "0", row
+    assert int(row["dcoll"]) > 0, row
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("solver", SOLVERS)
+def test_two_d_parity(parity2d_lines, solver):
+    """sim ≡ sim-2D ≡ mesh-2D: same W (float tolerance), bit-identical
+    tasks-axis ledger, measured tasks-axis traffic == ledger x L."""
+    _assert_row(parity2d_lines[("P2D", solver)])
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("solver", RAW_SOLVERS)
+def test_two_d_parity_raw(parity2d_lines, solver):
+    """The per-round raw-path reductions (grad/Hessian/moment pmeans)."""
+    _assert_row(parity2d_lines[("P2DRAW", solver)])
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("solver", LOGISTIC_SOLVERS)
+def test_two_d_parity_logistic(parity2d_lines, solver):
+    """The iterative refit loops (Newton/gradient, reduce-per-step)."""
+    _assert_row(parity2d_lines[("P2DL", solver)])
+
+
+# ---------------------------------------------------------------------------
+# device-free checks: Gram sharding math + the sim emulation
+# ---------------------------------------------------------------------------
+
+def test_sharded_gram_matches_unsharded():
+    """Sum-of-partial-Grams == monolithic Gram to float tolerance (the
+    statistic the 2-D runtimes rebuild per solve)."""
+    from repro.core.worker_ops import gram_stats
+    Xs = jax.random.normal(jax.random.PRNGKey(0), (6, 40, 12))
+    ys = jax.random.normal(jax.random.PRNGKey(1), (6, 40))
+    A, b = gram_stats(Xs, ys)
+    for D in (2, 4, 8):
+        A2, b2 = gram_stats(Xs, ys, data_shards=D)
+        np.testing.assert_allclose(np.asarray(A2), np.asarray(A),
+                                   atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(b2), np.asarray(b),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_sim_emulation_single_device():
+    """data_shards>1 under backend="sim" needs no devices at all —
+    the reshaped-vmap emulation runs (and agrees) on a 1-device CPU."""
+    import repro
+    from repro.core.methods import MTLProblem
+    from repro.data.synthetic import SimSpec, generate
+
+    spec = SimSpec(p=12, m=6, r=2, n=24)
+    Xs, ys, _, _ = generate(jax.random.PRNGKey(0), spec)
+    prob = MTLProblem.make(Xs, ys, "squared", A=2.0, r=2)
+    r1 = repro.solve(prob, method="proxgd", rounds=4, lam=0.01)
+    r2 = repro.solve(prob, method="proxgd", rounds=4, lam=0.01,
+                     data_shards=3)
+    assert float(jnp.max(jnp.abs(r1.W - r2.W))) < 1e-4
+    assert r2.extras["data_shards"] == 3
+    assert [(e.round, e.vectors, e.dim) for e in r1.comm.events] \
+        == [(e.round, e.vectors, e.dim) for e in r2.comm.events]
+
+
+def test_bad_shard_counts_raise():
+    import repro
+    from repro.core.methods import MTLProblem
+    from repro.data.synthetic import SimSpec, generate
+
+    spec = SimSpec(p=8, m=4, r=2, n=10)
+    Xs, ys, _, _ = generate(jax.random.PRNGKey(0), spec)
+    prob = MTLProblem.make(Xs, ys, "squared", A=2.0, r=2)
+    with pytest.raises(ValueError, match="divisible by data_shards"):
+        repro.solve(prob, method="proxgd", rounds=2, data_shards=3)
