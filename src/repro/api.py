@@ -14,7 +14,7 @@ from .runtime.base import ProtocolRuntime, make_runtime
 def solve(prob, method: str = "dgsp", backend: str = "sim", *,
           mesh=None, axis: str = "tasks", data_shards: int = 1,
           data_axis: str = "data", rounds: Optional[int] = None,
-          scan: Optional[bool] = None,
+          scan: Optional[bool] = None, sv_engine: Optional[str] = None,
           runtime: Optional[ProtocolRuntime] = None, **hp):
     """Run one registered solver on one backend.
 
@@ -49,6 +49,18 @@ def solve(prob, method: str = "dgsp", backend: str = "sim", *,
         the eager one-jitted-step-per-round driver.  Ledger, snapshots
         and results are identical either way
         (``tests/test_runtime_parity.py``).
+    sv_engine: "lazy" (the default inside the prox-family solvers) runs
+        the master's singular-value shrinkage / truncation on the
+        warm-started randomized spectral engine
+        (``repro.core.spectral``, DESIGN.md §9): matvec-only rounds on
+        a carried top-(k+oversample) basis with residual-tested exact
+        fallback.  "exact" forces the full ``jnp.linalg.svd`` master.
+        Results agree to the engine's residual tolerance and the
+        CommLog is bit-identical (the master is replicated: the engine
+        is compute-only).  Forwarded only when given, to solvers that
+        take it (prox family, centralize, svd_trunc); a per-solver
+        ``sv_rank=`` hyper-parameter overrides the carried rank hint
+        (default: the problem's assumed rank bound r).
     runtime: pass an explicit ProtocolRuntime instead of backend/mesh.
     **hp: solver hyper-parameters (lam, eta, damping, ...).
 
@@ -78,6 +90,8 @@ def solve(prob, method: str = "dgsp", backend: str = "sim", *,
         hp["rounds"] = rounds
     if scan is not None:
         hp["scan"] = scan
+    if sv_engine is not None:
+        hp["sv_engine"] = sv_engine
     res = get_solver(method)(prob, runtime=runtime, **hp)
     res.extras["backend"] = runtime.name
     res.extras["data_shards"] = runtime.data_shards

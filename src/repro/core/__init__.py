@@ -1,6 +1,7 @@
 """Core: the paper's contribution — distributed multi-task learning with a
 shared low-rank representation (Wang, Kolar, Srebro 2016)."""
-from . import losses, linear_model, svd_ops, comm, worker_ops  # noqa: F401
+from . import (losses, linear_model, spectral, svd_ops, comm,  # noqa: F401
+               worker_ops)
 from .comm import CommLog  # noqa: F401
 from .methods import MTLProblem, MTLResult, get_solver, solver_names  # noqa: F401
 

@@ -31,6 +31,16 @@ class MTLProblem:
     # costs O(p^2) per task instead of O(n p) (repro.core.worker_ops).
     gram_A: Optional[jnp.ndarray] = None
     gram_b: Optional[jnp.ndarray] = None
+    # Per-layout memo of the 2-D (shard-summed) Gram cache, filled by
+    # the runtimes on first use (runtime/{mesh,sim}.py): one problem is
+    # typically solved many times on one mesh, and the shard-partial
+    # psum rebuild is a full pass over the (m, n, p) designs.  The
+    # rebuild's data-axis traffic is still ACCOUNTED once per solve —
+    # the protocol builds its cache per solve; the memo only reuses the
+    # bit-identical result (cf. the charged-but-free broadcast of the
+    # replicated master, DESIGN.md §4/§8).
+    gram2d_cache: Dict = dataclasses.field(default_factory=dict,
+                                           repr=False, compare=False)
 
     @property
     def m(self) -> int:
@@ -95,6 +105,23 @@ class MTLResult:
     def record(self, rnd: int, W: jnp.ndarray) -> None:
         self.rounds_axis.append(rnd)
         self.iterates.append(W)
+
+
+def gram_round_leaves(prob: MTLProblem):
+    """Data leaves a round body reads when the Gram cache serves every
+    worker path (squared loss, cache built): the cached statistics
+    only.  ``None`` (= bind everything) otherwise — raw-path and
+    logistic bodies stream the samples every round.
+
+    Passed to ``run_rounds(data_leaves=...)`` so gram-served solvers do
+    not keep the raw ``(n, p)`` designs in the device-resident
+    round-loop data: at large n — and especially on a 2-D mesh, where
+    ``Xs``/``ys`` would shard along the data axis — that binding is
+    pure layout/transfer cost for arrays no round touches.
+    """
+    if prob.loss.name == "squared" and prob.gram_A is not None:
+        return ("gram_A", "gram_b")
+    return None
 
 
 def iterate_recorder(res: "MTLResult", record_every: int, key: str = "W"):

@@ -14,9 +14,10 @@ import jax
 import jax.numpy as jnp
 
 from .. import linear_model as lm
-from .. import worker_ops
-from ..svd_ops import sv_shrink, svd_truncate, nuclear_norm
-from .base import MTLProblem, MTLResult, default_runtime, register
+from .. import spectral, worker_ops
+from ..svd_ops import svd_truncate
+from .base import (MTLProblem, MTLResult, default_runtime, gram_round_leaves,
+                   register)
 
 
 def _local_columns(prob: MTLProblem, data, l2: float, rt=None) -> jnp.ndarray:
@@ -46,7 +47,8 @@ def local(prob: MTLProblem, l2: float = 1e-6, runtime=None,
 
     state = rt.one_shot(body, {"W": jnp.zeros((prob.p, prob.m),
                                               prob.Xs.dtype)},
-                        sharded=("W",), count_round=False, scan=scan)
+                        sharded=("W",), count_round=False, scan=scan,
+                        data_leaves=gram_round_leaves(prob))
     res = MTLResult("local", state["W"], rt.comm)
     res.record(0, state["W"])
     return res
@@ -54,24 +56,35 @@ def local(prob: MTLProblem, l2: float = 1e-6, runtime=None,
 
 @register("svd_trunc")
 def svd_trunc(prob: MTLProblem, l2: float = 1e-6, rank: int | None = None,
-              runtime=None, scan: bool = True, **_) -> MTLResult:
+              runtime=None, scan: bool = True, sv_engine: str = "lazy",
+              **_) -> MTLResult:
     """One-shot SVD truncation of the Local solution (§5).
 
     Each worker ships its local w_hat (1 vector of dim p) to the master,
     which truncates to rank r and ships each column back (1 vector).
+    The master truncation runs on the spectral engine: cold randomized
+    subspace iteration with exact fallback (``spectral.truncate``) —
+    matvec-only when the spectrum cooperates, a full SVD when a tied
+    boundary makes the answer ambiguous.
     """
     rt = default_runtime(prob, runtime)
     l2 = max(l2, prob.l2)
     r = int(rank if rank is not None else prob.r)
+    if sv_engine not in ("lazy", "exact"):
+        raise ValueError(
+            f"unknown sv_engine {sv_engine!r}; have 'lazy', 'exact'")
+    lazy = sv_engine == "lazy"
 
     def body(k, state, data):
         W_local = _local_columns(prob, data, l2, rt=rt)
         W_full = rt.gather_columns(W_local, "local solution")
-        W_t = svd_truncate(W_full, r)
+        W_t = spectral.truncate(W_full, r) if lazy \
+            else svd_truncate(W_full, r)
         return {"W": rt.broadcast(W_t, "truncated column")}
 
     state = rt.one_shot(body, {"W": jnp.zeros((prob.p, prob.m),
-                                              prob.Xs.dtype)}, scan=scan)
+                                              prob.Xs.dtype)}, scan=scan,
+                        data_leaves=gram_round_leaves(prob))
     res = MTLResult("svd_trunc", state["W"], rt.comm)
     res.record(1, state["W"])
     return res
@@ -92,7 +105,8 @@ def bestrep(prob: MTLProblem, U_star: jnp.ndarray = None, runtime=None,
 
     state = rt.one_shot(body, {"W": jnp.zeros((prob.p, prob.m),
                                               prob.Xs.dtype)},
-                        sharded=("W",), count_round=False, scan=scan)
+                        sharded=("W",), count_round=False, scan=scan,
+                        data_leaves=gram_round_leaves(prob))
     res = MTLResult("bestrep", state["W"], rt.comm)
     res.record(0, state["W"])
     return res
@@ -101,6 +115,7 @@ def bestrep(prob: MTLProblem, U_star: jnp.ndarray = None, runtime=None,
 @register("centralize")
 def centralize(prob: MTLProblem, lam: float = None, iters: int = 400,
                tol: float = 1e-9, runtime=None, scan: bool = True,
+               sv_engine: str = "lazy", sv_rank: int = None,
                **_) -> MTLResult:
     """Nuclear-norm regularized ERM with all data on the master (eq. 2.3).
 
@@ -108,6 +123,12 @@ def centralize(prob: MTLProblem, lam: float = None, iters: int = 400,
     master has all the data so rounds are free; the communication charge
     is the one-time shipment of the n local samples per machine (the
     design row and its label travel together as n (p+1)-vectors).
+
+    The prox steps run on the spectral engine, warm-starting the basis
+    across FISTA iterations inside the one master call; the engine
+    hands back the shrunk spectrum's nuclear norm with each step, so
+    the logged ``extras["nuclear_norm"]`` reuses the final prox's
+    spectrum instead of paying a second full SVD on the result.
     """
     rt = default_runtime(prob, runtime)
     loss, m, p = prob.loss, prob.m, prob.p
@@ -116,6 +137,7 @@ def centralize(prob: MTLProblem, lam: float = None, iters: int = 400,
         lam = 0.1 / jnp.sqrt(prob.n * m)
     from .convex import data_smoothness
     eta = 1.0 / data_smoothness(prob)
+    sv = spectral.shrink_engine(prob, sv_engine, rank=sv_rank)
 
     def body(k, state, data):
         Xs, ys = data["Xs"], data["ys"]
@@ -128,23 +150,25 @@ def centralize(prob: MTLProblem, lam: float = None, iters: int = 400,
         Xs_full, ys_full = Xy[..., :-1], Xy[..., -1]
 
         def step(carry, _):
-            W, Z, t = carry
+            W, Z, t, svc, _ = carry
             G = lm.all_task_grads(loss, Z, Xs_full, ys_full, prob.l2)
-            W_new = sv_shrink(Z - eta * m * G, eta * m * lam)
+            W_new, nn, svc = sv.shrink(Z - eta * m * G, eta * m * lam, svc)
             t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
             Z_new = W_new + ((t - 1.0) / t_new) * (W_new - W)
-            return (W_new, Z_new, t_new), None
+            return (W_new, Z_new, t_new, svc, nn), None
 
         W0 = jnp.zeros((p, m), Xs.dtype)
-        (W, _, _), _ = jax.lax.scan(step, (W0, W0, jnp.array(1.0, Xs.dtype)),
-                                    None, length=iters)
-        return {"W": rt.broadcast(W, "final predictor")}
+        carry0 = (W0, W0, jnp.array(1.0, Xs.dtype), sv.init_carry(),
+                  jnp.zeros((), Xs.dtype))
+        (W, _, _, _, nn), _ = jax.lax.scan(step, carry0, None, length=iters)
+        return {"W": rt.broadcast(W, "final predictor"), "nn": nn}
 
-    state = rt.one_shot(body, {"W": jnp.zeros((p, m), prob.Xs.dtype)},
+    state = rt.one_shot(body, {"W": jnp.zeros((p, m), prob.Xs.dtype),
+                               "nn": jnp.zeros((), prob.Xs.dtype)},
                         scan=scan)
     W = state["W"]
     res = MTLResult("centralize", W, rt.comm,
-                    extras={"lam": float(lam),
-                            "nuclear_norm": float(nuclear_norm(W))})
+                    extras={"lam": float(lam), "sv_engine": sv.mode,
+                            "nuclear_norm": float(state["nn"])})
     res.record(1, W)
     return res

@@ -17,16 +17,22 @@ and broadcast publishes the update.  ``scan=True`` (default) fuses the
 whole round loop into one device-resident lax.scan; the driver snapshots
 the iterate every ``record_every`` rounds in either mode (rounds are the
 unit of the paper's plots).
+
+The shrinkage masters run on the spectral engine
+(:mod:`repro.core.spectral`, ``sv_engine="lazy"`` by default): a
+warm-started randomized SVT whose basis carry rides in the solver's
+scan state — matvec-only rounds with an exact-SVD fallback, identical
+communication either way (DESIGN.md §9).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from .. import worker_ops
-from ..svd_ops import leading_sv, sv_shrink
-from .base import (MTLProblem, MTLResult, default_runtime, iterate_recorder,
-                   register)
+from .. import spectral, worker_ops
+from ..spectral import leading_sv
+from .base import (MTLProblem, MTLResult, default_runtime, gram_round_leaves,
+                   iterate_recorder, register)
 
 
 def data_smoothness(prob: MTLProblem) -> float:
@@ -52,8 +58,18 @@ def data_smoothness(prob: MTLProblem) -> float:
     if prob.gram_A is not None:
         lmax = jnp.max(jax.vmap(spec)(prob.gram_A))
     else:
-        lmax = jnp.max(jax.vmap(
-            lambda X: spec(X.T @ X / X.shape[0]))(prob.Xs))
+        # matvec-only power iteration on the IMPLICIT Gram operator
+        # v -> X^T (X v) / n: never materializes the (p, p) per-task
+        # Gram (m p^2 floats — 12 GB at the spectral bench spec)
+        def spec_raw(X):
+            n = X.shape[0]
+            v = jnp.ones((X.shape[1],), X.dtype) / jnp.sqrt(X.shape[1])
+            def body(_, v):
+                w = X.T @ (X @ v) / n
+                return w / jnp.maximum(jnp.linalg.norm(w), 1e-30)
+            v = jax.lax.fori_loop(0, 50, body, v)
+            return v @ (X.T @ (X @ v)) / n
+        lmax = jnp.max(jax.vmap(spec_raw)(prob.Xs))
     return float(prob.loss.smoothness * lmax)
 
 
@@ -84,62 +100,74 @@ def _grad_columns(rt, prob, Z, data, note):
 @register("proxgd")
 def proxgd(prob: MTLProblem, lam: float = 1e-3, rounds: int = 200,
            eta: float = None, init: str = "local", record_every: int = 1,
-           runtime=None, scan: bool = True, **_) -> MTLResult:
+           runtime=None, scan: bool = True, sv_engine: str = "lazy",
+           sv_rank: int = None, **_) -> MTLResult:
     rt = default_runtime(prob, runtime)
     if eta is None:
         eta = 1.0 / data_smoothness(prob)
     m = prob.m
+    sv = spectral.shrink_engine(prob, sv_engine, rank=sv_rank)
 
     def body(k, state, data):
         G = _grad_columns(rt, prob, state["W"], data, "gradient column")
         # master prox step (3.3); grad of (1/m)sum L_nj carries 1/m, the
         # per-task smoothness is H/m so the per-W step uses eta*m
-        W_new = sv_shrink(state["W"] - eta * m * G, eta * m * lam)
-        return {"W": rt.broadcast(W_new, "updated predictor")}
+        W_new, _, svc = sv.shrink(state["W"] - eta * m * G, eta * m * lam,
+                                  state["sv"])
+        return {"W": rt.broadcast(W_new, "updated predictor"), "sv": svc}
 
-    state = {"W": _init_W(prob, init)}
+    state = {"W": _init_W(prob, init), "sv": sv.init_carry()}
     res = MTLResult("proxgd", state["W"], rt.comm,
-                    extras={"lam": lam, "eta": eta})
+                    extras={"lam": lam, "eta": eta, "sv_engine": sv.mode})
     res.record(0, state["W"])
     state = rt.run_rounds(rounds, body, state, scan=scan,
-                          record=iterate_recorder(res, record_every))
+                          record=iterate_recorder(res, record_every),
+                          data_leaves=gram_round_leaves(prob))
     res.W = state["W"]
+    res.extras.update(sv.stats(state["sv"]))
     return res
 
 
 @register("accproxgd")
 def accproxgd(prob: MTLProblem, lam: float = 1e-3, rounds: int = 200,
               eta: float = None, init: str = "local", record_every: int = 1,
-              runtime=None, scan: bool = True, **_) -> MTLResult:
+              runtime=None, scan: bool = True, sv_engine: str = "lazy",
+              sv_rank: int = None, **_) -> MTLResult:
     rt = default_runtime(prob, runtime)
     if eta is None:
         eta = 1.0 / data_smoothness(prob)
     m = prob.m
+    sv = spectral.shrink_engine(prob, sv_engine, rank=sv_rank)
 
     def body(k, state, data):
         W, Z, t = state["W"], state["Z"], state["t"]
         G = _grad_columns(rt, prob, Z, data, "gradient at Z")
-        W_new = sv_shrink(Z - eta * m * G, eta * m * lam)      # (3.4)
+        W_new, _, svc = sv.shrink(Z - eta * m * G, eta * m * lam,
+                                  state["sv"])                  # (3.4)
         t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
         Z_new = W_new + ((t - 1.0) / t_new) * (W_new - W)       # (3.5)
         return {"W": W_new, "Z": rt.broadcast(Z_new, "updated Z column"),
-                "t": t_new}
+                "t": t_new, "sv": svc}
 
     W0 = _init_W(prob, init)
-    state = {"W": W0, "Z": W0, "t": jnp.array(1.0, W0.dtype)}
+    sv0 = sv.init_carry()
+    state = {"W": W0, "Z": W0, "t": jnp.array(1.0, W0.dtype), "sv": sv0}
     res = MTLResult("accproxgd", state["W"], rt.comm,
-                    extras={"lam": lam, "eta": eta})
+                    extras={"lam": lam, "eta": eta, "sv_engine": sv.mode})
     res.record(0, state["W"])
     state = rt.run_rounds(rounds, body, state, scan=scan,
-                          record=iterate_recorder(res, record_every))
+                          record=iterate_recorder(res, record_every),
+                          data_leaves=gram_round_leaves(prob))
     res.W = state["W"]
+    res.extras.update(sv.stats(state["sv"]))
     return res
 
 
 @register("admm")
 def admm(prob: MTLProblem, lam: float = 1e-3, rho: float = 1.0,
          rounds: int = 200, record_every: int = 1, newton_iters: int = 8,
-         runtime=None, scan: bool = True, **_) -> MTLResult:
+         runtime=None, scan: bool = True, sv_engine: str = "lazy",
+         sv_rank: int = None, **_) -> MTLResult:
     """Appendix A. Worker step (A.1) is a regularized ERM:
         w_j+ = argmin_w L_nj(w)/m + <w - z_j, q_j> + rho/2 ||w - z_j||^2.
     Squared loss: closed form (from the Gram cache when present —
@@ -150,6 +178,7 @@ def admm(prob: MTLProblem, lam: float = 1e-3, rho: float = 1.0,
     """
     rt = default_runtime(prob, runtime)
     loss, m, p = prob.loss, prob.m, prob.p
+    sv = spectral.shrink_engine(prob, sv_engine, rank=sv_rank)
 
     def body(k, state, data):
         W_local, Z, Q = state["W"], state["Z"], state["Q"]
@@ -158,22 +187,25 @@ def admm(prob: MTLProblem, lam: float = 1e-3, rho: float = 1.0,
                                           rho, m, prob.l2,
                                           iters=newton_iters, rt=rt)
         W_full = rt.gather_columns(W_local, "local w")
-        Z_new = sv_shrink(W_full + Q / rho, lam / rho)           # (A.2)
+        Z_new, _, svc = sv.shrink(W_full + Q / rho, lam / rho,
+                                  state["sv"])                    # (A.2)
         Q_new = Q + rho * (W_full - Z_new)                        # (A.3)
         return {"W": W_local,
                 "Z": rt.broadcast(Z_new, "z columns"),
-                "Q": rt.broadcast(Q_new, "q columns")}
+                "Q": rt.broadcast(Q_new, "q columns"), "sv": svc}
 
     W0 = jnp.zeros((p, m), prob.Xs.dtype)
-    state = {"W": W0, "Z": W0, "Q": W0}
+    state = {"W": W0, "Z": W0, "Q": W0, "sv": sv.init_carry()}
     res = MTLResult("admm", state["W"], rt.comm,
-                    extras={"lam": lam, "rho": rho})
+                    extras={"lam": lam, "rho": rho, "sv_engine": sv.mode})
     res.record(0, state["W"])
     # consensus variable Z is the estimator
     state = rt.run_rounds(rounds, body, state, sharded=("W",), scan=scan,
                           record=iterate_recorder(res, record_every,
-                                                  key="Z"))
+                                                  key="Z"),
+                          data_leaves=gram_round_leaves(prob))
     res.W = state["Z"]
+    res.extras.update(sv.stats(state["sv"]))
     return res
 
 
@@ -182,7 +214,9 @@ def dfw(prob: MTLProblem, radius: float = None, rounds: int = 200,
         record_every: int = 1, sv_iters: int = 60, runtime=None,
         scan: bool = True, **_) -> MTLResult:
     """Appendix B: Frank-Wolfe over {||W||_* <= R}; master only needs the
-    leading singular pair of the gradient (power iteration)."""
+    leading singular pair of the gradient — the K = 1 case of the
+    spectral engine (power iteration, residual-based early exit with
+    ``sv_iters`` as the worst-case budget)."""
     rt = default_runtime(prob, runtime)
     if radius is None:
         radius = prob.nuclear_radius
@@ -200,6 +234,7 @@ def dfw(prob: MTLProblem, radius: float = None, rounds: int = 200,
     res = MTLResult("dfw", state["W"], rt.comm, extras={"radius": radius})
     res.record(0, state["W"])
     state = rt.run_rounds(rounds, body, state, scan=scan,
-                          record=iterate_recorder(res, record_every))
+                          record=iterate_recorder(res, record_every),
+                          data_leaves=gram_round_leaves(prob))
     res.W = state["W"]
     return res

@@ -30,9 +30,10 @@ import jax
 import jax.numpy as jnp
 
 from .. import worker_ops
-from ..svd_ops import gram_schmidt_append, leading_sv
-from .base import (MTLProblem, MTLResult, default_runtime, iterate_recorder,
-                   register)
+from ..spectral import leading_sv
+from ..svd_ops import gram_schmidt_append
+from .base import (MTLProblem, MTLResult, default_runtime, gram_round_leaves,
+                   iterate_recorder, register)
 
 
 def _subspace_pursuit(prob: MTLProblem, rounds: int, direction: str,
@@ -73,7 +74,8 @@ def _subspace_pursuit(prob: MTLProblem, rounds: int, direction: str,
     res = MTLResult(name, state["W"], rt.comm)
     res.record(0, state["W"])
     state = rt.run_rounds(rounds, body, state, sharded=("W",), scan=scan,
-                          record=iterate_recorder(res, record_every))
+                          record=iterate_recorder(res, record_every),
+                          data_leaves=gram_round_leaves(prob))
     res.W = state["W"]
     res.extras["U"] = state["U"]
     res.extras["mask"] = state["mask"]
@@ -173,7 +175,8 @@ def altmin(prob: MTLProblem, rank: int = None, rounds: int = 30,
     res = MTLResult("altmin", state["W"], rt.comm)
     res.record(0, state["W"])
     state = rt.run_rounds(rounds, body, state, sharded=("W",), scan=scan,
-                          record=iterate_recorder(res, record_every))
+                          record=iterate_recorder(res, record_every),
+                          data_leaves=gram_round_leaves(prob))
     res.W = state["W"]
     res.extras["U"] = state["U"]
     return res

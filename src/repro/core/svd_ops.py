@@ -1,14 +1,16 @@
-"""SVD primitives used by the master node.
+"""Exact SVD primitives used by the master node.
 
 Three operations appear in the paper:
   * leading singular vectors (u, v) = SV(G)      — DFW / DGSP / DNSP master step
   * singular-value shrinkage prox_{eta*lam ||.||_*}  — ProxGD / AccProxGD / ADMM
   * rank-r truncation                             — one-shot SVD truncation
 
-``leading_sv`` is a power iteration on G G^T: only matvecs, which is the
-TPU-friendly choice (MXU work, no LAPACK) and mirrors the paper's remark
-that Frank–Wolfe-style methods avoid full SVDs. The full-SVD path uses
-jnp.linalg.svd and is reserved for master-side shrinkage.
+``leading_sv`` lives in :mod:`repro.core.spectral` (it is the K = 1
+case of the warm-started spectral engine, power iteration with a
+residual-based early exit) and is re-exported here for compatibility.
+The full-SVD paths below are the EXACT masters: the oracles the lazy
+engine is tested against, and the fallback it takes when its residual
+tests fail (``sv_engine="exact"`` selects them outright).
 """
 from __future__ import annotations
 
@@ -18,38 +20,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-
-@partial(jax.jit, static_argnames=("iters",))
-def leading_sv(G: jnp.ndarray, iters: int = 60, seed: int = 0
-               ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Top singular triplet (u, s, v) of G (p, m) by power iteration.
-
-    Deterministic start (fixed fold-in key) so every replica of the
-    "replicated master" computes bit-identical vectors without extra
-    communication.
-    """
-    p, m = G.shape
-    # Deterministic, data-derived init (no PRNG): one Krylov step applied
-    # to a fixed dense probe. Derived from G so shard_map's varying-axis
-    # tracking propagates correctly under collectives.
-    probe = (1.0 + 0.1 * jnp.cos(jnp.arange(m, dtype=G.dtype))) / jnp.sqrt(m)
-    v0 = G.T @ (G @ probe) + 1e-12 * probe
-    v0 = v0 / jnp.maximum(jnp.linalg.norm(v0), 1e-30)
-
-    def body(_, v):
-        # One matvec pair, ONE normalization: iterating v <- G^T G v / ||.||
-        # needs no intermediate unit-norm u (its scale cancels in the
-        # normalization), halving the norm/divide traffic per step.
-        w = G.T @ (G @ v)
-        return w / jnp.maximum(jnp.linalg.norm(w), 1e-30)
-
-    v = jax.lax.fori_loop(0, iters, body, v0)
-    u = G @ v
-    s = jnp.linalg.norm(u)
-    u = u / jnp.maximum(s, 1e-30)
-    # Sign convention: first nonzero-ish entry of u positive (determinism).
-    sign = jnp.where(jnp.sum(u) >= 0, 1.0, -1.0).astype(G.dtype)
-    return u * sign, s, v * sign
+from .spectral import _simplex_cap, leading_sv  # noqa: F401  (re-export)
 
 
 @jax.jit
@@ -76,19 +47,9 @@ def svd_truncate(M: jnp.ndarray, r: int) -> jnp.ndarray:
 def project_nuclear_ball(M: jnp.ndarray, radius: float) -> jnp.ndarray:
     """Euclidean projection onto {||M||_* <= radius} (simplex proj on spectrum)."""
     U, S, Vt = jnp.linalg.svd(M, full_matrices=False)
-
-    def needs_proj(S):
-        # project S onto the l1 ball of given radius (Duchi et al.)
-        k = S.shape[0]
-        mu = jnp.sort(S)[::-1]
-        css = jnp.cumsum(mu)
-        idx = jnp.arange(1, k + 1)
-        cond = mu - (css - radius) / idx > 0
-        rho = jnp.max(jnp.where(cond, idx, 0))
-        theta = (css[rho - 1] - radius) / rho
-        return jnp.maximum(S - theta, 0.0)
-
-    S_proj = jax.lax.cond(jnp.sum(S) > radius, needs_proj, lambda S: S, S)
+    S_proj = jax.lax.cond(jnp.sum(S) > radius,
+                          lambda S: _simplex_cap(S, radius)[0],
+                          lambda S: S, S)
     return (U * S_proj[None, :]) @ Vt
 
 

@@ -59,13 +59,19 @@ import jax.numpy as jnp
 from ..core.comm import CommLog
 
 # A round body: (k, state, data) -> state.  ``k`` is the (traced) round
-# index, ``state`` a flat dict of arrays, ``data`` the worker-local data
-# view — a dict with at least ``Xs`` (m,n,p) / ``ys`` (m,n) plus any
-# cached per-task statistics (``gram_A``/``gram_b``), every leaf stacked
-# over the task axis (the full stack under sim; the per-chip shard under
-# mesh).  With ``data_shards > 1`` the leaves named in
-# ``SAMPLE_AXIS_LEAVES`` are additionally split along their sample axis
-# (axis 1), so the body sees ``(L, n/data_shards, ...)`` blocks.
+# index, ``state`` a dict whose entries are arrays or small pytrees of
+# arrays (e.g. a solver-private spectral-engine carry, DESIGN.md §9 —
+# every leaf of an entry shares that entry's sharding), ``data`` the
+# worker-local data view — a dict with at least ``Xs`` (m,n,p) / ``ys``
+# (m,n) plus any cached per-task statistics (``gram_A``/``gram_b``),
+# every leaf stacked over the task axis (the full stack under sim; the
+# per-chip shard under mesh).  With ``data_shards > 1`` the leaves
+# named in ``SAMPLE_AXIS_LEAVES`` are additionally split along their
+# sample axis (axis 1), so the body sees ``(L, n/data_shards, ...)``
+# blocks.  Solvers whose round bodies read only a subset of the data
+# leaves declare it via ``run_rounds(..., data_leaves=...)`` so the
+# driver never binds — or lays out across the mesh — arrays no round
+# touches (the Gram-cached fast paths never re-read the raw designs).
 RoundBody = Callable[[jnp.ndarray, Dict[str, jnp.ndarray],
                       Dict[str, jnp.ndarray]], Dict[str, jnp.ndarray]]
 
@@ -139,6 +145,7 @@ class ProtocolRuntime:
         self._recording = False
         self._template: list[_WireEvent] = []
         self._data_template: list[int] = []
+        self._data_leaves: Optional[Tuple[str, ...]] = None
         self._used = False
 
     # ------------------------------------------------------------------
@@ -367,6 +374,36 @@ class ProtocolRuntime:
         return wd() if wd is not None else {"Xs": self.prob.Xs,
                                             "ys": self.prob.ys}
 
+    def _gram2d_memo(self, key, compute):
+        """Get-or-build the shard-summed 2-D Gram cache via the
+        problem's per-layout memo (``MTLProblem.gram2d_cache``): the
+        result is bit-identical for every solve of one problem on one
+        layout, so only the first solve pays the full-design pass.
+        Callers still account the setup traffic once per solve."""
+        memo = getattr(self.prob, "gram2d_cache", None)
+        if memo is not None and key in memo:
+            return memo[key]
+        out = compute()
+        if memo is not None:
+            memo[key] = out
+        return out
+
+    def _round_data(self) -> Dict[str, jnp.ndarray]:
+        """The worker-data leaves actually bound into the round loop.
+
+        The full ``_worker_data`` dict, pruned to the solver-declared
+        ``data_leaves`` subset when one was given.  Pruning happens
+        AFTER the backend's data build (the 2-D Gram-cache psum still
+        reads the raw ``Xs``/``ys``) but BEFORE device binding, so
+        gram-only solvers never pay sample-axis layout or transfer
+        cost for the raw designs no round touches.
+        """
+        data = self._worker_data()
+        if self._data_leaves is None:
+            return data
+        keep = set(self._data_leaves)
+        return {k: v for k, v in data.items() if k in keep}
+
     def _compile(self, body: RoundBody, state, sharded):
         """Return step(t:int, state) -> state with data bound as args."""
         raise NotImplementedError
@@ -456,15 +493,20 @@ class ProtocolRuntime:
                    state: Dict[str, jnp.ndarray],
                    sharded: Sequence[str] = (),
                    record: Optional[RecordSpec] = None,
-                   count_rounds: bool = True, scan: bool = False
+                   count_rounds: bool = True, scan: bool = False,
+                   data_leaves: Optional[Sequence[str]] = None
                    ) -> Dict[str, jnp.ndarray]:
         """Execute ``rounds`` protocol rounds of ``body``.
 
-        ``state`` is a dict of GLOBAL arrays; leaves named in
-        ``sharded`` live on the workers, split along their LAST axis
-        (task columns) under the mesh backend; everything else is
-        replicated master state.  Returned/recorded state is always
-        global, so callers never see backend-specific shapes.
+        ``state`` is a dict of GLOBAL arrays (or small pytrees of
+        arrays — e.g. a spectral-engine carry — sharded as a unit);
+        entries named in ``sharded`` live on the workers, split along
+        their LAST axis (task columns) under the mesh backend;
+        everything else is replicated master state.  Returned/recorded
+        state is always global, so callers never see backend-specific
+        shapes.  ``data_leaves`` names the subset of worker-data leaves
+        the body reads (None = all): leaves outside it are not bound
+        into the round loop at all (:meth:`_round_data`).
 
         ``scan=False`` dispatches one jitted step per round from a host
         loop; ``scan=True`` fuses the whole round loop into a single
@@ -489,6 +531,8 @@ class ProtocolRuntime:
         self._claim()
         self._template = []
         self._data_template = []
+        self._data_leaves = None if data_leaves is None else \
+            tuple(data_leaves)
         self._recording = True
         if scan:
             fn = self._compile_scan(body, state, tuple(sharded), rounds,
@@ -514,10 +558,13 @@ class ProtocolRuntime:
 
     def one_shot(self, body: RoundBody, state: Dict[str, jnp.ndarray],
                  sharded: Sequence[str] = (), count_round: bool = True,
-                 scan: bool = False) -> Dict[str, jnp.ndarray]:
+                 scan: bool = False,
+                 data_leaves: Optional[Sequence[str]] = None
+                 ) -> Dict[str, jnp.ndarray]:
         """Single protocol exchange (the one-shot baselines)."""
         return self.run_rounds(1, body, state, sharded=sharded,
-                               count_rounds=count_round, scan=scan)
+                               count_rounds=count_round, scan=scan,
+                               data_leaves=data_leaves)
 
 
 def make_runtime(backend: str, prob, *, mesh=None, axis: str = "tasks",

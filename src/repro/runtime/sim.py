@@ -82,11 +82,15 @@ class SimRuntime(ProtocolRuntime):
             # the Gram cache as the 2-D runtime defines it: a sum of
             # per-shard partial Grams (== the mesh backend's psum), not
             # the monolithic make-time statistics — agrees with them to
-            # float rounding (worker_ops.gram_stats).
+            # float rounding (worker_ops.gram_stats).  Memoized on the
+            # problem per shard count (a full pass over the designs,
+            # identical every solve — runtime/mesh.py does the same).
             if self._gram2d is None:
                 from ..core.worker_ops import gram_stats
-                self._gram2d = gram_stats(data["Xs"], data["ys"],
-                                          data_shards=D)
+                self._gram2d = self._gram2d_memo(
+                    ("sim", D),
+                    lambda: gram_stats(data["Xs"], data["ys"],
+                                       data_shards=D))
             data["gram_A"], data["gram_b"] = self._gram2d
         for name in SAMPLE_AXIS_LEAVES & set(data):
             v = data[name]
@@ -114,7 +118,7 @@ class SimRuntime(ProtocolRuntime):
     def _compile(self, body, state, sharded):
         # Data enters as jit ARGUMENTS (not closure constants) so XLA
         # does not constant-fold per-task Gram matrices at compile time.
-        data = self._worker_data()
+        data = self._round_data()
         if self.data_shards == 1:
             @jax.jit
             def step(k, state, data):
@@ -124,16 +128,20 @@ class SimRuntime(ProtocolRuntime):
 
             @jax.jit
             def step(k, state, data):
+                # axis_size keeps the emulated data axis alive even
+                # when pruning left no sample leaves to map over
+                # (gram-only round bodies, run_rounds(data_leaves=...))
                 out = jax.vmap(lambda d: body(k, state, d),
                                in_axes=(axes,), out_axes=0,
-                               axis_name=self.data_axis)(data)
+                               axis_name=self.data_axis,
+                               axis_size=self.data_shards)(data)
                 return self._unreplicate(out)
 
         return lambda t, s: step(jnp.int32(t), s, data)
 
     def _compile_scan(self, body, state, sharded, rounds, record):
         program = self._scan_program(body, rounds, record)
-        data = self._worker_data()
+        data = self._round_data()
         if self.data_shards == 1:
             donate = self._state_donation()
             step = jax.jit(program, donate_argnums=donate)
@@ -141,7 +149,8 @@ class SimRuntime(ProtocolRuntime):
 
         axes = self._data_in_axes(data)
         vprog = jax.vmap(program, in_axes=(None, axes), out_axes=0,
-                         axis_name=self.data_axis)
+                         axis_name=self.data_axis,
+                         axis_size=self.data_shards)
         # no donation: the emulated program's outputs are (D, ...)
         # batched, so the (global-shaped) input buffers cannot be reused
         step = jax.jit(lambda s, d: self._unreplicate(vprog(s, d)))

@@ -1,0 +1,373 @@
+"""Spectral master engine tests (repro.core.spectral, DESIGN.md §9).
+
+Three layers:
+
+* oracle tests — the engine's shrink/truncate/project against the
+  exact ``jnp.linalg.svd`` primitives over adversarial spectra
+  (rank-deficient, clustered/tied, heavy dense tails, values hugging
+  the threshold).  The engine's CONTRACT is output accuracy regardless
+  of which path ran: when its residual tests cannot certify the lazy
+  answer it must fall back, so every case asserts the oracle match and
+  the clear-cut cases additionally assert WHICH path was taken;
+* warm-start tests — across a drifting sequence of matrices (the
+  solver setting) the exact fallback fires once, on the cold start;
+* solver/parity tests — ``sv_engine="lazy"`` vs ``"exact"`` end to end
+  (final W within the documented tolerance, bit-identical CommLog),
+  scanned vs eager drivers, and the sim ≡ mesh ≡ mesh-2D matrix for
+  the prox family in an 8-device subprocess.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import spectral, svd_ops
+
+P, M = 96, 48
+
+
+def _mat(sigmas, p=P, m=M, seed=0, noise=0.0):
+    """M = U diag(sigmas) V^T with random orthonormal factors."""
+    k = len(sigmas)
+    ku, kv, kn = jax.random.split(jax.random.PRNGKey(seed), 3)
+    U = jnp.linalg.qr(jax.random.normal(ku, (p, k)))[0]
+    V = jnp.linalg.qr(jax.random.normal(kv, (m, k)))[0]
+    A = (U * jnp.asarray(sigmas, jnp.float32)) @ V.T
+    if noise:
+        A = A + noise * jax.random.normal(kn, (p, m))
+    return A
+
+
+def _warm_engine(M_, tau, rank=4):
+    """An engine warmed on M_ (first call = exact reseed)."""
+    eng = spectral.ShrinkEngine(P, M, mode="lazy", rank=rank)
+    carry = eng.init_carry()
+    _, _, carry = eng.shrink(M_, tau, carry)
+    return eng, carry
+
+
+# ---------------------------------------------------------------------------
+# oracle: shrink over adversarial spectra
+# ---------------------------------------------------------------------------
+# (name, sigmas, tau, expect_lazy) — expect_lazy None = either path is
+# acceptable, the output contract is what matters.
+SPECTRA = [
+    ("rank_deficient", [5.0, 3.0, 1.0], 0.5, True),
+    ("clustered_kept", [5.0, 5.0, 5.0, 5.0, 2.0], 0.5, True),
+    ("tied_at_threshold", [5.0, 1.0 + 1e-4, 1.0, 1.0 - 1e-4], 1.0, None),
+    ("near_threshold_tail", [5.0, 3.0] + [0.96] * 20, 1.0, None),
+    ("heavy_tail_below", [5.0, 3.0] + [0.5 / (i + 1) ** 0.6
+                                       for i in range(30)], 1.0, True),
+    ("heavy_tail_above", [5.0] + [3.0 / (i + 1) ** 0.3
+                                  for i in range(40)], 0.5, False),
+    ("block_saturated", [5.0] * 20, 0.5, False),
+]
+
+
+@pytest.mark.parametrize("name,sigmas,tau,expect_lazy", SPECTRA)
+def test_shrink_oracle(name, sigmas, tau, expect_lazy):
+    A = _mat(sigmas)
+    eng, carry = _warm_engine(A, tau)
+    ex0 = int(carry["exact_rounds"])
+    W, nn, carry = eng.shrink(A, tau, carry)        # warm call
+    ref = svd_ops.sv_shrink(A, tau)
+    scale = float(max(sigmas))
+    err = float(jnp.max(jnp.abs(W - ref)))
+    assert err <= 2e-5 * scale, (name, err)
+    nn_ref = float(svd_ops.nuclear_norm(ref))
+    assert abs(float(nn) - nn_ref) <= 1e-3 * max(nn_ref, 1.0), name
+    took_exact = int(carry["exact_rounds"]) > ex0
+    if expect_lazy is True:
+        assert not took_exact, f"{name}: expected the lazy path"
+    elif expect_lazy is False:
+        assert took_exact, f"{name}: expected the exact fallback"
+
+
+def test_shrink_cold_start_is_exact():
+    A = _mat([4.0, 2.0, 1.0])
+    eng = spectral.ShrinkEngine(P, M, mode="lazy", rank=4)
+    carry = eng.init_carry()
+    W, _, carry = eng.shrink(A, 0.5, carry)
+    np.testing.assert_array_equal(np.asarray(W),
+                                  np.asarray(svd_ops.sv_shrink(A, 0.5)))
+    assert int(carry["exact_rounds"]) == 1
+    assert int(carry["warm"]) == 1
+
+
+def test_shrink_all_below_threshold_gives_zero():
+    A = _mat([0.3, 0.2, 0.1], noise=1e-3)
+    eng, carry = _warm_engine(A, 1.0)
+    W, nn, carry = eng.shrink(A, 1.0, carry)
+    np.testing.assert_allclose(np.asarray(W), 0.0, atol=1e-6)
+    assert float(nn) == 0.0
+
+
+def test_exact_mode_matches_primitive_bitwise():
+    A = _mat([4.0, 2.0, 1.0], noise=0.01)
+    eng = spectral.ShrinkEngine(P, M, mode="exact")
+    assert eng.init_carry() == {}
+    W, nn, _ = eng.shrink(A, 0.5, {})
+    np.testing.assert_array_equal(np.asarray(W),
+                                  np.asarray(svd_ops.sv_shrink(A, 0.5)))
+
+
+def test_wide_block_degenerates_to_exact():
+    """rank + oversample >= min(p, m) compiles to the exact master."""
+    eng = spectral.ShrinkEngine(30, 8, mode="lazy", rank=5)
+    assert eng.mode == "exact" and not eng.lazy and eng.init_carry() == {}
+
+
+def test_bad_engine_name_raises():
+    with pytest.raises(ValueError, match="sv_engine"):
+        spectral.ShrinkEngine(30, 8, mode="greedy")
+
+
+# ---------------------------------------------------------------------------
+# warm start across a drifting sequence (the solver setting)
+# ---------------------------------------------------------------------------
+def test_warm_start_converges_across_rounds():
+    sig = [4.0, 2.5, 1.5, 0.8]
+    A = _mat(sig, noise=5e-3)
+    D = _mat([1.0, 0.7], seed=7)
+    tau = 0.3
+    eng = spectral.ShrinkEngine(P, M, mode="lazy", rank=4)
+    carry = eng.init_carry()
+    for t in range(12):
+        At = A + 0.02 * t * D                 # iterate drifts O(eta)/round
+        W, nn, carry = eng.shrink(At, tau, carry)
+        ref = svd_ops.sv_shrink(At, tau)
+        assert float(jnp.max(jnp.abs(W - ref))) <= 2e-5 * 4.0, t
+    # the exact branch fired exactly once: the cold start
+    assert int(carry["exact_rounds"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# truncate / project oracles
+# ---------------------------------------------------------------------------
+def test_truncate_oracle_decaying():
+    A = _mat([5.0, 3.0, 1.5, 0.7, 0.3, 0.1], noise=1e-3)
+    out = spectral.truncate(A, 3)
+    ref = svd_ops.svd_truncate(A, 3)
+    assert float(jnp.max(jnp.abs(out - ref))) <= 2e-5 * 5.0
+
+
+def test_truncate_tied_boundary_is_optimal():
+    """sigma_r == sigma_{r+1}: the best rank-r approximation is NOT
+    unique (any basis of the tied cluster is a valid singular basis and
+    has exactly zero residual), so matrix equality with LAPACK's
+    arbitrary choice is not the contract — optimal approximation error
+    and the rank bound are."""
+    A = _mat([5.0, 2.0, 2.0, 2.0, 1.0])
+    out = spectral.truncate(A, 2)
+    ref = svd_ops.svd_truncate(A, 2)
+    err_out = float(jnp.linalg.norm(A - out))
+    err_ref = float(jnp.linalg.norm(A - ref))
+    assert err_out <= err_ref * (1 + 1e-5)
+    assert int(jnp.linalg.matrix_rank(out, rtol=1e-4)) <= 2
+
+
+def test_truncate_wide_block_exact():
+    A = _mat([3.0, 1.0], p=20, m=10)
+    np.testing.assert_array_equal(np.asarray(spectral.truncate(A, 3)),
+                                  np.asarray(svd_ops.svd_truncate(A, 3)))
+
+
+def test_project_oracle():
+    A = _mat([5.0, 3.0, 1.0, 0.5], noise=1e-3)
+    nuc = float(svd_ops.nuclear_norm(A))
+    eng = spectral.ShrinkEngine(P, M, mode="lazy", rank=4)
+    carry = eng.init_carry()
+    # cold -> exact
+    W, carry = eng.project(A, 0.5 * nuc, carry)
+    np.testing.assert_allclose(
+        np.asarray(W), np.asarray(svd_ops.project_nuclear_ball(A, 0.5 * nuc)),
+        atol=1e-5)
+    assert int(carry["exact_rounds"]) == 1
+    # warm projection (water level above the tiny tail)
+    ex0 = int(carry["exact_rounds"])
+    W, carry = eng.project(A, 0.5 * nuc, carry)
+    np.testing.assert_allclose(
+        np.asarray(W), np.asarray(svd_ops.project_nuclear_ball(A, 0.5 * nuc)),
+        atol=2e-4)
+    assert int(carry["exact_rounds"]) == ex0, "warm projection went exact"
+    # far inside the ball: certified unchanged, no SVD
+    W, carry = eng.project(A, 50.0 * nuc, carry)
+    np.testing.assert_array_equal(np.asarray(W), np.asarray(A))
+    assert int(carry["exact_rounds"]) == ex0
+
+
+# ---------------------------------------------------------------------------
+# leading_sv: the K = 1 case (early exit preserves the oracle contract)
+# ---------------------------------------------------------------------------
+def test_leading_sv_early_exit_matches_budgeted_run():
+    A = _mat([5.0, 3.0, 1.0], noise=0.01)
+    u1, s1, v1 = spectral.leading_sv(A, iters=60)
+    u2, s2, v2 = spectral.leading_sv(A, iters=500)   # same fixpoint
+    np.testing.assert_allclose(float(s1), float(s2), rtol=1e-5)
+    assert abs(float(u1 @ u2)) > 1 - 1e-6
+    S = jnp.linalg.svd(A, compute_uv=False)
+    np.testing.assert_allclose(float(s1), float(S[0]), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# solver level: lazy vs exact end to end (sim backend, in process)
+# ---------------------------------------------------------------------------
+def _lowrank_problem():
+    from repro.core.methods import MTLProblem
+    from repro.data.synthetic import SimSpec, generate
+    spec = SimSpec(p=64, m=24, r=2, n=160, noise=0.05)
+    Xs, ys, Wstar, _ = generate(jax.random.PRNGKey(0), spec)
+    return MTLProblem.make(Xs, ys, "squared", A=2.0, r=2)
+
+
+@pytest.fixture(scope="module")
+def lowrank_prob():
+    return _lowrank_problem()
+
+
+PROX_KW = dict(rounds=25, lam=0.02, init="zeros", sv_rank=2)
+
+
+@pytest.mark.parametrize("method,kw", [
+    ("proxgd", PROX_KW),
+    ("accproxgd", PROX_KW),
+    ("admm", dict(rounds=15, lam=0.02, rho=0.5, sv_rank=2)),
+])
+def test_solver_lazy_matches_exact(lowrank_prob, method, kw):
+    import repro
+    rl = repro.solve(lowrank_prob, method=method, sv_engine="lazy", **kw)
+    re_ = repro.solve(lowrank_prob, method=method, sv_engine="exact", **kw)
+    assert float(jnp.max(jnp.abs(rl.W - re_.W))) <= 1e-5
+    led = lambda r: [(e.round, e.direction, e.vectors, e.dim, e.note)
+                     for e in r.comm.events]
+    assert led(rl) == led(re_), "engine changed the CommLog"
+    assert rl.extras["sv_engine"] == "lazy"
+    assert re_.extras["sv_engine"] == "exact"
+
+
+def test_proxgd_lazy_actually_engages(lowrank_prob):
+    """The parity above is vacuous if every round falls back — assert
+    the warm-started path carries most of the solve."""
+    import repro
+    r = repro.solve(lowrank_prob, method="proxgd", sv_engine="lazy",
+                    **PROX_KW)
+    assert r.extras["sv_exact_rounds"] < PROX_KW["rounds"] // 2, r.extras
+
+
+def test_scanned_equals_eager_with_lazy_engine(lowrank_prob):
+    import repro
+    rs = repro.solve(lowrank_prob, method="proxgd", sv_engine="lazy",
+                     scan=True, **PROX_KW)
+    re_ = repro.solve(lowrank_prob, method="proxgd", sv_engine="lazy",
+                      scan=False, **PROX_KW)
+    assert float(jnp.max(jnp.abs(rs.W - re_.W))) < 1e-6
+    led = lambda r: [(e.round, e.direction, e.vectors, e.dim, e.note)
+                     for e in r.comm.events]
+    assert led(rs) == led(re_)
+
+
+def test_centralize_nuclear_norm_reuses_spectrum(lowrank_prob):
+    import repro
+    for engine in ("lazy", "exact"):
+        r = repro.solve(lowrank_prob, method="centralize", iters=60,
+                        lam=0.02, sv_engine=engine)
+        ref = float(svd_ops.nuclear_norm(r.W))
+        assert abs(r.extras["nuclear_norm"] - ref) <= 1e-3 * max(ref, 1.0)
+
+
+def test_svd_trunc_lazy_matches_exact(lowrank_prob):
+    import repro
+    rl = repro.solve(lowrank_prob, method="svd_trunc", sv_engine="lazy")
+    re_ = repro.solve(lowrank_prob, method="svd_trunc", sv_engine="exact")
+    assert float(jnp.max(jnp.abs(rl.W - re_.W))) <= 1e-5
+
+
+# ---------------------------------------------------------------------------
+# backend parity: sim ≡ mesh ≡ mesh-2D for the lazy engine (subprocess)
+# ---------------------------------------------------------------------------
+SCRIPT = textwrap.dedent("""
+    import jax, jax.numpy as jnp
+    assert len(jax.devices()) == 8, jax.devices()
+    import repro
+    from repro.core.methods import MTLProblem
+    from repro.data.synthetic import SimSpec, generate
+    from repro.runtime import task_data_mesh, task_mesh
+
+    spec = SimSpec(p=64, m=24, r=2, n=160, noise=0.05)
+    Xs, ys, Wstar, _ = generate(jax.random.PRNGKey(0), spec)
+    prob = MTLProblem.make(Xs, ys, "squared", A=2.0, r=2)
+    mesh1d = task_mesh(8)
+    mesh2d = task_data_mesh(4)          # 2 task groups x 4 data shards
+
+    CASES = {
+        "proxgd": dict(rounds=12, lam=0.02, init="zeros", sv_rank=2),
+        "accproxgd": dict(rounds=12, lam=0.02, init="zeros", sv_rank=2),
+        "admm": dict(rounds=8, lam=0.02, rho=0.5, sv_rank=2),
+        "centralize": dict(iters=40, lam=0.02, sv_rank=2),
+    }
+
+    def ledger(res):
+        return [(e.round, e.direction, e.vectors, e.dim, e.note)
+                for e in res.comm.events]
+
+    for name, kw in CASES.items():
+        r1 = repro.solve(prob, method=name, backend="sim",
+                         sv_engine="lazy", **kw)
+        r2 = repro.solve(prob, method=name, backend="mesh", mesh=mesh1d,
+                         sv_engine="lazy", **kw)
+        r3 = repro.solve(prob, method=name, backend="sim", data_shards=4,
+                         sv_engine="lazy", **kw)
+        r4 = repro.solve(prob, method=name, backend="mesh", mesh=mesh2d,
+                         sv_engine="lazy", **kw)
+        e_mesh = float(jnp.max(jnp.abs(r1.W - r2.W)))
+        e_sim2d = float(jnp.max(jnp.abs(r1.W - r3.W)))
+        e_mesh2d = float(jnp.max(jnp.abs(r1.W - r4.W)))
+        ledger_eq = ledger(r1) == ledger(r2) == ledger(r3) == ledger(r4)
+        engaged = r1.extras.get("sv_exact_rounds", 0)
+        print(f"SPECPAR {name} e_mesh={e_mesh:.3e} e_sim2d={e_sim2d:.3e} "
+              f"e_mesh2d={e_mesh2d:.3e} ledger_eq={int(ledger_eq)} "
+              f"exact_rounds={engaged}")
+""")
+
+PROX_FAMILY = ["proxgd", "accproxgd", "admm", "centralize"]
+
+
+@pytest.fixture(scope="module")
+def spectral_parity_lines():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=1500)
+    assert out.returncode == 0, out.stdout + out.stderr
+    lines = {}
+    for line in out.stdout.splitlines():
+        toks = line.split()
+        if line.startswith("SPECPAR "):
+            lines[toks[1]] = dict(kv.split("=") for kv in toks[2:])
+    return lines
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("solver", PROX_FAMILY)
+def test_lazy_engine_backend_parity(spectral_parity_lines, solver):
+    """sim ≡ mesh-1D ≡ sim-2D ≡ mesh-2D for sv_engine="lazy": the engine
+    is deterministic replicated-master compute, so backends agree to
+    float tolerance with BIT-IDENTICAL ledgers."""
+    row = spectral_parity_lines[solver]
+    assert float(row["e_mesh"]) < 1e-4, row
+    assert float(row["e_sim2d"]) < 1e-4, row
+    assert float(row["e_mesh2d"]) < 1e-4, row
+    assert row["ledger_eq"] == "1", row
+
+
+@pytest.mark.slow
+def test_lazy_engine_engages_on_mesh_spec(spectral_parity_lines):
+    row = spectral_parity_lines["proxgd"]
+    assert int(row["exact_rounds"]) < 6, row
