@@ -27,7 +27,9 @@ def main(out_dir: str = "results/bench") -> None:
     spec = SimSpec(p=50, m=12, r=3, n=60)
     Xs, ys, Wstar, Sigma = generate(jax.random.PRNGKey(7), spec)
     prob = MTLProblem.make(Xs, ys, "squared", A=2.0, r=3)
-    Ustar = jnp.linalg.svd(Wstar, full_matrices=False)[0][:, :3]
+    # oracle subspace via the one learned-subspace code path
+    from repro.serve.mtl import FactoredModel
+    Ustar = FactoredModel.from_W(Wstar, 3).U
     mesh = task_mesh()
     per_chip = spec.m // mesh.size
     rows = []

@@ -58,9 +58,10 @@ def run_config(key, name: str, spec: SimSpec, out_dir: str,
     for mname, kw in METHODS:
         extra = {}
         if mname == "bestrep":
-            import jax.numpy as jnp
-            U, _, _ = jnp.linalg.svd(Wstar, full_matrices=False)
-            extra = {"U_star": U[:, :spec.r]}
+            # the oracle subspace through the ONE learned-subspace code
+            # path (spectral.truncate_factors via FactoredModel)
+            from repro.serve.mtl import FactoredModel
+            extra = {"U_star": FactoredModel.from_W(Wstar, spec.r).U}
         res, secs = timed(get_solver(mname), prob, **kw, **extra)
         curve = [(rnd, risk_fn(W))
                  for rnd, W in zip(res.rounds_axis, res.iterates)] \

@@ -1,0 +1,222 @@
+"""Serving benchmark: factored vs dense scoring + few-shot onboarding.
+
+The payoff of the shared-representation model at serving time
+(``repro.serve.mtl``, DESIGN.md §10), measured:
+
+* **scoring** — requests/sec of the ``MTLServer`` O(p r) hot path
+  (shared-basis gemm + code gather) vs the dense baseline (a column
+  gather from the full (p, m) predictor table) across batch sizes and
+  task counts, plus the parameter-memory ratio
+  ``p·m / ((p + m + 1)·r)``.  At the acceptance spec — p=2048,
+  m≥4096, r=4 — the run ASSERTS a ≥4x memory ratio and a factored
+  throughput win (the dense table is 32 MB of gather-unfriendly state;
+  the factored model is ~100 KB that stays cache-resident).
+* **onboarding** — few-shot error of a task the solver NEVER saw:
+  learn the subspace on the train-task split of a Fig-4 surrogate
+  (``data.realworld.split_tasks``), then fit each held-out task from
+  n ∈ {2, …, 32} samples inside the frozen subspace
+  (``serve.mtl.onboard_code``, an r-dimensional ridge) vs a per-task
+  full-p ridge on the same samples.  ASSERTS the subspace beats
+  per-task ridge at small n (the transfer-setting claim,
+  arXiv:1510.00633 §2.3).
+
+Writes ``BENCH_serve.json`` at the repo root (next to
+``BENCH_solvers.json``) so the serving trajectory is tracked across
+PRs:
+
+    PYTHONPATH=src python -m benchmarks.serve_bench [--tiny]
+
+``--tiny`` trims the sweep for CI smoke runs but KEEPS the acceptance
+spec point and both assertions (same code paths).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+import repro
+from repro.core.methods import MTLProblem
+from repro.core.linear_model import solve_ridge
+from repro.data.realworld import (REAL_SPECS, generate_surrogate,
+                                  split_tasks, take_tasks)
+from repro.serve.mtl import FactoredModel, MTLServer, onboard_code
+
+from .common import emit
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+# The acceptance spec (ISSUE 5): factored-vs-dense scoring at p=2048,
+# m>=4096, r=4 must show a >=4x parameter-memory ratio and a factored
+# throughput win.  Always measured, asserted on every run (CI smoke
+# included).
+ACCEPT = dict(p=2048, m=4096, r=4)
+MEM_RATIO_MIN = 4.0
+
+FULL = dict(batch_sizes=(16, 64, 256, 1024), task_counts=(1024, 4096, 16384),
+            shots=(2, 4, 8, 16, 32), holdout=8, repeats=100)
+TINY = dict(batch_sizes=(64, 256), task_counts=(4096,),
+            shots=(4, 8), holdout=8, repeats=20)
+
+ONBOARD_SURROGATE = "school"       # m=72, p=27, regression — fast on CPU
+# One shared ridge weight for BOTH arms (the r-dim code fit and the
+# full-p per-task baseline), tuned for the few-shot regime: at n <= 8
+# noisy samples both fits need real shrinkage (noise = 1.0 on this
+# surrogate), and a shared value keeps the comparison about the
+# SUBSPACE, not about per-arm hyper-tuning.
+ONBOARD_L2 = 0.3
+ONBOARD_ASSERT_SHOTS = (4, 8)      # "n=8 beats per-task ridge" (and n=4);
+                                   # n=2 sits at the surrogate's
+                                   # off-subspace deviation floor and is
+                                   # recorded, not asserted
+
+
+@jax.jit
+def _score_dense(W: jnp.ndarray, ids: jnp.ndarray, X: jnp.ndarray
+                 ) -> jnp.ndarray:
+    """The dense baseline: gather each request's (p,) predictor column
+    from the full (p, m) table, then a rowwise dot."""
+    return jnp.einsum("bp,bp->b", X, jnp.take(W, ids, axis=1).T)
+
+
+def _synthetic_model(p: int, m: int, r: int) -> FactoredModel:
+    """A well-conditioned factored model (scoring cost is shape-only)."""
+    ku, kv = jax.random.split(jax.random.PRNGKey(0))
+    U = jnp.linalg.qr(jax.random.normal(ku, (p, r)))[0]
+    V = jax.random.normal(kv, (m, r)) / jnp.sqrt(r)
+    s = jnp.linspace(2.0, 1.0, r)
+    return FactoredModel(U=U, s=s, V=V)
+
+
+def _throughput(fn, reps: int) -> float:
+    """Steady-state seconds/call (one warmup, then timed repeats)."""
+    jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def bench_scoring(spec: dict) -> dict:
+    """requests/sec vs batch size and m, factored (MTLServer end to
+    end) vs dense (jitted table-gather kernel)."""
+    p, r = ACCEPT["p"], ACCEPT["r"]
+    out = {"p": p, "r": r, "points": []}
+    for m in sorted(set(spec["task_counts"]) | {ACCEPT["m"]}):
+        model = _synthetic_model(p, m, r)
+        W = model.dense()
+        mem_ratio = (p * m) / ((p + m + 1) * r)
+        for B in spec["batch_sizes"]:
+            server = MTLServer(model, batch_size=B)
+            ids = jax.random.randint(jax.random.PRNGKey(1), (B,), 0, m)
+            X = jax.random.normal(jax.random.PRNGKey(2), (B, p))
+            t_fact = _throughput(lambda: server.score(ids, X)[0],
+                                 spec["repeats"])
+            t_dense = _throughput(lambda: _score_dense(W, ids, X),
+                                  spec["repeats"])
+            point = {
+                "m": m, "batch": B,
+                "mem_ratio_dense_over_factored": round(mem_ratio, 1),
+                "factored_req_per_s": round(B / t_fact, 1),
+                "dense_req_per_s": round(B / t_dense, 1),
+                "speedup_factored_vs_dense": round(t_dense / t_fact, 2),
+            }
+            out["points"].append(point)
+            emit(f"serve/score_m{m}_B{B}", t_fact,
+                 {"req_per_s": B / t_fact,
+                  "speedup_vs_dense": t_dense / t_fact})
+    # Asserted at batch >= 64 (the batched-serving regime this
+    # subsystem exists for): the B=16 points are recorded but carry
+    # sub-2x margins dominated by per-call dispatch overhead, which a
+    # loaded CI runner can flip without any regression in the kernel.
+    acc = [pt for pt in out["points"]
+           if pt["m"] >= ACCEPT["m"] and pt["batch"] >= 64]
+    out["accept"] = {
+        "spec": dict(ACCEPT, min_batch=64),
+        "mem_ratio": acc[0]["mem_ratio_dense_over_factored"],
+        "min_speedup_factored_vs_dense": min(
+            pt["speedup_factored_vs_dense"] for pt in acc),
+    }
+    assert out["accept"]["mem_ratio"] >= MEM_RATIO_MIN, \
+        f"memory ratio {out['accept']['mem_ratio']} under {MEM_RATIO_MIN}x"
+    assert out["accept"]["min_speedup_factored_vs_dense"] > 1.0, \
+        (f"factored scoring lost to dense at the acceptance spec: "
+         f"{out['accept']}")
+    return out
+
+
+def bench_onboarding(spec: dict) -> dict:
+    """Few-shot new-task error: frozen-subspace code fit vs per-task
+    full-p ridge, on tasks held out of the solve entirely."""
+    rs = REAL_SPECS[ONBOARD_SURROGATE]
+    Xs, ys, Xt, yt = generate_surrogate(jax.random.PRNGKey(300), rs)
+    train_ids, held_ids = split_tasks(rs.m, spec["holdout"], seed=0)
+    Xtr, ytr = take_tasks(train_ids, Xs, ys)
+    prob = MTLProblem.make(Xtr, ytr, "squared", A=3.0, r=rs.r)
+    res = repro.solve(prob, method="altmin", rounds=10)
+    model = res.factorize(rank=rs.r)
+
+    def rmse(w, Xe, ye):
+        return float(jnp.sqrt(jnp.mean((Xe @ w - ye) ** 2)))
+
+    curve = []
+    for shots in spec["shots"]:
+        sub_errs, ridge_errs = [], []
+        for j in [int(t) for t in held_ids]:
+            Xf, yf = Xs[j][:shots], ys[j][:shots]
+            c = onboard_code(model.U, Xf, yf, l2=ONBOARD_L2)
+            sub_errs.append(rmse(model.U @ c, Xt[j], yt[j]))
+            ridge_errs.append(rmse(solve_ridge(Xf, yf, ONBOARD_L2),
+                                   Xt[j], yt[j]))
+        pt = {"shots": shots,
+              "subspace_rmse": round(sum(sub_errs) / len(sub_errs), 4),
+              "ridge_rmse": round(sum(ridge_errs) / len(ridge_errs), 4)}
+        curve.append(pt)
+        emit(f"serve/onboard_n{shots}", 0.0,
+             {"subspace": pt["subspace_rmse"], "ridge": pt["ridge_rmse"]})
+    out = {"surrogate": ONBOARD_SURROGATE, "rank": rs.r, "p": rs.p,
+           "train_tasks": int(train_ids.shape[0]),
+           "held_out_tasks": int(held_ids.shape[0]),
+           "l2": ONBOARD_L2, "curve": curve}
+    few = [pt for pt in curve if pt["shots"] in ONBOARD_ASSERT_SHOTS]
+    assert few and all(pt["subspace_rmse"] < pt["ridge_rmse"]
+                       for pt in few), \
+        (f"subspace onboarding should beat per-task ridge at "
+         f"n in {ONBOARD_ASSERT_SHOTS} samples: {curve}")
+    return out
+
+
+def main(tiny: bool = False, out_json: str | None = None) -> dict:
+    spec = TINY if tiny else FULL
+    report = {
+        "spec": dict(spec, tiny=tiny),
+        "meta": {"jax_backend": jax.default_backend(),
+                 "devices": len(jax.devices())},
+        "scoring": bench_scoring(spec),
+        "onboarding": bench_onboarding(spec),
+    }
+    path = out_json or os.path.join(ROOT, "BENCH_serve.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    acc = report["scoring"]["accept"]
+    print(f"serve_bench: wrote {path} (mem ratio {acc['mem_ratio']}x, "
+          f"factored-vs-dense >= "
+          f"{acc['min_speedup_factored_vs_dense']}x at "
+          f"p={ACCEPT['p']} m={ACCEPT['m']} r={ACCEPT['r']})", flush=True)
+    return report
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke spec (trimmed sweep, same assertions)")
+    ap.add_argument("--json", default=None,
+                    help="output path (default: <repo>/BENCH_serve.json)")
+    args = ap.parse_args()
+    main(tiny=args.tiny, out_json=args.json)

@@ -220,7 +220,9 @@ def ledger_parity(spec: dict, backend: str, mesh=None) -> dict:
     sim = SimSpec(p=spec["p"], m=spec["m"], r=3, n=min(spec["n"], 100))
     Xs, ys, Wstar, _ = generate(jax.random.PRNGKey(1), sim)
     prob = MTLProblem.make(Xs, ys, "squared", A=2.0, r=3)
-    Ustar = jnp.linalg.svd(Wstar, full_matrices=False)[0][:, :3]
+    # oracle subspace via the one learned-subspace code path
+    from repro.serve.mtl import FactoredModel
+    Ustar = FactoredModel.from_W(Wstar, 3).U
     cases = {
         "local": {}, "svd_trunc": {}, "bestrep": {"U_star": Ustar},
         "centralize": {"lam": 0.01, "iters": 50},

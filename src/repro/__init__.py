@@ -10,13 +10,13 @@ Sub-packages are imported lazily so ``import repro`` stays cheap.
 """
 import importlib
 
-__all__ = ["solve", "core", "runtime", "data"]
+__all__ = ["solve", "core", "runtime", "data", "serve"]
 
 
 def __getattr__(name):
     if name == "solve":
         from .api import solve
         return solve
-    if name in ("core", "runtime", "data", "api"):
+    if name in ("core", "runtime", "data", "api", "serve"):
         return importlib.import_module("." + name, __name__)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -3,6 +3,14 @@
 One call signature for every solver in the registry on every execution
 backend, returning an :class:`~repro.core.methods.base.MTLResult`
 uniformly (predictors, per-round iterates, communication ledger).
+
+The result is also the hand-off to the ONLINE half of the system
+(``repro.serve.mtl``, DESIGN.md §10)::
+
+    res = repro.solve(prob, method="proxgd", rounds=50, lam=0.01)
+    model = res.factorize(rank=prob.r)       # (U, s, V) artifact
+    model.save("store/")                     # atomic npz + manifest
+    server = repro.serve.MTLServer(model)    # O(p r) batched scoring
 """
 from __future__ import annotations
 
@@ -93,6 +101,9 @@ def solve(prob, method: str = "dgsp", backend: str = "sim", *,
     if sv_engine is not None:
         hp["sv_engine"] = sv_engine
     res = get_solver(method)(prob, runtime=runtime, **hp)
+    # stamp the trained loss so res.factorize() builds the serving
+    # artifact with the right prediction/onboarding math by default
+    res.extras.setdefault("loss", prob.loss.name)
     res.extras["backend"] = runtime.name
     res.extras["data_shards"] = runtime.data_shards
     res.extras["collective_floats_per_chip"] = \

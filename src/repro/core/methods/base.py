@@ -106,6 +106,28 @@ class MTLResult:
         self.rounds_axis.append(rnd)
         self.iterates.append(W)
 
+    def factorize(self, rank: int, loss: Optional[str] = None,
+                  task_keys=None):
+        """Extract the factored serving artifact ``(U, s, V)`` at the
+        given rank — the O((p + m) r) form the online system stores and
+        scores from (``repro.serve.mtl``, DESIGN.md §10).
+
+        One code path: delegates to ``FactoredModel.from_W``, which
+        routes through ``repro.core.spectral.truncate_factors`` (the
+        same residual-tested engine behind the svd_trunc master) — no
+        ad-hoc SVDs.  ``loss`` names the loss the predictors were
+        trained under (it selects the onboarding/prediction math and is
+        recorded in the artifact manifest); it defaults to the loss
+        ``repro.solve`` stamped into ``extras`` ("squared" for results
+        built outside the front door).  ``task_keys`` optionally names
+        the m tasks for key-based request routing.
+        """
+        from ...serve.mtl import FactoredModel
+        if loss is None:
+            loss = self.extras.get("loss", "squared")
+        return FactoredModel.from_W(self.W, rank, loss=loss,
+                                    task_keys=task_keys)
+
 
 def gram_round_leaves(prob: MTLProblem):
     """Data leaves a round body reads when the Gram cache serves every

@@ -415,33 +415,46 @@ def shrink_engine(prob, engine: str = "lazy", rank=None,
 
 
 # ---------------------------------------------------------------------------
-# one-shot rank-r truncation (the §5 estimator)
+# one-shot rank-r truncation (the §5 estimator) and its factored form
 # ---------------------------------------------------------------------------
-def _truncate_exact(M: jnp.ndarray, r: int) -> jnp.ndarray:
+def _factor_exact(M: jnp.ndarray, r: int
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     U, S, Vt = jnp.linalg.svd(M, full_matrices=False)
-    return (U[:, :r] * S[None, :r]) @ Vt[:r, :]
+    return U[:, :r], S[:r], Vt[:r, :].T
 
 
 @partial(jax.jit, static_argnames=("r", "oversample", "max_sweeps"))
-def truncate(M: jnp.ndarray, r: int, oversample: int = 8,
-             max_sweeps: int = 24, drift_tol: float = 1e-6,
-             res_tol: float = 5e-6) -> jnp.ndarray:
-    """Best rank-r approximation by cold randomized subspace iteration.
+def truncate_factors(M: jnp.ndarray, r: int, oversample: int = 8,
+                     max_sweeps: int = 24, drift_tol: float = 1e-6,
+                     res_tol: float = 5e-6
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Rank-r factors ``(U (p,r), s (r,), V (m,r))`` of the best rank-r
+    approximation ``M ≈ U diag(s) Vᵀ``, by cold randomized subspace
+    iteration.
 
-    The one-shot call has no warm carry, so the sweep loop starts from
-    the deterministic probe and runs to residual convergence (early
-    exit, ``max_sweeps`` cap).  Accepts iff every KEPT triplet's
-    residual is ≤ res_tol·s₁.  NEAR-tied values at the truncation
-    boundary keep the residuals high and route to the exact fallback;
-    EXACTLY tied values make the best rank-r approximation non-unique
-    (any basis of the tied cluster has zero residual), so there the
-    contract is optimal approximation error, not matrix equality with
-    LAPACK's arbitrary choice (tests/test_spectral.py).
+    The factored form of :func:`truncate` — THE code path for "give me
+    the learned subspace": the §5 one-shot estimator composes it back
+    to a matrix, the serving artifact (``repro.serve.mtl``) keeps the
+    factors.  The one-shot call has no warm carry, so the sweep loop
+    starts from the deterministic probe and runs to residual
+    convergence (early exit, ``max_sweeps`` cap).  Accepts iff every
+    KEPT triplet's residual is ≤ res_tol·s₁.  NEAR-tied values at the
+    truncation boundary keep the residuals high and route to the exact
+    fallback; EXACTLY tied values make the best rank-r approximation
+    non-unique (any basis of the tied cluster has zero residual), so
+    there the contract is optimal approximation error, not factor
+    equality with LAPACK's arbitrary choice (tests/test_spectral.py).
+
+    ``r`` is clamped to min(p, m): the solvers pass the Assumption-2.3
+    rank BOUND, which may exceed a narrow problem's spectrum (m < r
+    tasks), and the historical exact path clamped by slicing — a
+    narrow matrix simply has fewer factors.
     """
     p, m = M.shape
+    r = min(r, p, m)
     K = min(r + oversample, min(p, m))
     if K >= min(p, m):
-        return _truncate_exact(M, r)
+        return _factor_exact(M, r)
     V0 = _probe(m, K, M.dtype)
     U, V, R, _ = _sweeps(M, V0, jnp.zeros((K,), M.dtype), max_sweeps,
                          drift_tol)
@@ -461,10 +474,21 @@ def truncate(M: jnp.ndarray, r: int, oversample: int = 8,
     good = conv_ok & tail_ok
 
     def lazy_branch(_):
-        sk = jnp.where(keep, s, 0.0)
-        return (Ur * sk[None, :]) @ Vr.T
+        return Ur[:, :r], s[:r], Vr[:, :r]
 
     def exact_branch(_):
-        return _truncate_exact(M, r)
+        return _factor_exact(M, r)
 
     return jax.lax.cond(good, lazy_branch, exact_branch, None)
+
+
+@partial(jax.jit, static_argnames=("r", "oversample", "max_sweeps"))
+def truncate(M: jnp.ndarray, r: int, oversample: int = 8,
+             max_sweeps: int = 24, drift_tol: float = 1e-6,
+             res_tol: float = 5e-6) -> jnp.ndarray:
+    """Best rank-r approximation (the §5 ``svd_trunc`` master): the
+    composed form of :func:`truncate_factors` — see there for the
+    acceptance / exact-fallback contract."""
+    U, s, V = truncate_factors(M, r, oversample, max_sweeps, drift_tol,
+                               res_tol)
+    return (U * s[None, :]) @ V.T

@@ -78,6 +78,32 @@ def generate_surrogate(key: jax.Array, spec: RealSpec
     return Xs, ys, Xt, yt
 
 
+def split_tasks(m: int, holdout: int, seed: int = 0
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Deterministic TASK-level split: (train_ids, holdout_ids).
+
+    Holds out whole tasks — the transfer / few-shot-onboarding
+    evaluation (``repro.serve.mtl``): a solver learns the shared
+    subspace on the train tasks only, and the held-out tasks are fit
+    afterwards from a handful of their samples inside that subspace.
+    A fixed ``seed`` gives a fixed split (sorted ids, disjoint,
+    covering ``range(m)``), so benchmarks and tests agree on which
+    tasks were never seen at training time.
+    """
+    if not 0 < holdout < m:
+        raise ValueError(f"holdout={holdout} must be in (0, m={m})")
+    perm = jax.random.permutation(jax.random.PRNGKey(seed), m)
+    return jnp.sort(perm[holdout:]), jnp.sort(perm[:holdout])
+
+
+def take_tasks(ids: jnp.ndarray, *arrays: jnp.ndarray) -> Tuple[jnp.ndarray,
+                                                                ...]:
+    """Restrict task-stacked arrays (m leading axis) to the given task
+    ids — the companion of :func:`split_tasks` for carving a surrogate
+    into train-task and held-out-task problems."""
+    return tuple(jnp.take(a, ids, axis=0) for a in arrays)
+
+
 def test_metric(task: str, W: jnp.ndarray, Xt: jnp.ndarray, yt: jnp.ndarray
                 ) -> jnp.ndarray:
     """RMSE for regression, averaged AUC for classification (as in Fig 4)."""

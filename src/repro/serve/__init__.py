@@ -1,1 +1,26 @@
-from .engine import ServeEngine, Request  # noqa: F401
+"""Serving subsystems.
+
+* :mod:`repro.serve.mtl` — the factored multi-task server (the online
+  half of the paper's system): ``FactoredModel`` artifacts, batched
+  O(p r) scoring, hot-swap, few-shot new-task onboarding.
+* :mod:`repro.serve.engine` — the LM batching engine (prefill/decode).
+
+Imported lazily so ``import repro.serve`` (and the MTL scoring path)
+never pays for the LM model stack.
+"""
+import importlib
+
+__all__ = ["FactoredModel", "MTLServer", "onboard_code",
+           "ServeEngine", "Request"]
+
+_LAZY = {"FactoredModel": "mtl", "MTLServer": "mtl", "onboard_code": "mtl",
+         "ServeEngine": "engine", "Request": "engine"}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        return getattr(importlib.import_module(
+            "." + _LAZY[name], __name__), name)
+    if name in ("mtl", "engine"):
+        return importlib.import_module("." + name, __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,3 +1,24 @@
-from .steps import TrainConfig, make_train_step, make_serve_step  # noqa: F401
-from .loop import train_loop  # noqa: F401
-from .checkpoint import load_checkpoint, save_checkpoint  # noqa: F401
+"""Training loop, steps, and npz checkpointing.
+
+Lazy re-exports: ``checkpoint`` (also the persistence layer under the
+factored-model stores of ``repro.serve.mtl``) must stay importable
+without paying for the LM model stack that ``steps``/``loop`` pull in.
+"""
+import importlib
+
+__all__ = ["TrainConfig", "make_train_step", "make_serve_step",
+           "train_loop", "load_checkpoint", "save_checkpoint",
+           "checkpoint"]
+
+_LAZY = {"TrainConfig": "steps", "make_train_step": "steps",
+         "make_serve_step": "steps", "train_loop": "loop",
+         "load_checkpoint": "checkpoint", "save_checkpoint": "checkpoint"}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        return getattr(importlib.import_module(
+            "." + _LAZY[name], __name__), name)
+    if name in ("steps", "loop", "checkpoint"):
+        return importlib.import_module("." + name, __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -2,7 +2,14 @@
 
 Flattens the state pytree to path-keyed arrays; treedef is rebuilt from
 the paths, so checkpoints are stable across process restarts. Atomic
-write (tmp + rename); keeps the last ``keep`` checkpoints.
+write (tmp + rename); keeps the last ``keep`` checkpoints
+(``keep=None`` keeps every step — the model-store convention of
+``repro.serve.mtl``, where old versions stay loadable for rollback).
+
+Crash safety: a write that dies before the final ``os.replace`` leaves
+only a ``*.tmp`` file behind — never a truncated ``step_*.npz`` —
+and ``available_steps`` ignores tmp files, so readers always see the
+last complete checkpoint (tests/test_checkpoint.py).
 """
 from __future__ import annotations
 
@@ -59,7 +66,11 @@ def _listify(node):
 
 
 def save_checkpoint(ckpt_dir: str, step: int, state: Any,
-                    keep: int = 3) -> str:
+                    keep: Optional[int] = 3) -> str:
+    if keep is not None and keep < 1:
+        # steps[:-0] would silently keep EVERYTHING; make the
+        # nonsensical value loud (keep=None is the keep-all knob)
+        raise ValueError(f"keep={keep} must be >= 1 (or None)")
     os.makedirs(ckpt_dir, exist_ok=True)
     path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
     flat = _flatten(state)
@@ -67,7 +78,8 @@ def save_checkpoint(ckpt_dir: str, step: int, state: Any,
     with os.fdopen(fd, "wb") as f:
         np.savez(f, **flat)
     os.replace(tmp, path)
-    _gc(ckpt_dir, keep)
+    if keep is not None:
+        _gc(ckpt_dir, keep)
     return path
 
 

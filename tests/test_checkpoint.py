@@ -1,0 +1,122 @@
+"""train/checkpoint.py: npz pytree round-trip, atomic-write crash
+safety, and keep= pruning — the persistence layer under both the LM
+training loop and the factored-model stores of repro.serve.mtl.
+"""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import checkpoint
+
+
+def _tree(seed: float = 0.0):
+    """A representative nested state: dicts, a list, mixed dtypes."""
+    return {
+        "params": {
+            "dense": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)
+                      + seed,
+                      "b": jnp.ones((3,), jnp.float32) * seed},
+            "layers": [jnp.full((2, 2), seed + i) for i in range(3)],
+        },
+        "step_count": jnp.asarray(7 + seed, jnp.float32),
+        "ids": jnp.asarray([1, 2, 3], jnp.int32),
+    }
+
+
+def _assert_trees_equal(a, b):
+    assert type(a) is type(b), (type(a), type(b))
+    if isinstance(a, dict):
+        assert sorted(a) == sorted(b)
+        for k in a:
+            _assert_trees_equal(a[k], b[k])
+    elif isinstance(a, list):
+        assert len(a) == len(b)
+        for x, y in zip(a, b):
+            _assert_trees_equal(x, y)
+    else:
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+
+
+def test_pytree_roundtrip_bitexact(tmp_path):
+    state = _tree(1.5)
+    checkpoint.save_checkpoint(str(tmp_path), 3, state)
+    step, loaded = checkpoint.load_checkpoint(str(tmp_path))
+    assert step == 3
+    _assert_trees_equal(state, loaded)
+
+
+def test_load_specific_step_and_missing_dir(tmp_path):
+    for s in (1, 2):
+        checkpoint.save_checkpoint(str(tmp_path), s, _tree(float(s)))
+    step, loaded = checkpoint.load_checkpoint(str(tmp_path), step=1)
+    assert step == 1
+    _assert_trees_equal(_tree(1.0), loaded)
+    with pytest.raises(FileNotFoundError):
+        checkpoint.load_checkpoint(str(tmp_path / "nope"))
+
+
+def test_atomic_write_crash_leaves_last_good_checkpoint(tmp_path, monkeypatch):
+    """A crash before the final rename must leave only a *.tmp file
+    behind: no truncated step_*.npz, available_steps unchanged, the
+    previous checkpoint still loads, and a retry succeeds."""
+    d = str(tmp_path)
+    checkpoint.save_checkpoint(d, 0, _tree(0.0))
+
+    real_replace = os.replace
+
+    def boom(src, dst):
+        raise OSError("simulated crash before rename")
+
+    monkeypatch.setattr(checkpoint.os, "replace", boom)
+    with pytest.raises(OSError, match="simulated crash"):
+        checkpoint.save_checkpoint(d, 1, _tree(1.0))
+    monkeypatch.setattr(checkpoint.os, "replace", real_replace)
+
+    leftovers = [f for f in os.listdir(d) if f.endswith(".tmp")]
+    assert leftovers, "crashed write should leave its tmp file behind"
+    assert checkpoint.available_steps(d) == [0]
+    step, loaded = checkpoint.load_checkpoint(d)
+    assert step == 0
+    _assert_trees_equal(_tree(0.0), loaded)
+
+    # retry after the "restart" works and the store is healthy
+    checkpoint.save_checkpoint(d, 1, _tree(1.0))
+    assert checkpoint.available_steps(d) == [0, 1]
+    _assert_trees_equal(_tree(1.0), checkpoint.load_checkpoint(d)[1])
+
+
+def test_keep_prunes_oldest(tmp_path):
+    d = str(tmp_path)
+    for s in range(5):
+        checkpoint.save_checkpoint(d, s, _tree(float(s)), keep=2)
+    assert checkpoint.available_steps(d) == [3, 4]
+    # the survivors are intact
+    _assert_trees_equal(_tree(3.0), checkpoint.load_checkpoint(d, 3)[1])
+
+
+def test_keep_none_keeps_everything(tmp_path):
+    d = str(tmp_path)
+    for s in range(5):
+        checkpoint.save_checkpoint(d, s, _tree(float(s)), keep=None)
+    assert checkpoint.available_steps(d) == list(range(5))
+
+
+def test_keep_zero_rejected(tmp_path):
+    """keep=0 would silently keep everything (steps[:-0] == []); the
+    keep-all spelling is keep=None, so 0 must be loud."""
+    with pytest.raises(ValueError, match="keep=0"):
+        checkpoint.save_checkpoint(str(tmp_path), 0, _tree(), keep=0)
+    # rejected BEFORE writing: no file, no stray tmp
+    assert list(tmp_path.iterdir()) == []
+
+
+def test_available_steps_ignores_foreign_files(tmp_path):
+    d = str(tmp_path)
+    checkpoint.save_checkpoint(d, 2, _tree())
+    (tmp_path / "step_000000XX.npz").write_bytes(b"junk")
+    (tmp_path / "notes.txt").write_text("hi")
+    (tmp_path / "abc123.tmp").write_bytes(b"partial")
+    assert checkpoint.available_steps(d) == [2]

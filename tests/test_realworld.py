@@ -1,0 +1,105 @@
+"""data/realworld.py: the Fig-4 surrogate suite.
+
+Every ``REAL_SPECS`` entry must yield the published (m, p, n)
+dimensions and the right label type, deterministically per seed — and
+the task-level split helper (the held-out-task evaluation used by the
+serving subsystem's onboarding benchmarks) must be deterministic,
+disjoint and covering.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.realworld import (REAL_SPECS, generate_surrogate,
+                                  split_tasks, take_tasks)
+from repro.data.realworld import test_metric as eval_metric  # not a test
+
+# The App. H dimensions the surrogates must reproduce.
+PUBLISHED = {
+    "school": (72, 27, 40, "regression"),
+    "computer": (180, 14, 8, "regression"),
+    "atp": (6, 411, 67, "regression"),
+    "protein": (3, 357, 1600, "classification"),
+    "landmine": (19, 9, 100, "classification"),
+    "cal500": (78, 68, 100, "classification"),
+}
+
+
+def test_spec_registry_matches_published_dimensions():
+    assert sorted(REAL_SPECS) == sorted(PUBLISHED)
+    for name, (m, p, n, task) in PUBLISHED.items():
+        spec = REAL_SPECS[name]
+        assert (spec.m, spec.p, spec.n, spec.task) == (m, p, n, task), name
+        assert spec.r <= min(m, p), name
+
+
+@pytest.mark.parametrize("name", sorted(REAL_SPECS))
+def test_surrogate_shapes_and_label_type(name):
+    spec = REAL_SPECS[name]
+    Xs, ys, Xt, yt = generate_surrogate(jax.random.PRNGKey(11), spec)
+    assert Xs.shape == (spec.m, spec.n, spec.p)
+    assert ys.shape == (spec.m, spec.n)
+    # test split is 3x train (the paper's 20/60 protocol, realworld.py)
+    assert Xt.shape == (spec.m, 3 * spec.n, spec.p)
+    assert yt.shape == (spec.m, 3 * spec.n)
+    if spec.task == "classification":
+        for arr in (ys, yt):
+            vals = np.unique(np.asarray(arr))
+            assert set(vals).issubset({-1.0, 1.0}), (name, vals)
+    else:
+        # continuous Gaussian-noise labels: repeated values would mean
+        # a degenerate draw
+        assert np.unique(np.asarray(ys)).size > spec.m * spec.n // 2
+    # the metric runs on the surrogate's own shapes
+    W = jnp.zeros((spec.p, spec.m))
+    err = float(eval_metric(spec.task, W, Xt, yt))
+    assert np.isfinite(err)
+
+
+def test_surrogates_seed_deterministic():
+    spec = REAL_SPECS["landmine"]
+    a = generate_surrogate(jax.random.PRNGKey(3), spec)
+    b = generate_surrogate(jax.random.PRNGKey(3), spec)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    c = generate_surrogate(jax.random.PRNGKey(4), spec)
+    assert float(jnp.max(jnp.abs(a[0] - c[0]))) > 0
+
+
+# ---------------------------------------------------------------------------
+# the task-level split helper
+# ---------------------------------------------------------------------------
+def test_split_tasks_disjoint_covering_deterministic():
+    m, holdout = 72, 8
+    tr1, ho1 = split_tasks(m, holdout, seed=0)
+    tr2, ho2 = split_tasks(m, holdout, seed=0)
+    np.testing.assert_array_equal(np.asarray(tr1), np.asarray(tr2))
+    np.testing.assert_array_equal(np.asarray(ho1), np.asarray(ho2))
+    assert tr1.shape == (m - holdout,) and ho1.shape == (holdout,)
+    both = np.concatenate([np.asarray(tr1), np.asarray(ho1)])
+    np.testing.assert_array_equal(np.sort(both), np.arange(m))
+    # sorted ids (stable downstream indexing)
+    assert (np.diff(np.asarray(tr1)) > 0).all()
+    assert (np.diff(np.asarray(ho1)) > 0).all()
+    # a different seed is a different split
+    tr3, _ = split_tasks(m, holdout, seed=1)
+    assert not np.array_equal(np.asarray(tr1), np.asarray(tr3))
+
+
+def test_split_tasks_validates_holdout():
+    with pytest.raises(ValueError):
+        split_tasks(10, 0)
+    with pytest.raises(ValueError):
+        split_tasks(10, 10)
+
+
+def test_take_tasks_restricts_leading_axis():
+    spec = REAL_SPECS["landmine"]
+    Xs, ys, _, _ = generate_surrogate(jax.random.PRNGKey(5), spec)
+    _, ho = split_tasks(spec.m, 4, seed=0)
+    Xh, yh = take_tasks(ho, Xs, ys)
+    assert Xh.shape == (4, spec.n, spec.p)
+    assert yh.shape == (4, spec.n)
+    for k, j in enumerate([int(t) for t in ho]):
+        np.testing.assert_array_equal(np.asarray(Xh[k]), np.asarray(Xs[j]))

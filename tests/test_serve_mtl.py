@@ -1,0 +1,430 @@
+"""Factored MTL serving subsystem (repro.serve.mtl, DESIGN.md §10).
+
+The acceptance matrix of the subsystem:
+
+* factored scoring matches the dense ``Wᵀ x`` oracle;
+* artifact save → load → score round-trips BIT-exactly through the
+  npz checkpoint machinery (manifest validated);
+* few-shot onboarding in the learned subspace beats a per-task full-p
+  ridge on a task the solver never saw, from n = 8 samples;
+* hot-swap under a concurrent swapper never serves a torn model —
+  every scored batch is exactly one version's output;
+* the sharded-code-table path (tasks mesh axis) agrees with the
+  single-device path (4-device subprocess).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.core.methods import MTLProblem
+from repro.core.linear_model import solve_ridge
+from repro.data.realworld import (REAL_SPECS, generate_surrogate,
+                                  split_tasks, take_tasks)
+from repro.data.synthetic import SimSpec, generate
+from repro.serve.mtl import FactoredModel, MTLServer, onboard_code
+
+
+def _rank_r_model(p=40, m=16, r=3, seed=0, scale=1.0, loss="squared",
+                  keys=False):
+    """An exactly-rank-r model with well-separated spectrum."""
+    ku, kv = jax.random.split(jax.random.PRNGKey(seed))
+    U = jnp.linalg.qr(jax.random.normal(ku, (p, r)))[0]
+    V = jax.random.normal(kv, (m, r)) / jnp.sqrt(r)
+    s = scale * jnp.linspace(2.0, 1.0, r)
+    return FactoredModel(U=U, s=s, V=V, loss=loss,
+                         task_keys=tuple(f"t{i}" for i in range(m))
+                         if keys else None)
+
+
+def _requests(model, n, seed=1):
+    kid, kx = jax.random.split(jax.random.PRNGKey(seed))
+    ids = jax.random.randint(kid, (n,), 0, model.m)
+    X = jax.random.normal(kx, (n, model.p))
+    return ids, X
+
+
+# ---------------------------------------------------------------------------
+# factored scoring == dense oracle
+# ---------------------------------------------------------------------------
+def test_factorize_scoring_matches_dense_solve():
+    """End to end from a real solve: dgsp's W is exactly rank r, so the
+    rank-r factorization preserves it and the O(p r) scoring path must
+    reproduce the dense ``Wᵀ x`` predictions."""
+    spec = SimSpec(p=40, m=16, r=3, n=60)
+    Xs, ys, _, _ = generate(jax.random.PRNGKey(0), spec)
+    prob = MTLProblem.make(Xs, ys, "squared", A=2.0, r=3)
+    res = repro.solve(prob, method="dgsp", rounds=3)
+    model = res.factorize(rank=3)
+    assert (model.p, model.m, model.rank) == (40, 16, 3)
+    assert float(jnp.max(jnp.abs(model.dense() - res.W))) <= 1e-5
+
+    server = MTLServer(model, batch_size=8)
+    ids, X = _requests(model, 37)          # 4 waves + ragged tail
+    preds, ver = server.score(ids, X)
+    dense = jnp.einsum("np,pn->n", X, res.W[:, ids])
+    assert preds.shape == (37,)
+    assert ver == model.version
+    assert float(jnp.max(jnp.abs(preds - dense))) <= 1e-5
+
+
+def test_score_batch_shapes_and_validation():
+    model = _rank_r_model()
+    server = MTLServer(model, batch_size=8)
+    with pytest.raises(ValueError, match=r"want ids"):
+        server.score(jnp.zeros((3, 2), jnp.int32), jnp.zeros((3, 40)))
+    with pytest.raises(ValueError, match="feature dim"):
+        server.score(jnp.zeros((3,), jnp.int32), jnp.zeros((3, 7)))
+    # out-of-range ids must be rejected, not clamped by the gather
+    with pytest.raises(ValueError, match="task ids outside"):
+        server.score(jnp.asarray([0, model.m], jnp.int32),
+                     jnp.zeros((2, 40)))
+    with pytest.raises(ValueError, match="task ids outside"):
+        server.score(jnp.asarray([-1], jnp.int32), jnp.zeros((1, 40)))
+
+
+def test_factorize_inherits_trained_loss():
+    """repro.solve stamps the problem's loss into the result, so a
+    logistic solve factorizes into a logistic artifact by default —
+    predict() and onboarding then use the right math."""
+    spec = SimSpec(p=20, m=8, r=2, n=40, task="classification")
+    Xs, ys, _, _ = generate(jax.random.PRNGKey(2), spec)
+    prob = MTLProblem.make(Xs, ys, "logistic", A=2.0, r=2)
+    res = repro.solve(prob, method="local", l2=1e-2)
+    assert res.extras["loss"] == "logistic"
+    model = res.factorize(rank=2)
+    assert model.loss == "logistic"
+    assert res.factorize(rank=2, loss="squared").loss == "squared"
+
+
+def test_task_keys_routing_and_predict():
+    model = _rank_r_model(loss="logistic", keys=True)
+    server = MTLServer(model, batch_size=4)
+    assert server.resolve("t5") == 5
+    with pytest.raises(ValueError):
+        server.resolve("nope")
+    ids, X = _requests(model, 9)
+    margins, _ = server.score(ids, X)
+    probs, _ = server.predict(ids, X)
+    np.testing.assert_allclose(np.asarray(probs),
+                               np.asarray(jax.nn.sigmoid(margins)),
+                               rtol=1e-6)
+    # keyed scoring resolves + scores under one snapshot and matches
+    # the id path exactly
+    keyed, ver = server.score_keyed([f"t{int(i)}" for i in ids], X)
+    np.testing.assert_array_equal(np.asarray(keyed), np.asarray(margins))
+    assert ver == model.version
+    with pytest.raises(ValueError, match="unknown task key"):
+        server.score_keyed(["nope"], X[:1])
+    with pytest.raises(ValueError, match="use score"):
+        MTLServer(_rank_r_model(), batch_size=4).score_keyed(["a"], X[:1])
+
+
+# ---------------------------------------------------------------------------
+# artifact persistence
+# ---------------------------------------------------------------------------
+def test_save_load_score_roundtrip_bitexact(tmp_path):
+    model = _rank_r_model(keys=True)
+    store = str(tmp_path / "store")
+    step = model.save(store)
+    step2, loaded = FactoredModel.load(store)
+    assert (step, step2) == (0, 0)
+    for a, b in ((model.U, loaded.U), (model.s, loaded.s),
+                 (model.V, loaded.V)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert loaded.version == model.version
+    assert loaded.task_keys == model.task_keys
+    assert loaded.loss == model.loss
+
+    ids, X = _requests(model, 13)
+    p1, v1 = MTLServer(model, batch_size=8).score(ids, X)
+    p2, v2 = MTLServer(loaded, batch_size=8).score(ids, X)
+    assert v1 == v2
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+
+
+def test_store_versions_and_manifest_validation(tmp_path):
+    store = str(tmp_path / "store")
+    m1 = _rank_r_model(seed=0)
+    m2 = _rank_r_model(seed=1)
+    assert m1.save(store) == 0
+    assert m2.save(store) == 1          # auto-increment
+    _, latest = FactoredModel.load(store)
+    assert latest.version == m2.version
+    _, old = FactoredModel.load(store, step=0)
+    assert old.version == m1.version
+
+    # a corrupted factor must fail the manifest's content hash
+    from repro.train import checkpoint
+    step, state = checkpoint.load_checkpoint(store, 1)
+    state["V"] = state["V"] + 1.0
+    checkpoint.save_checkpoint(store, 1, state, keep=None)
+    with pytest.raises(ValueError, match="content hash"):
+        FactoredModel.load(store, step=1)
+
+
+def test_version_hash_covers_task_keys():
+    """task_keys route requests to code rows, so they are part of the
+    served contract: same factors + different keys must be a different
+    version (and a key-tampered store fails the load-time hash)."""
+    a = _rank_r_model(keys=True)
+    b = FactoredModel(U=a.U, s=a.s, V=a.V, loss=a.loss,
+                      task_keys=a.task_keys[::-1])
+    c = FactoredModel(U=a.U, s=a.s, V=a.V, loss=a.loss,
+                      task_keys=a.task_keys)
+    assert a.version != b.version
+    assert a.version == c.version
+
+
+def test_factored_model_shape_validation():
+    U = jnp.zeros((8, 3))
+    with pytest.raises(ValueError, match="rank mismatch"):
+        FactoredModel(U=U, s=jnp.zeros((2,)), V=jnp.zeros((5, 3)))
+    with pytest.raises(ValueError, match="task_keys"):
+        FactoredModel(U=U, s=jnp.zeros((3,)), V=jnp.zeros((5, 3)),
+                      task_keys=("a",))
+
+
+# ---------------------------------------------------------------------------
+# few-shot onboarding
+# ---------------------------------------------------------------------------
+def test_onboard_exact_task_in_subspace():
+    """A new task whose true predictor lies IN the subspace is fit
+    near-exactly from few samples (n = 2 r)."""
+    model = _rank_r_model(p=40, r=3)
+    c_true = jnp.asarray([0.7, -1.2, 0.4])
+    w_true = model.U @ c_true
+    X = jax.random.normal(jax.random.PRNGKey(7), (6, 40))
+    y = X @ w_true
+    server = MTLServer(model, batch_size=4)
+    m0, v0 = server.model.m, server.version
+    tid = server.onboard(None, X, y, l2=1e-8)     # keyless: route by id
+    assert tid == m0 and server.model.m == m0 + 1
+    assert server.version != v0               # hot-swapped a new version
+    Xt = jax.random.normal(jax.random.PRNGKey(8), (5, 40))
+    preds, _ = server.score(jnp.full((5,), tid), Xt)
+    np.testing.assert_allclose(np.asarray(preds), np.asarray(Xt @ w_true),
+                               atol=1e-4)
+
+
+def test_onboard_logistic_uses_newton_path():
+    model = _rank_r_model(p=30, r=3, loss="logistic")
+    c_true = jnp.asarray([2.0, -1.0, 1.5])
+    w_true = model.U @ c_true
+    X = jax.random.normal(jax.random.PRNGKey(9), (60, 30))
+    y = jnp.sign(X @ w_true)
+    c = onboard_code(model.U, X, y, loss="logistic", l2=1e-2)
+    Xt = jax.random.normal(jax.random.PRNGKey(10), (200, 30))
+    acc = float(jnp.mean(jnp.sign(Xt @ (model.U @ c))
+                         == jnp.sign(Xt @ w_true)))
+    assert acc >= 0.9, acc
+
+
+@pytest.mark.slow
+def test_onboard_held_out_task_beats_per_task_ridge():
+    """The transfer-setting acceptance: learn the subspace on the train
+    tasks of the school surrogate, onboard tasks the solver NEVER saw
+    from n = 8 samples, and beat a full-p per-task ridge given the
+    same 8 samples (both arms share one l2)."""
+    rs = REAL_SPECS["school"]
+    Xs, ys, Xt, yt = generate_surrogate(jax.random.PRNGKey(300), rs)
+    train_ids, held_ids = split_tasks(rs.m, 8, seed=0)
+    Xtr, ytr = take_tasks(train_ids, Xs, ys)
+    prob = MTLProblem.make(Xtr, ytr, "squared", A=3.0, r=rs.r)
+    model = repro.solve(prob, method="altmin", rounds=10).factorize(
+        rank=rs.r)
+
+    shots, l2 = 8, 0.3
+
+    def rmse(w, Xe, ye):
+        return float(jnp.sqrt(jnp.mean((Xe @ w - ye) ** 2)))
+
+    sub, ridge = [], []
+    for j in [int(t) for t in held_ids]:
+        Xf, yf = Xs[j][:shots], ys[j][:shots]
+        c = onboard_code(model.U, Xf, yf, l2=l2)
+        sub.append(rmse(model.U @ c, Xt[j], yt[j]))
+        ridge.append(rmse(solve_ridge(Xf, yf, l2), Xt[j], yt[j]))
+    mean_sub = sum(sub) / len(sub)
+    mean_ridge = sum(ridge) / len(ridge)
+    assert mean_sub < mean_ridge, (mean_sub, mean_ridge)
+
+
+def test_onboard_key_contract():
+    model = _rank_r_model(keys=True)
+    X = jnp.zeros((4, model.p))
+    with pytest.raises(ValueError, match="already onboarded"):
+        model.onboard("t0", X, jnp.zeros((4,)))
+    with pytest.raises(ValueError, match="needs one"):
+        model.onboard(None, X, jnp.zeros((4,)))
+    # a key passed to a keyless model must be rejected, not dropped —
+    # the caller would believe the task is routable by that name
+    keyless = _rank_r_model(keys=False)
+    with pytest.raises(ValueError, match="no task_keys"):
+        keyless.onboard("named", X, jnp.zeros((4,)))
+
+
+# ---------------------------------------------------------------------------
+# hot-swap
+# ---------------------------------------------------------------------------
+def test_hot_swap_mid_stream_never_torn():
+    """A concurrent swapper flips between two versions while the main
+    thread scores: every returned batch must EXACTLY equal one
+    version's output for the reported version id — a torn state (new U
+    with old codes, or a half-built table) cannot produce either."""
+    m1 = _rank_r_model(seed=0)
+    m2 = _rank_r_model(seed=1, scale=-3.0)    # very different predictions
+    server = MTLServer(m1, batch_size=16)
+    ids, X = _requests(m1, 40)                # 3 waves per call
+    expect = {}
+    for mod in (m1, m2):
+        server.swap(mod)
+        preds, ver = server.score(ids, X)
+        expect[ver] = np.asarray(preds)
+    assert len(expect) == 2
+
+    stop = threading.Event()
+
+    def swapper():
+        flip = 0
+        while not stop.is_set():
+            server.swap(m2 if flip else m1)
+            flip ^= 1
+
+    t = threading.Thread(target=swapper)
+    t.start()
+    try:
+        for _ in range(60):
+            preds, ver = server.score(ids, X)
+            np.testing.assert_array_equal(np.asarray(preds), expect[ver])
+    finally:
+        stop.set()
+        t.join()
+
+
+def test_maybe_reload_hot_swaps_newer_store_version(tmp_path):
+    store = str(tmp_path / "store")
+    v0 = _rank_r_model(seed=0)
+    step0 = v0.save(store)
+    step, loaded = FactoredModel.load(store)
+    server = MTLServer(loaded, batch_size=4)
+    server.swap(loaded, step=step)
+    assert not server.maybe_reload(store)     # already current
+    v1 = _rank_r_model(seed=1)
+    v1.save(store)                            # background re-solve lands
+    assert server.maybe_reload(store)
+    assert server.version == v1.version
+    assert not server.maybe_reload(store)
+    assert step0 == 0
+
+
+def test_maybe_reload_loses_race_to_concurrent_swap(tmp_path, monkeypatch):
+    """A store reload whose slow load overlaps ANY concurrent install
+    (swap/onboard) must lose the race — never overwrite the newer
+    in-memory model with the older store artifact."""
+    store = str(tmp_path / "store")
+    v_store = _rank_r_model(seed=0)
+    v_store.save(store)
+    v_mem1 = _rank_r_model(seed=1)
+    v_mem2 = _rank_r_model(seed=2)
+    server = MTLServer(v_mem1, batch_size=4)
+
+    real_load = FactoredModel.load.__func__
+
+    def racing_load(cls, store_dir, step=None):
+        out = real_load(cls, store_dir, step)
+        server.swap(v_mem2)         # an install lands mid-load
+        return out
+
+    monkeypatch.setattr(FactoredModel, "load",
+                        classmethod(racing_load))
+    assert server.maybe_reload(store) is False
+    assert server.version == v_mem2.version   # swap survived
+
+
+def test_truncate_rank_clamped_for_narrow_problems():
+    """factorize/truncate with a rank BOUND above min(p, m) clamps like
+    the historical exact path did (the protein-surrogate shape: fewer
+    tasks than the default rank bound) instead of raising."""
+    W = jnp.asarray(np.random.RandomState(0).randn(40, 3).astype("float32"))
+    model = FactoredModel.from_W(W, rank=5)
+    assert model.rank == 3
+    assert float(jnp.max(jnp.abs(model.dense() - W))) <= 1e-5
+    res = repro.solve(
+        MTLProblem.make(*_tiny_narrow_problem(), "squared", A=2.0, r=5),
+        method="svd_trunc")
+    assert res.W.shape == (12, 3)
+
+
+def _tiny_narrow_problem(m=3, n=20, p=12):
+    k = jax.random.split(jax.random.PRNGKey(0), 2)
+    Xs = jax.random.normal(k[0], (m, n, p))
+    ys = jnp.einsum("mnp,p->mn", Xs, jnp.ones((p,)) / p) \
+        + 0.1 * jax.random.normal(k[1], (m, n))
+    return Xs, ys
+
+
+def test_maybe_reload_same_artifact_is_noop(tmp_path):
+    """Serving a model from memory whose save landed in the store:
+    maybe_reload must recognize the identical artifact (content hash),
+    adopt its step, and report NO swap."""
+    store = str(tmp_path / "store")
+    v0 = _rank_r_model(seed=0)
+    server = MTLServer(v0, batch_size=4)      # step unknown (None)
+    step0 = v0.save(store)
+    assert not server.maybe_reload(store)
+    assert server.version == v0.version
+    assert server._state.step == step0        # step adopted
+    v1 = _rank_r_model(seed=1)
+    v1.save(store)
+    assert server.maybe_reload(store)         # a real new version swaps
+    assert server.version == v1.version
+
+
+# ---------------------------------------------------------------------------
+# sharded code table ≡ single device (4-device subprocess)
+# ---------------------------------------------------------------------------
+SHARD_SCRIPT = textwrap.dedent("""
+    import jax, jax.numpy as jnp
+    import numpy as np
+    assert len(jax.devices()) == 4, jax.devices()
+    from repro.runtime import task_mesh
+    from repro.serve.mtl import FactoredModel, MTLServer
+
+    for m in (64, 30):                 # divisible and padded table cases
+        ku, kv = jax.random.split(jax.random.PRNGKey(0))
+        U = jnp.linalg.qr(jax.random.normal(ku, (48, 4)))[0]
+        V = jax.random.normal(kv, (m, 4))
+        model = FactoredModel(U=U, s=jnp.linspace(2.0, 1.0, 4), V=V)
+        kid, kx = jax.random.split(jax.random.PRNGKey(1))
+        ids = jax.random.randint(kid, (50,), 0, m)
+        X = jax.random.normal(kx, (50, 48))
+        p1, v1 = MTLServer(model, batch_size=16).score(ids, X)
+        srv = MTLServer(model, batch_size=16, mesh=task_mesh(4))
+        assert srv._state.C.shape[0] % 4 == 0
+        p2, v2 = srv.score(ids, X)
+        assert v1 == v2
+        err = float(jnp.max(jnp.abs(p1 - p2)))
+        print(f"SHARDPAR m={m} err={err:.3e}")
+        assert err <= 1e-6, (m, err)
+""")
+
+
+@pytest.mark.slow
+def test_sharded_codes_match_single_device():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run([sys.executable, "-c", SHARD_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert out.stdout.count("SHARDPAR") == 2, out.stdout
