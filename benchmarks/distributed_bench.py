@@ -12,7 +12,6 @@ pod slice) through ``repro.solve(..., backend="mesh")`` and checks:
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 import repro

@@ -1,0 +1,31 @@
+"""Static verification of the solver programs (DESIGN.md §11).
+
+``python -m repro.analysis`` traces every registered solver under
+sim / mesh-1D / mesh-2D x scan / eager, proves the CommLog template
+equals the traced jaxpr's collectives equation-by-equation, runs the
+sharding/donation/carry lints over the same jaxprs plus the AST repo
+lints, and prints a per-solver report — zero solver rounds executed.
+
+Programmatic entry points:
+
+* :func:`run_analysis` — the full matrix; returns an AnalysisReport.
+* :func:`trace_solver` / :func:`check_trace` — one cell at a time.
+* :func:`verify_static` — what ``repro.solve(..., verify="static")``
+  calls: verify one configuration, raise :class:`AnalysisError` on
+  any finding.
+* :func:`lint_repo` — the AST lints alone.
+"""
+from .jaxpr_walk import CollectiveCall, WalkResult, walk
+from .lint import lint_file, lint_repo
+from .report import AnalysisReport, CaseReport, Finding
+from .verify import (ANALYSIS_CASES, DRIVERS, LAYOUTS, AnalysisError,
+                     SolverTrace, StaticCapture, build_problem, check_trace,
+                     run_analysis, trace_solver, verify_static)
+
+__all__ = [
+    "ANALYSIS_CASES", "AnalysisError", "AnalysisReport", "CaseReport",
+    "CollectiveCall", "DRIVERS", "Finding", "LAYOUTS", "SolverTrace",
+    "StaticCapture", "WalkResult", "build_problem", "check_trace",
+    "lint_file", "lint_repo", "run_analysis", "trace_solver",
+    "verify_static", "walk",
+]

@@ -1,0 +1,77 @@
+"""CLI: ``python -m repro.analysis`` — the static verification report.
+
+Exit status 0 iff every solver x layout x driver cell verifies and the
+repo lints are clean, so CI can gate on it directly.  The mesh layouts
+need 4 host devices; when the current process has fewer the CLI
+re-execs itself once under ``XLA_FLAGS=--xla_force_host_platform_
+device_count=4`` (same trick as tests/test_runtime_parity.py).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+
+_DEV_FLAG = "--xla_force_host_platform_device_count"
+_REEXEC_GUARD = "REPRO_ANALYSIS_REEXEC"
+
+
+def _ensure_devices(argv) -> None:
+    """Re-exec with forced host devices when the mesh layouts need it."""
+    from .verify import MESH_DEVICES
+    if os.environ.get(_REEXEC_GUARD):
+        return
+    if _DEV_FLAG in os.environ.get("XLA_FLAGS", ""):
+        return
+    import jax
+    if jax.device_count() >= MESH_DEVICES:   # real accelerators suffice
+        return
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" {_DEV_FLAG}={MESH_DEVICES}").strip()
+    env[_REEXEC_GUARD] = "1"
+    proc = subprocess.run([sys.executable, "-m", "repro.analysis"] + argv,
+                          env=env)
+    sys.exit(proc.returncode)
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else list(argv)
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="statically verify ledger == jaxpr collectives for "
+                    "every registered solver")
+    ap.add_argument("--methods", nargs="*", default=None,
+                    help="solver subset (default: the whole registry)")
+    ap.add_argument("--layouts", nargs="*", default=None,
+                    choices=["sim", "mesh", "mesh2d"],
+                    help="layout subset (default: all three)")
+    ap.add_argument("--drivers", nargs="*", default=None,
+                    choices=["scan", "eager"],
+                    help="driver subset (default: both)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the report as JSON")
+    ap.add_argument("--no-lint", action="store_true",
+                    help="skip the AST repo lints")
+    args = ap.parse_args(argv)
+
+    layouts = tuple(args.layouts) if args.layouts else None
+    if layouts is None or set(layouts) & {"mesh", "mesh2d"}:
+        _ensure_devices(argv)
+
+    from .verify import DRIVERS, LAYOUTS, run_analysis
+    report = run_analysis(methods=args.methods,
+                          layouts=layouts or LAYOUTS,
+                          drivers=tuple(args.drivers) if args.drivers
+                          else DRIVERS,
+                          lint_paths=not args.no_lint)
+    print(report.render())
+    if args.json:
+        report.to_json(args.json)
+        print(f"report written to {args.json}")
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,206 @@
+"""Recursive jaxpr walker: every collective, with static multiplicity.
+
+The communication verifier (:mod:`repro.analysis.verify`) needs one
+fact the runtime's dynamic counters cannot prove: that the program a
+solver actually compiles moves exactly the floats its ledger charges.
+This module extracts the program side of that equation — it walks a
+traced :class:`ClosedJaxpr` and returns every collective equation
+(``psum`` / ``all_gather`` / ``ppermute`` / ``pbroadcast`` /
+``all_to_all`` / ``reduce_scatter``) over a NAMED mesh axis, together
+with the number of times it executes per program call:
+
+* ``scan`` bodies multiply by the static ``length`` (this covers both
+  the fused round loop and ``fori_loop``-lowered inner loops, e.g. the
+  ADMM Newton refit — the multipliers the CommLog template records via
+  ``repeats=``);
+* ``while`` bodies have data-dependent trip counts, so any collective
+  inside one is UNVERIFIABLE and reported as a structural issue (the
+  spectral engine's ``while_loop`` sweeps are compute-only by design —
+  this rule is what keeps them that way);
+* ``cond`` branches must all carry the SAME collective multiset
+  (otherwise traffic is data-dependent); the walker checks the branches
+  against each other and then counts one of them;
+* every other jaxpr-carrying equation (``pjit``, ``shard_map``,
+  ``custom_jvp/vjp``, remat, ...) is recursed through transparently.
+
+Collectives whose axes are all POSITIONAL (integers) are skipped: those
+are ``vmap``-emulated axes (``SimRuntime``'s 2-D emulation) that lower
+to on-chip reductions and move no bytes.
+
+The walker also collects per-``shard_map`` and per-``pjit`` metadata
+(replication specs, donation masks) for the sharding/donation lints in
+:mod:`repro.analysis.shard_lint`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Tuple
+
+from jax._src import core as jcore
+
+# jax collectives that move bytes between devices when bound to a named
+# mesh axis.  pmean has no primitive of its own (it lowers to psum+div).
+COLLECTIVE_PRIMS = ("psum", "all_gather", "ppermute", "pbroadcast",
+                    "all_to_all", "reduce_scatter")
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveCall:
+    """One named-axis collective equation, with static multiplicity."""
+    primitive: str               # e.g. "psum"
+    axes: Tuple[str, ...]        # named mesh axes it reduces/gathers over
+    payload: int                 # operand floats (sum of input aval sizes)
+    mult: int                    # static executions per program call
+    path: str                    # human-readable location in the jaxpr
+
+    def describe(self) -> str:
+        ax = ",".join(self.axes)
+        return (f"{self.primitive}[axes=({ax})] payload={self.payload} "
+                f"x{self.mult} at {self.path}")
+
+
+@dataclasses.dataclass
+class ShardMapSite:
+    """One shard_map equation: global invars + their mesh placement."""
+    path: str
+    mesh_axes: Tuple[str, ...]
+    # per global invar: (aval, spec_names) — spec_names empty == the
+    # leaf is fully replicated inside the body
+    invars: List[Tuple[Any, Tuple[str, ...]]]
+
+
+@dataclasses.dataclass
+class PjitSite:
+    """One pjit equation: donation mask + in/out avals."""
+    path: str
+    donated: Tuple[bool, ...]
+    in_avals: List[Any]
+    out_avals: List[Any]
+
+
+@dataclasses.dataclass
+class WalkResult:
+    calls: List[CollectiveCall] = dataclasses.field(default_factory=list)
+    issues: List[str] = dataclasses.field(default_factory=list)
+    shard_maps: List[ShardMapSite] = dataclasses.field(default_factory=list)
+    pjits: List[PjitSite] = dataclasses.field(default_factory=list)
+
+
+def _named_axes(eqn) -> Tuple[str, ...]:
+    """The string-named axes of a collective eqn ('' when vmap-emulated:
+    vmapped axis names lower to positional ints in the eqn params)."""
+    axes = eqn.params.get("axes", eqn.params.get("axis_name", ()))
+    if not isinstance(axes, (tuple, list)):
+        axes = (axes,)
+    return tuple(a for a in axes if isinstance(a, str))
+
+
+def _payload(eqn) -> int:
+    return int(sum(getattr(v.aval, "size", 0) for v in eqn.invars))
+
+
+def _inner_jaxpr(obj):
+    """Unwrap ClosedJaxpr -> Jaxpr (shard_map carries a raw Jaxpr)."""
+    return obj.jaxpr if isinstance(obj, jcore.ClosedJaxpr) else obj
+
+
+def _sub_jaxprs(eqn):
+    """Every jaxpr carried in an equation's params (generic recursion
+    for pjit / custom_jvp / custom_vjp / remat / closed_call / ...)."""
+    subs = []
+    for val in eqn.params.values():
+        if isinstance(val, (jcore.Jaxpr, jcore.ClosedJaxpr)):
+            subs.append(val)
+        elif isinstance(val, (tuple, list)):
+            subs.extend(v for v in val
+                        if isinstance(v, (jcore.Jaxpr, jcore.ClosedJaxpr)))
+    return subs
+
+
+def _tally_key(calls: List[CollectiveCall]):
+    """Multiset signature of a call list (for cond-branch comparison)."""
+    sig = {}
+    for c in calls:
+        k = (c.primitive, c.axes, c.payload)
+        sig[k] = sig.get(k, 0) + c.mult
+    return tuple(sorted(sig.items()))
+
+
+def _walk(jaxpr, mult: int, path: str, in_while: bool, out: WalkResult
+          ) -> None:
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        here = f"{path}/{name}"
+        if name in COLLECTIVE_PRIMS:
+            axes = _named_axes(eqn)
+            if not axes:
+                continue                       # vmap-emulated: on-chip
+            if in_while:
+                out.issues.append(
+                    f"{name} over axis ({','.join(axes)}) inside a "
+                    f"while_loop at {here}: data-dependent trip count — "
+                    f"traffic is statically unbounded")
+                continue
+            out.calls.append(CollectiveCall(name, axes, _payload(eqn),
+                                            mult, here))
+        elif name == "scan":
+            length = int(eqn.params["length"])
+            _walk(_inner_jaxpr(eqn.params["jaxpr"]), mult * length,
+                  f"{here}[{length}]", in_while, out)
+        elif name == "while":
+            _walk(_inner_jaxpr(eqn.params["cond_jaxpr"]), mult,
+                  f"{here}/cond", True, out)
+            _walk(_inner_jaxpr(eqn.params["body_jaxpr"]), mult,
+                  f"{here}/body", True, out)
+        elif name == "cond":
+            branches = eqn.params["branches"]
+            branch_walks = []
+            for i, br in enumerate(branches):
+                sub = WalkResult()
+                _walk(_inner_jaxpr(br), 1, f"{here}/branch{i}", in_while,
+                      sub)
+                out.issues.extend(sub.issues)
+                branch_walks.append(sub)
+            sigs = {_tally_key(b.calls) for b in branch_walks}
+            if len(sigs) > 1:
+                out.issues.append(
+                    f"cond branches at {here} issue DIFFERENT collective "
+                    f"multisets — traffic would be data-dependent")
+            for c in branch_walks[0].calls:
+                out.calls.append(dataclasses.replace(c, mult=c.mult * mult))
+            for b in branch_walks:
+                out.shard_maps.extend(b.shard_maps)
+                out.pjits.extend(b.pjits)
+        elif name == "shard_map":
+            in_names = eqn.params["in_names"]
+            mesh = eqn.params["mesh"]
+            site = ShardMapSite(
+                path=here,
+                mesh_axes=tuple(getattr(mesh, "axis_names", ())),
+                invars=[(v.aval,
+                         tuple(a for axes in names.values() for a in axes))
+                        for v, names in zip(eqn.invars, in_names)])
+            out.shard_maps.append(site)
+            _walk(_inner_jaxpr(eqn.params["jaxpr"]), mult, here, in_while,
+                  out)
+        elif name == "pjit":
+            closed = eqn.params["jaxpr"]
+            out.pjits.append(PjitSite(
+                path=here,
+                donated=tuple(eqn.params.get("donated_invars", ())),
+                in_avals=[v.aval for v in eqn.invars],
+                out_avals=[v.aval for v in eqn.outvars]))
+            _walk(_inner_jaxpr(closed), mult, here, in_while, out)
+        else:
+            for sub in _sub_jaxprs(eqn):
+                _walk(_inner_jaxpr(sub), mult, here, in_while, out)
+
+
+def walk(closed) -> WalkResult:
+    """Walk a ClosedJaxpr; return every named-axis collective with its
+    static multiplicity, plus shard_map/pjit metadata and any
+    structural issues (collectives under ``while``, divergent ``cond``
+    branches)."""
+    out = WalkResult()
+    _walk(_inner_jaxpr(closed), 1, "", False, out)
+    return out

@@ -1,0 +1,194 @@
+"""AST-level repo lints: the invariants ruff can't know about.
+
+Styled as ruff-plugin checks (stable codes, file:line locations, one
+sentence + fix hint) and run from the same CI job, but implemented on
+the stdlib ``ast`` so the in-repo verifier needs nothing installed:
+
+* LINT101 — ``jnp.linalg.svd`` outside ``core/spectral.py`` /
+  ``core/svd_ops.py``.  The whole point of the spectral engine
+  (DESIGN.md §9) is that full SVDs happen in exactly two audited
+  places (the engine's exact fallback and the svd_ops masters); a
+  stray ``jnp.linalg.svd`` silently reintroduces the O(p m min(p,m))
+  master cost the engine exists to avoid.
+* LINT102 — host synchronization in hot paths: ``.item()`` /
+  ``float()`` / ``int()`` on traced values, ``jax.debug.callback`` /
+  ``io_callback`` / ``pure_callback``, inside ``core/worker_ops.py``
+  or the serving request path (``serve/mtl.py``).  Each one is a
+  device->host round-trip serializing the dispatch queue — the
+  batched-scoring latency contract (DESIGN.md §10) dies by a single
+  stray ``.item()``.
+* LINT103 — mutating a ``_ServeState`` snapshot after construction.
+  Readers score lock-free against an immutable snapshot; the frozen
+  dataclass enforces attribute assignment, but ``object.__setattr__``
+  (outside ``__post_init__``) and accumulating into a snapshot's
+  arrays would still tear a concurrent read.
+
+``lint_repo()`` walks the repo source and returns findings in the same
+:class:`~repro.analysis.report.Finding` currency as the jaxpr checks.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import List, Optional
+
+from .report import Finding
+
+# files allowed to call jnp.linalg.svd (repo-relative, posix)
+SVD_ALLOWED = ("src/repro/core/spectral.py", "src/repro/core/svd_ops.py")
+# hot-path files: no host callbacks, no .item()
+HOT_PATHS = ("src/repro/core/worker_ops.py", "src/repro/serve/mtl.py")
+SERVE_FILE = "src/repro/serve/mtl.py"
+
+_CALLBACKS = {"callback", "io_callback", "pure_callback", "device_get"}
+
+
+def _repo_root(start: Optional[pathlib.Path] = None) -> pathlib.Path:
+    here = (start or pathlib.Path(__file__)).resolve()
+    for parent in here.parents:
+        if (parent / "src" / "repro").is_dir():
+            return parent
+    raise RuntimeError("cannot locate repo root above " + str(here))
+
+
+def _dotted(node: ast.AST) -> str:
+    """'jnp.linalg.svd' for an Attribute/Name chain ('' when dynamic)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+class _FileLint(ast.NodeVisitor):
+    def __init__(self, rel: str, findings: List[Finding]):
+        self.rel = rel
+        self.findings = findings
+        self.hot = rel in HOT_PATHS
+        self.serve = rel == SERVE_FILE
+        self.svd_ok = rel in SVD_ALLOWED
+        self._func_stack: List[str] = []
+        # names bound to a fresh _ServeState(...) in the current scope
+        self._snapshots: List[set] = [set()]
+
+    # -- scope bookkeeping --------------------------------------------
+    def visit_FunctionDef(self, node):
+        self._func_stack.append(node.name)
+        self._snapshots.append(set())
+        self.generic_visit(node)
+        self._snapshots.pop()
+        self._func_stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def _where(self, node) -> str:
+        return f"{self.rel}:{node.lineno}"
+
+    # -- LINT101 / LINT102: calls -------------------------------------
+    def visit_Call(self, node):
+        name = _dotted(node.func)
+        if name.endswith("linalg.svd") and not self.svd_ok:
+            self.findings.append(Finding(
+                "LINT101",
+                f"jnp.linalg.svd outside the audited spectral modules — "
+                f"route through repro.core.spectral (truncate_factors / "
+                f"leading_sv) or core.svd_ops", self._where(node)))
+        if self.hot:
+            leaf = name.rsplit(".", 1)[-1]
+            if leaf in _CALLBACKS and ("debug" in name or "callback" in name
+                                       or "device_get" in name):
+                self.findings.append(Finding(
+                    "LINT102",
+                    f"host callback {name}() in a hot path — a device->"
+                    f"host sync per call; keep worker/serve math on "
+                    f"device", self._where(node)))
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "item"):
+                self.findings.append(Finding(
+                    "LINT102",
+                    ".item() in a hot path blocks on the device queue — "
+                    "return arrays and convert at the edge",
+                    self._where(node)))
+        if self.serve and name == "object.__setattr__" \
+                and "__post_init__" not in self._func_stack:
+            self.findings.append(Finding(
+                "LINT103",
+                "object.__setattr__ outside __post_init__ mutates a "
+                "frozen snapshot — build a new _ServeState and swap the "
+                "reference instead", self._where(node)))
+        self.generic_visit(node)
+
+    # -- LINT103: snapshot mutation -----------------------------------
+    def _track_snapshot_binding(self, target, value):
+        if (isinstance(value, ast.Call)
+                and _dotted(value.func).endswith("_ServeState")
+                and isinstance(target, ast.Name)):
+            self._snapshots[-1].add(target.id)
+
+    def visit_Assign(self, node):
+        for t in node.targets:
+            self._track_snapshot_binding(t, node.value)
+            self._check_snapshot_write(t)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node):
+        self._check_snapshot_write(node.target)
+        self.generic_visit(node)
+
+    def _check_snapshot_write(self, target):
+        if not self.serve:
+            return
+        if isinstance(target, (ast.Attribute, ast.Subscript)):
+            base = target.value
+            while isinstance(base, (ast.Attribute, ast.Subscript)):
+                base = base.value
+            if isinstance(base, ast.Name) and any(
+                    base.id in scope for scope in self._snapshots):
+                self.findings.append(Finding(
+                    "LINT103",
+                    f"write into _ServeState snapshot {base.id!r} after "
+                    f"construction — snapshots are immutable; readers "
+                    f"score against them lock-free", self._where(target)))
+
+    # -- class-level invariant: _ServeState stays frozen ---------------
+    def visit_ClassDef(self, node):
+        if self.serve and node.name == "_ServeState":
+            frozen = any(
+                isinstance(dec, ast.Call)
+                and _dotted(dec.func).endswith("dataclass")
+                and any(kw.arg == "frozen"
+                        and isinstance(kw.value, ast.Constant)
+                        and kw.value.value is True
+                        for kw in dec.keywords)
+                for dec in node.decorator_list)
+            if not frozen:
+                self.findings.append(Finding(
+                    "LINT103",
+                    "_ServeState must be @dataclasses.dataclass("
+                    "frozen=True) — the lock-free reader contract depends "
+                    "on immutable snapshots", self._where(node)))
+        self.generic_visit(node)
+
+
+def lint_file(path: pathlib.Path, rel: str) -> List[Finding]:
+    findings: List[Finding] = []
+    try:
+        tree = ast.parse(path.read_text(), filename=str(path))
+    except SyntaxError as e:
+        findings.append(Finding("LINT100", f"syntax error: {e}", rel))
+        return findings
+    _FileLint(rel, findings).visit(tree)
+    return findings
+
+
+def lint_repo(root: Optional[pathlib.Path] = None) -> List[Finding]:
+    """Run the AST lints over every repo source file under ``src/``."""
+    root = root or _repo_root()
+    findings: List[Finding] = []
+    for path in sorted((root / "src").rglob("*.py")):
+        rel = path.relative_to(root).as_posix()
+        findings.extend(lint_file(path, rel))
+    return findings

@@ -1,0 +1,427 @@
+"""The collective-accounting verifier: ledger ≡ jaxpr, statically.
+
+The CommLog is recorded by the runtime primitives at trace time and
+replayed template × rounds — PRs 1-4 made it "equal measured traffic
+by construction", but that equality was only ever CHECKED dynamically,
+by running solves and comparing counters.  This module closes the loop
+statically: it traces every registered solver under a capture runtime
+(``StaticCapture`` — the real driver's exact jit / vmap / shard_map
+wrapping, zero rounds executed), walks the traced ClosedJaxpr with
+:mod:`repro.analysis.jaxpr_walk`, and proves
+
+    {named-axis collective equations, weighted by static trip counts}
+        ==  {CommLog template events that claim to lower to one}
+
+for the tasks axis (the paper's charged Table-1 traffic) and the data
+axis (measured within-task sharding traffic, DESIGN.md §8) separately.
+A solver that charges a vector it never sends, sends one it never
+charges, or hides a collective inside a ``while_loop`` is rejected
+with a finding naming the equation and the axis.
+
+What is proven statically vs. measured dynamically (DESIGN.md §11):
+
+* proven   — per-round collective multiset (primitive, axis, operand
+  floats, trip count) ≡ template; ledger arithmetic (replay totals,
+  Table-1 vectors/round); layout/driver invariance of the ledger;
+  carry aval stability; donation safety.
+* measured — actual floats moved (``collective_floats_per_chip``),
+  still asserted end-to-end by ``tests/test_runtime_parity.py`` — the
+  static pass proves the program SHAPE, the dynamic tests its values.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter
+from typing import Dict, List, Optional, Tuple
+
+import jax
+
+from ..core.comm import TABLE1_VECTORS_PER_ROUND
+from ..runtime.base import make_runtime
+from .jaxpr_walk import WalkResult, walk
+from .report import AnalysisReport, CaseReport, Finding
+
+LAYOUTS = ("sim", "mesh", "mesh2d")
+DRIVERS = ("scan", "eager")
+
+#: devices the mesh layouts need (mesh-1D: 4 task chips; mesh-2D:
+#: 2 task groups x 2 data shards).  The CLI re-execs itself with
+#: ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` when short.
+MESH_DEVICES = 4
+
+# Toy problem for tracing: avals only matter, so smallest shapes that
+# keep every code path alive (m divisible by 4 task chips, n by 2 data
+# shards, r < p).  Small sv_iters/newton_iters keep loop multipliers
+# honest without bloating the jaxpr.
+_SPEC = dict(p=12, m=8, n=8, r=2)
+
+# Per-solver hyper-parameters for the verification matrix: few rounds
+# (the template is per-round; 3 rounds exercises the scan multiplier),
+# zeros init (skips the host-side Local warm start the trace never
+# charges anyway).
+ANALYSIS_CASES: Dict[str, Dict] = {
+    "local": {},
+    "bestrep": {},                       # U_star injected by build_problem
+    "svd_trunc": {},
+    "centralize": {"iters": 4},
+    "proxgd": {"rounds": 3, "init": "zeros"},
+    "accproxgd": {"rounds": 3, "init": "zeros"},
+    "admm": {"rounds": 3, "newton_iters": 2},
+    "dfw": {"rounds": 3, "sv_iters": 8},
+    "dgsp": {"rounds": 3, "sv_iters": 8},
+    "dnsp": {"rounds": 3, "sv_iters": 8},
+    "altmin": {"rounds": 3},
+}
+
+
+class AnalysisError(Exception):
+    """Static verification failed; ``.findings`` has the diff."""
+
+    def __init__(self, findings: List[Finding]):
+        self.findings = list(findings)
+        super().__init__("static verification failed:\n" +
+                         "\n".join(f"  {f}" for f in self.findings))
+
+
+@dataclasses.dataclass
+class SolverTrace:
+    """Everything one captured solve leaves behind (no rounds executed)."""
+    method: str
+    layout: str
+    driver: str
+    rounds: int
+    scan: bool
+    backend: str
+    axis: str
+    data_axis: str
+    data_shards: int
+    local_tasks: int
+    template: list                 # _WireEvent per-round template
+    data_template: list            # _DataEvent per-round template
+    setup_data_floats: int
+    comm: object                   # the replayed CommLog
+    collective_floats_per_chip: int
+    data_collective_floats_per_chip: int
+    jaxpr: object                  # the round program's ClosedJaxpr
+    in_shapes: object              # state pytree of ShapeDtypeStruct
+    out_shapes: object             # post-round state pytree of SDS
+
+
+class StaticCapture:
+    """Install on ``runtime._capture`` to trace instead of execute.
+
+    ``ProtocolRuntime._capture_rounds`` hands over the traced program
+    plus the abstract output state; the runtime's template/ledger were
+    recorded by the same trace, so the trace snapshot below is exactly
+    what a real solve would have accounted.
+    """
+
+    def __init__(self):
+        self.trace: Optional[SolverTrace] = None
+
+    def absorb(self, rt, closed, state, out_state, *, rounds: int,
+               scan: bool) -> None:
+        if self.trace is not None:      # runtimes are single-use; belt.
+            raise RuntimeError("StaticCapture already holds a trace")
+        self.trace = SolverTrace(
+            method="?", layout="?", driver="scan" if scan else "eager",
+            rounds=int(rounds), scan=bool(scan), backend=rt.name,
+            axis=getattr(rt, "axis", "tasks"), data_axis=rt.data_axis,
+            data_shards=rt.data_shards, local_tasks=rt.local_tasks,
+            template=list(rt._template),
+            data_template=list(rt._data_template),
+            setup_data_floats=rt.setup_data_floats,
+            comm=rt.comm,
+            collective_floats_per_chip=rt.collective_floats_per_chip,
+            data_collective_floats_per_chip=(
+                rt.data_collective_floats_per_chip),
+            jaxpr=closed,
+            in_shapes=jax.eval_shape(lambda s: s, state),
+            out_shapes=out_state)
+
+
+# ---------------------------------------------------------------------------
+# tracing one solver on one layout under one driver
+# ---------------------------------------------------------------------------
+def build_problem(loss: str = "squared", gram: bool = True):
+    """The deterministic toy instance the whole matrix traces against.
+
+    Returns ``(prob, extras)`` where extras carries the oracle
+    ``U_star`` the bestrep baseline requires.
+    """
+    from ..core.methods import MTLProblem
+    from ..core.spectral import truncate_factors
+    from ..data.synthetic import SimSpec, generate
+
+    spec = SimSpec(p=_SPEC["p"], m=_SPEC["m"], r=_SPEC["r"], n=_SPEC["n"],
+                   task="regression" if loss == "squared"
+                   else "classification")
+    Xs, ys, Wstar, _ = generate(jax.random.PRNGKey(0), spec)
+    prob = MTLProblem.make(Xs, ys, loss_name=loss, gram=gram, r=spec.r)
+    U_star, _, _ = truncate_factors(Wstar, spec.r)
+    return prob, {"U_star": U_star}
+
+
+def layout_runtime(prob, layout: str):
+    """A fresh runtime for one verification-matrix layout."""
+    if layout == "sim":
+        return make_runtime("sim", prob)
+    n_dev = len(jax.devices())
+    if n_dev < MESH_DEVICES:
+        raise RuntimeError(
+            f"layout {layout!r} needs {MESH_DEVICES} devices, found "
+            f"{n_dev}; rerun under XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={MESH_DEVICES} "
+            f"(python -m repro.analysis does this automatically)")
+    from ..runtime.mesh import MeshRuntime, task_data_mesh, task_mesh
+    if layout == "mesh":
+        return MeshRuntime(prob, mesh=task_mesh(MESH_DEVICES))
+    if layout == "mesh2d":
+        return MeshRuntime(prob, mesh=task_data_mesh(2, MESH_DEVICES),
+                           data_shards=2)
+    raise ValueError(f"unknown layout {layout!r}; have {LAYOUTS}")
+
+
+def trace_solver(method: str, layout: str, driver: str = "scan",
+                 prob=None, extras: Optional[Dict] = None,
+                 hp: Optional[Dict] = None) -> SolverTrace:
+    """Trace one solver cell of the matrix; zero rounds execute."""
+    from .. import api
+
+    if prob is None:
+        prob, extras = build_problem()
+    hp = dict(ANALYSIS_CASES.get(method, {}) if hp is None else hp)
+    if method == "bestrep":
+        hp.setdefault("U_star", (extras or {})["U_star"])
+    rt = layout_runtime(prob, layout)
+    cap = StaticCapture()
+    rt._capture = cap
+    api.solve(prob, method=method, runtime=rt, scan=(driver == "scan"),
+              **hp)
+    if cap.trace is None:
+        raise RuntimeError(f"solver {method!r} never entered run_rounds — "
+                           f"nothing to verify")
+    cap.trace.method = method
+    cap.trace.layout = layout
+    return cap.trace
+
+
+# ---------------------------------------------------------------------------
+# checking one trace
+# ---------------------------------------------------------------------------
+def _axis_counter(walked: WalkResult, axis: str) -> Counter:
+    """Multiset {(primitive, operand floats): executions} of the traced
+    program's collectives over one named axis."""
+    c: Counter = Counter()
+    for call in walked.calls:
+        if axis in call.axes:
+            c[(call.primitive, call.payload)] += call.mult
+    return c
+
+
+def _template_counter(events, axis_is_tasks: bool, per_jaxpr: int
+                      ) -> Counter:
+    """The template's claim, in the same (primitive, floats) key space."""
+    c: Counter = Counter()
+    for ev in events:
+        if axis_is_tasks:
+            if ev.kind == "none":      # sim / broadcast: no collective
+                continue
+            c[(ev.kind, ev.payload)] += per_jaxpr
+        else:
+            c[(ev.kind, ev.floats)] += ev.repeats * per_jaxpr
+    return c
+
+
+def _counter_diff(expected: Counter, measured: Counter, axis: str,
+                  walked: WalkResult, findings: List[Finding],
+                  where: str) -> None:
+    """Findings for every key where template and jaxpr disagree —
+    naming the offending equation (path in the jaxpr) and the axis."""
+    for key in sorted(set(expected) | set(measured),
+                      key=lambda k: (k[0], k[1])):
+        exp, got = expected.get(key, 0), measured.get(key, 0)
+        if exp == got:
+            continue
+        prim, floats = key
+        eqns = [c.describe() for c in walked.calls
+                if axis in c.axes and c.primitive == prim
+                and c.payload == floats]
+        eq_note = ("; ".join(eqns) if eqns
+                   else f"no {prim} equation of {floats} floats over "
+                        f"axis {axis!r} in the jaxpr")
+        if got > exp:
+            findings.append(Finding(
+                "COMM001",
+                f"program moves {prim}[{floats} floats] over axis "
+                f"{axis!r} {got}x but the ledger template charges only "
+                f"{exp}x — uncharged equation: {eq_note}", where))
+        else:
+            findings.append(Finding(
+                "COMM002",
+                f"ledger template charges {prim}[{floats} floats] over "
+                f"axis {axis!r} {exp}x but the program only issues it "
+                f"{got}x — {eq_note}", where))
+
+
+def check_trace(trace: SolverTrace) -> CaseReport:
+    """Verify one captured solve; every disagreement becomes a Finding."""
+    from .shard_lint import lint_program
+
+    where = f"{trace.method}/{trace.layout}/{trace.driver}"
+    rep = CaseReport(method=trace.method, layout=trace.layout,
+                     driver=trace.driver, rounds=trace.comm.rounds)
+    walked = walk(trace.jaxpr)
+    findings = rep.findings
+
+    # structural: collectives under while, divergent cond branches
+    for issue in walked.issues:
+        findings.append(Finding("COMM003", issue, where))
+
+    # the traced jaxpr covers ALL rounds under the scan driver (the
+    # fused lax.scan carries the round loop) but ONE round under the
+    # eager driver (one jitted step per round; each replays the same
+    # template, which is exactly what the single-step jaxpr must match)
+    per_jaxpr = trace.rounds if trace.scan else 1
+
+    # -- tasks axis: the charged Table-1 traffic ----------------------
+    expected = _template_counter(trace.template, True, per_jaxpr)
+    measured = _axis_counter(walked, trace.axis)
+    _counter_diff(expected, measured, trace.axis, walked, findings, where)
+
+    # -- data axis: measured within-task sharding traffic -------------
+    expected_d = _template_counter(trace.data_template, False, per_jaxpr)
+    measured_d = _axis_counter(walked, trace.data_axis)
+    _counter_diff(expected_d, measured_d, trace.data_axis, walked,
+                  findings, where)
+
+    # -- ledger arithmetic: replayed counters match the template ------
+    uplink = trace.comm.floats_by_direction("worker->master")
+    if trace.backend == "mesh":
+        want = uplink * trace.local_tasks
+        if trace.collective_floats_per_chip != want:
+            findings.append(Finding(
+                "COMM004",
+                f"collective_floats_per_chip="
+                f"{trace.collective_floats_per_chip} != ledger uplink "
+                f"{uplink} floats/machine x {trace.local_tasks} "
+                f"tasks/chip = {want}", where))
+    elif trace.collective_floats_per_chip != 0:
+        findings.append(Finding(
+            "COMM004", f"sim backend measured "
+            f"{trace.collective_floats_per_chip} collective floats; "
+            f"the simulated cluster moves none", where))
+    data_round = sum(ev.floats * ev.repeats for ev in trace.data_template)
+    want_data = trace.setup_data_floats + data_round * trace.rounds
+    if trace.data_collective_floats_per_chip != want_data:
+        findings.append(Finding(
+            "COMM004",
+            f"data_collective_floats_per_chip="
+            f"{trace.data_collective_floats_per_chip} != setup "
+            f"{trace.setup_data_floats} + per-round {data_round} x "
+            f"{trace.rounds} rounds = {want_data}", where))
+
+    # -- Table 1: charged vectors per round ---------------------------
+    t1 = TABLE1_VECTORS_PER_ROUND.get(trace.method)
+    if t1 is not None and trace.comm.rounds:
+        got = trace.comm.per_round_vectors()
+        if got != t1:
+            findings.append(Finding(
+                "COMM005",
+                f"ledger charges {got} vectors/machine/round; Table 1 "
+                f"says {t1}", where))
+
+    # -- sharding, donation, carry drift ------------------------------
+    findings.extend(lint_program(trace, walked))
+
+    # -- report numbers -----------------------------------------------
+    rep.charged_floats_per_machine = trace.comm.floats_per_machine()
+    rep.charged_vectors_per_round = trace.comm.per_round_vectors()
+    rep.measured_task_floats_per_chip = sum(
+        c.payload * c.mult for c in walked.calls if trace.axis in c.axes
+    ) * (1 if trace.scan else trace.rounds)
+    rep.measured_data_floats_per_chip = trace.setup_data_floats + sum(
+        c.payload * c.mult for c in walked.calls
+        if trace.data_axis in c.axes) * (1 if trace.scan else trace.rounds)
+    rep.collective_eqns = sum(
+        1 for c in walked.calls
+        if trace.axis in c.axes or trace.data_axis in c.axes)
+    return rep
+
+
+# ---------------------------------------------------------------------------
+# the suite: every solver x layout x driver, plus cross-case invariants
+# ---------------------------------------------------------------------------
+def _ledger_signature(trace: SolverTrace) -> Tuple:
+    """The ledger as a comparable value: per-event tuples + round count.
+    Must be IDENTICAL across layouts and drivers (the paper's accounting
+    cannot depend on how the computation is laid out)."""
+    return (trace.comm.rounds,
+            tuple((e.round, e.direction, e.vectors, e.dim)
+                  for e in trace.comm.events))
+
+
+def run_analysis(methods: Optional[List[str]] = None,
+                 layouts: Tuple[str, ...] = LAYOUTS,
+                 drivers: Tuple[str, ...] = DRIVERS,
+                 lint_paths: bool = True) -> AnalysisReport:
+    """The full verification matrix + repo lints; returns the report."""
+    from ..core.methods import solver_names
+    from .lint import lint_repo
+
+    if methods is None:
+        methods = sorted(solver_names())
+    prob, extras = build_problem()
+    report = AnalysisReport()
+    by_method: Dict[str, List[Tuple[str, SolverTrace]]] = {}
+    for method in methods:
+        for layout in layouts:
+            for driver in drivers:
+                trace = trace_solver(method, layout, driver, prob=prob,
+                                     extras=extras)
+                report.cases.append(check_trace(trace))
+                by_method.setdefault(method, []).append(
+                    (f"{layout}/{driver}", trace))
+
+    # ledger layout/driver invariance (COMM006)
+    for method, cells in by_method.items():
+        base_name, base = cells[0]
+        base_sig = _ledger_signature(base)
+        for name, trace in cells[1:]:
+            if _ledger_signature(trace) != base_sig:
+                report.cross_findings.append(Finding(
+                    "COMM006",
+                    f"{method}: ledger under {name} differs from "
+                    f"{base_name} — the CommLog must be bit-identical "
+                    f"across layouts and drivers", method))
+
+    if lint_paths:
+        report.lint_findings.extend(lint_repo())
+    return report
+
+
+def verify_static(prob, method: str, *, backend: str = "sim", mesh=None,
+                  axis: str = "tasks", data_shards: int = 1,
+                  data_axis: str = "data", scan: Optional[bool] = None,
+                  **hp) -> CaseReport:
+    """The ``repro.solve(..., verify="static")`` entry point: trace the
+    requested solve configuration (same problem, same layout, zero
+    rounds executed), verify it, and raise :class:`AnalysisError` on
+    any finding."""
+    rt = make_runtime(backend, prob, mesh=mesh, axis=axis,
+                      data_axis=data_axis, data_shards=data_shards)
+    cap = StaticCapture()
+    rt._capture = cap
+    from .. import api
+    api.solve(prob, method=method, runtime=rt,
+              scan=True if scan is None else scan, **hp)
+    if cap.trace is None:
+        raise RuntimeError(f"solver {method!r} never entered run_rounds — "
+                           f"nothing to verify")
+    cap.trace.method = method
+    cap.trace.layout = {"sim": "sim", "mesh": "mesh"}[rt.name] \
+        if rt.data_shards == 1 else "mesh2d"
+    rep = check_trace(cap.trace)
+    if not rep.ok:
+        raise AnalysisError(rep.findings)
+    return rep

@@ -23,7 +23,8 @@ def solve(prob, method: str = "dgsp", backend: str = "sim", *,
           mesh=None, axis: str = "tasks", data_shards: int = 1,
           data_axis: str = "data", rounds: Optional[int] = None,
           scan: Optional[bool] = None, sv_engine: Optional[str] = None,
-          runtime: Optional[ProtocolRuntime] = None, **hp):
+          runtime: Optional[ProtocolRuntime] = None,
+          verify: Optional[str] = None, **hp):
     """Run one registered solver on one backend.
 
     Parameters
@@ -70,6 +71,18 @@ def solve(prob, method: str = "dgsp", backend: str = "sim", *,
         ``sv_rank=`` hyper-parameter overrides the carried rank hint
         (default: the problem's assumed rank bound r).
     runtime: pass an explicit ProtocolRuntime instead of backend/mesh.
+    verify: ``"static"`` statically verifies THIS solve configuration
+        before running it (``repro.analysis``, DESIGN.md §11): the
+        round program is traced — zero rounds executed — its jaxpr's
+        named-axis collectives are checked equation-by-equation
+        against the CommLog template, and the sharding / donation /
+        carry-drift lints run over the same trace.  Raises
+        ``repro.analysis.AnalysisError`` (findings name the offending
+        equation and axis) instead of executing a mis-accounted
+        program; on success the real solve proceeds and
+        ``result.extras["static_verify"] == "ok"``.  Requires the
+        declarative backend/mesh arguments (not ``runtime=`` — the
+        verifier needs to build a twin runtime for the trace).
     **hp: solver hyper-parameters (lam, eta, damping, ...).
 
     Returns the solver's MTLResult; ``result.comm`` is the protocol
@@ -91,6 +104,22 @@ def solve(prob, method: str = "dgsp", backend: str = "sim", *,
     """
     from .core.methods import get_solver
 
+    if verify is not None:
+        if verify != "static":
+            raise ValueError(f"unknown verify mode {verify!r}; "
+                             f"have 'static'")
+        if runtime is not None:
+            raise ValueError("verify='static' needs the declarative "
+                             "backend/mesh arguments, not runtime=")
+        from .analysis import verify_static
+        vhp = dict(hp)
+        if rounds is not None:
+            vhp["rounds"] = rounds
+        if sv_engine is not None:
+            vhp["sv_engine"] = sv_engine
+        verify_static(prob, method, backend=backend, mesh=mesh, axis=axis,
+                      data_shards=data_shards, data_axis=data_axis,
+                      scan=scan, **vhp)
     if runtime is None:
         runtime = make_runtime(backend, prob, mesh=mesh, axis=axis,
                                data_axis=data_axis, data_shards=data_shards)
@@ -110,4 +139,6 @@ def solve(prob, method: str = "dgsp", backend: str = "sim", *,
         runtime.collective_floats_per_chip
     res.extras["data_collective_floats_per_chip"] = \
         runtime.data_collective_floats_per_chip
+    if verify is not None:
+        res.extras["static_verify"] = "ok"
     return res

@@ -79,9 +79,9 @@ class MTLHead:
             U = self.U[:, mask]
             V = jnp.linalg.lstsq(U, self.W)[0]
             return U, V
-        Uf, S, Vt = jnp.linalg.svd(self.W, full_matrices=False)
-        k = self.config.rank
-        return Uf[:, :k] * S[None, :k], Vt[:k, :]
+        from .spectral import truncate_factors
+        U, s, V = truncate_factors(self.W, self.config.rank)
+        return U * s[None, :], V.T
 
 
 def extract_features(apply_fn: Callable, params, inputs_per_task,

@@ -17,7 +17,6 @@ local ERM solves.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -15,7 +15,6 @@ tests fail (``sv_engine="exact"`` selects them outright).
 from __future__ import annotations
 
 from functools import partial
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

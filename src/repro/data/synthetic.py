@@ -33,12 +33,18 @@ class SimSpec:
 
 def make_wstar(key: jax.Array, p: int, m: int, r: int,
                dtype=jnp.float32) -> jnp.ndarray:
+    from ..core.spectral import truncate_factors
+
     ka, kb = jax.random.split(key)
     A = jax.random.normal(ka, (p, r), dtype)
     B = jax.random.normal(kb, (m, r), dtype)
-    U, _, Vt = jnp.linalg.svd(A @ B.T, full_matrices=False)
+    # top-r factors of the rank-r product A B^T through the audited
+    # spectral module (LINT101); identical to the historical
+    # jnp.linalg.svd construction up to basis rounding — W* is the
+    # sign-invariant composition U diag(s) V^T.
+    U, _, V = truncate_factors(A @ B.T, r)
     s = (1.0 / 1.5) ** jnp.arange(r, dtype=dtype)
-    return (U[:, :r] * s[None, :]) @ Vt[:r, :]
+    return (U * s[None, :]) @ V.T
 
 
 def feature_cov(p: int, corr_decay: float, dtype=jnp.float32) -> jnp.ndarray:

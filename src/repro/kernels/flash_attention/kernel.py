@@ -18,7 +18,6 @@ Block sizes default to MXU-aligned (128, 128); hd rides along whole.
 from __future__ import annotations
 
 import functools
-import math
 from typing import Optional
 
 import jax

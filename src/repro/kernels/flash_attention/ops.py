@@ -9,7 +9,6 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from .kernel import flash_attention_bhsd
 

@@ -12,7 +12,6 @@ every (arch x shape) on the single-pod mesh, via launch/costmodel.py.
 import argparse
 import json
 import sys
-import time
 import traceback
 
 

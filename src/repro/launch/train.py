@@ -13,13 +13,12 @@ from __future__ import annotations
 import argparse
 
 import jax
-import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from ..configs import ARCH_IDS, get_config, get_smoke_config
 from ..data.tokens import SyntheticTokenStream, TokenPipelineSpec
-from ..models.sharding import batch_specs, choose_layout, param_specs
+from ..models.sharding import choose_layout, param_specs
 from ..train.loop import train_loop
 from ..train.steps import TrainConfig, init_train_state, make_train_step
 from .mesh import data_axes, make_host_mesh, make_production_mesh

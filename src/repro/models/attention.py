@@ -15,7 +15,7 @@ Sliding-window layers allocate min(window, S) cache slots (ring buffer).
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -283,7 +283,6 @@ def _update_kv_cache(cache, k, v, positions, window):
 
 def _mla_attention(p, x, cfg: ModelConfig, *, positions, cache, causal,
                    window):
-    from .common import apply_norm as _norm  # rmsnorm on latents
     B, S, D = x.shape
     H = cfg.n_heads
     dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim

@@ -21,7 +21,7 @@ through scan as xs/ys with the same leading dim.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp

@@ -2,7 +2,6 @@
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from .common import dtype_of, init_dense

@@ -15,13 +15,12 @@ vision-stub embeddings (paligemma), "prefix_len": (B,) prefix-LM length}.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
-from . import attention as attn_mod
 from .blocks import (Segment, build_plan, init_segment, init_segment_cache,
                      run_segment)
 from .common import (apply_norm, dtype_of, embed, init_embedding, init_head,

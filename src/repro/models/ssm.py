@@ -13,7 +13,6 @@ Conv cache: (B, K-1, channels) rolling window for the causal conv.
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -115,6 +115,30 @@ class _WireEvent:
                         # lower — the chip pre-reduces its L tasks locally;
                         # 0 for broadcast under the replicated master and
                         # for everything under SimRuntime)
+    kind: str = "none"  # the jax collective this call lowers to
+                        # ("all_gather" | "psum" | "none" when the backend
+                        # issues no collective) — what repro.analysis
+                        # matches against the traced jaxpr's equations
+    payload: int = 0    # physical floats per chip in THAT collective's
+                        # operand (psum: after the chip's local pre-reduce,
+                        # so payload == wire_floats / local_tasks there)
+
+
+@dataclasses.dataclass
+class _DataEvent:
+    """One data-axis collective recorded while tracing a round body.
+
+    ``floats`` is the per-call operand size; ``repeats`` the number of
+    executions per round when the call sits inside ``lax`` control flow
+    (a ``fori_loop`` Newton refit traces once but runs ``iters`` times).
+    The measured per-round traffic is ``floats * repeats``; the static
+    analyzer additionally matches ``(kind, floats)`` against the round
+    jaxpr's data-axis equations with loop-length multipliers.
+    """
+    kind: str           # "psum" | "all_gather"
+    floats: int         # operand floats per chip per call
+    repeats: int = 1    # executions per round (lax control-flow multiplier)
+    note: str = ""
 
 
 class ProtocolRuntime:
@@ -144,9 +168,18 @@ class ProtocolRuntime:
         self.data_axis = "data"
         self._recording = False
         self._template: list[_WireEvent] = []
-        self._data_template: list[int] = []
+        self._data_template: list[_DataEvent] = []
         self._data_leaves: Optional[Tuple[str, ...]] = None
         self._used = False
+        # data-axis floats accounted OUTSIDE the per-round template (the
+        # one-per-solve Gram-cache psum) — kept separate so the static
+        # analyzer can reconcile setup traffic independently of rounds
+        self.setup_data_floats = 0
+        # when set (repro.analysis.StaticCapture), run_rounds TRACES the
+        # round program instead of executing it: the ledger/template are
+        # recorded exactly as in a real solve, the jaxpr is stored on
+        # the capture, and the initial state is returned unchanged
+        self._capture = None
 
     # ------------------------------------------------------------------
     # topology
@@ -256,6 +289,20 @@ class ProtocolRuntime:
     # ------------------------------------------------------------------
     # data-axis primitives — within-task sharding (DESIGN.md §8)
     # ------------------------------------------------------------------
+    @staticmethod
+    def _norm_collective(x: jnp.ndarray) -> jnp.ndarray:
+        """Normalize a reduction result's aval to the mesh collective's
+        semantics.  ``lax.psum``/``pmean`` under ``shard_map`` STRIP the
+        weak-type flag from their output, while the ``data_shards == 1``
+        identity branch — and the sim emulation's vmapped collectives —
+        PRESERVE it.  Left alone, the same solver carries subtly
+        different avals per layout (a weak-typed scalar statistic drifts
+        a scan carry and silently retraces the eager driver), which
+        ``test_runtime_parity`` used to paper over with float tolerance.
+        A same-dtype ``convert_element_type`` is a no-op on values but
+        pins the aval, making every layout agree by construction."""
+        return jax.lax.convert_element_type(x, jnp.asarray(x).dtype)
+
     def psum_data(self, x: jnp.ndarray, note: str = "",
                   repeats: int = 1) -> jnp.ndarray:
         """Sum a per-shard partial statistic over the data axis.
@@ -263,7 +310,9 @@ class ProtocolRuntime:
         The reduction that reassembles a per-task quantity whose shards
         were each computed over ``n / data_shards`` rows with a GLOBAL
         ``1/n`` normalization (e.g. partial Gram matrices
-        ``X_s^T X_s / n``).  Identity when ``data_shards == 1``.
+        ``X_s^T X_s / n``).  Identity when ``data_shards == 1`` (up to
+        aval normalization — every layout returns the same, non-weak
+        dtype, :meth:`_norm_collective`).
 
         Not charged to the CommLog (the ledger stays in tasks-axis
         Table-1 units); the per-chip payload ``x.size * repeats`` floats
@@ -273,10 +322,10 @@ class ProtocolRuntime:
         so the measurement stays honest despite single-trace recording.
         """
         if self.data_shards == 1:
-            return x
+            return self._norm_collective(x)
         if self._count_data_wire:
-            self._charge_data(x.size * repeats)
-        return self._psum_data(x)
+            self._charge_data("psum", x.size, repeats, note)
+        return self._norm_collective(self._psum_data(x))
 
     def pmean_data(self, x: jnp.ndarray, note: str = "",
                    repeats: int = 1) -> jnp.ndarray:
@@ -285,13 +334,14 @@ class ProtocolRuntime:
         The reduction for quantities normalized by the LOCAL row count
         (e.g. ``lm.task_grad``'s ``(1/n_local) X_s^T l'``): the mean of
         the per-shard values equals the full-data statistic.  Identity
-        when ``data_shards == 1``; accounting as :meth:`psum_data`.
+        when ``data_shards == 1``; accounting and aval normalization as
+        :meth:`psum_data`.
         """
         if self.data_shards == 1:
-            return x
+            return self._norm_collective(x)
         if self._count_data_wire:
-            self._charge_data(x.size * repeats)
-        return self._pmean_data(x)
+            self._charge_data("psum", x.size, repeats, note)
+        return self._norm_collective(self._pmean_data(x))
 
     def gather_samples(self, x: jnp.ndarray, axis: int = 1,
                        note: str = "") -> jnp.ndarray:
@@ -308,7 +358,7 @@ class ProtocolRuntime:
         if self.data_shards == 1:
             return x
         if self._count_data_wire:
-            self._charge_data(x.size)
+            self._charge_data("all_gather", x.size, 1, note)
         return self._gather_samples(x, axis)
 
     # Whether this backend moves real bytes over the data axis (mesh
@@ -340,21 +390,26 @@ class ProtocolRuntime:
         return vectors, int(payload[-1])
 
     def _charge(self, direction: str, vectors: int, dim: int, note: str,
-                wire: int) -> None:
+                wire: int, kind: str = "none", payload: int = 0) -> None:
         if self._recording:
             self._template.append(
-                _WireEvent(direction, int(vectors), int(dim), note, int(wire)))
+                _WireEvent(direction, int(vectors), int(dim), note,
+                           int(wire), kind, int(payload)))
 
-    def _charge_data(self, floats: int) -> None:
+    def _charge_data(self, kind: str, floats: int, repeats: int = 1,
+                     note: str = "") -> None:
         """Measure data-axis collective payload (never enters the
-        CommLog).  While the round body is being traced the floats join
+        CommLog).  While the round body is being traced the event joins
         the per-round template (replayed once per executed round);
-        outside a trace — the one-time Gram-cache setup — they
-        accumulate directly."""
+        outside a trace — the one-time Gram-cache setup — the floats
+        accumulate directly (and into ``setup_data_floats`` so the
+        static analyzer can reconcile setup separately from rounds)."""
         if self._recording:
-            self._data_template.append(int(floats))
+            self._data_template.append(
+                _DataEvent(kind, int(floats), int(repeats), note))
         else:
-            self.data_collective_floats_per_chip += int(floats)
+            self.data_collective_floats_per_chip += int(floats) * int(repeats)
+            self.setup_data_floats += int(floats) * int(repeats)
 
     def _replay_round(self, count_round: bool) -> None:
         if count_round:
@@ -362,7 +417,8 @@ class ProtocolRuntime:
         for ev in self._template:
             self.comm.send(ev.direction, ev.vectors, ev.dim, ev.note)
             self.collective_floats_per_chip += ev.wire_floats
-        self.data_collective_floats_per_chip += sum(self._data_template)
+        self.data_collective_floats_per_chip += sum(
+            ev.floats * ev.repeats for ev in self._data_template)
 
     # ------------------------------------------------------------------
     # drivers
@@ -534,6 +590,9 @@ class ProtocolRuntime:
         self._data_leaves = None if data_leaves is None else \
             tuple(data_leaves)
         self._recording = True
+        if self._capture is not None:
+            return self._capture_rounds(rounds, body, state, tuple(sharded),
+                                        record, count_rounds, scan)
         if scan:
             fn = self._compile_scan(body, state, tuple(sharded), rounds,
                                     record)
@@ -554,6 +613,39 @@ class ProtocolRuntime:
             self._replay_round(count_rounds)
             if record is not None and t in snap_at:
                 record.sink.record(t + 1, state[record.key])
+        return state
+
+    def _capture_rounds(self, rounds: int, body: RoundBody, state,
+                        sharded, record, count_rounds: bool, scan: bool):
+        """The static-analysis driver (``repro.analysis``): trace the
+        EXACT program the real driver would execute — same jit / vmap /
+        shard_map wrapping, same donation decision — but never run it.
+
+        Tracing executes the round body abstractly, so the primitives
+        record the same per-round communication template a real solve
+        records, and the ledger below is replayed from it identically;
+        the traced ClosedJaxpr (plus the template and the abstract
+        output state) is handed to ``self._capture`` for the
+        collective-accounting verifier and the sharding/donation lints.
+        The initial state is returned unchanged — zero rounds execute —
+        and snapshot sinks receive it as a placeholder so solver
+        post-processing stays oblivious.
+        """
+        if scan:
+            fn = self._compile_scan(body, state, sharded, rounds, record)
+        else:
+            step = self._compile(body, state, sharded)
+            fn = lambda s: step(0, s)                         # noqa: E731
+        closed, out_shapes = jax.make_jaxpr(fn, return_shape=True)(state)
+        self._recording = False                  # template recorded above
+        for _ in range(rounds):
+            self._replay_round(count_rounds)
+        if record is not None:
+            for t in record.snap_rounds(rounds):
+                record.sink.record(t + 1, state[record.key])
+        self._capture.absorb(self, closed, state,
+                             out_shapes[0] if scan else out_shapes,
+                             rounds=rounds, scan=scan)
         return state
 
     def one_shot(self, body: RoundBody, state: Dict[str, jnp.ndarray],

@@ -150,17 +150,23 @@ class MeshRuntime(ProtocolRuntime):
 
     def gather_columns(self, x, note: str = ""):
         # x: (d, L) local columns -> (d, m); each machine ships 1 d-vector.
-        self._charge("worker->master", 1, x.shape[0], note, wire=x.size)
+        self._charge("worker->master", 1, x.shape[0], note, wire=x.size,
+                     kind="all_gather", payload=x.size)
         return jax.lax.all_gather(x, self.axis, axis=x.ndim - 1, tiled=True)
 
     def gather_tasks(self, x, note: str = ""):
         vectors, dim = self._payload_vectors(x)
-        self._charge("worker->master", vectors, dim, note, wire=x.size)
+        self._charge("worker->master", vectors, dim, note, wire=x.size,
+                     kind="all_gather", payload=x.size)
         return jax.lax.all_gather(x, self.axis, axis=0, tiled=True)
 
     def sum_tasks(self, x, note: str = ""):
         vectors, dim = self._payload_vectors(x)
-        self._charge("worker->master", vectors, dim, note, wire=x.size)
+        # charged wire: every simulated machine ships its payload; the
+        # physical psum operand is the chip's LOCAL pre-reduction, L
+        # times smaller — the analyzer matches the latter in the jaxpr
+        self._charge("worker->master", vectors, dim, note, wire=x.size,
+                     kind="psum", payload=x.size // x.shape[0])
         return jax.lax.psum(jnp.sum(x, axis=0), self.axis)
 
     # -- data axis: real collectives over the mesh's "data" axis -------
@@ -193,8 +199,9 @@ class MeshRuntime(ProtocolRuntime):
                 # run_rounds may already be recording its per-round
                 # template when the lazy data build fires.
                 p = self.prob.p
-                self.data_collective_floats_per_chip += \
-                    self.local_tasks * (p * p + p)
+                setup = self.local_tasks * (p * p + p)
+                self.data_collective_floats_per_chip += setup
+                self.setup_data_floats += setup
             data["gram_A"], data["gram_b"] = self._gram2d
         return data
 

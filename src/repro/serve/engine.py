@@ -9,7 +9,7 @@ steps. The jit'd hot path is one fused decode step for the whole batch.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional
+from typing import List
 
 import jax
 import jax.numpy as jnp

@@ -5,7 +5,6 @@ import time
 from typing import Callable, Dict, Iterable, Optional
 
 import jax
-import numpy as np
 
 from .checkpoint import save_checkpoint
 

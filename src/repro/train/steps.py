@@ -12,7 +12,7 @@ serve_step(params, cache, token, pos) -> (logits, cache)
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

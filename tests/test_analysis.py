@@ -1,0 +1,339 @@
+"""The static verifier (repro.analysis): positive matrix, negative
+rejections, walker semantics, lints, and the verify="static" API.
+
+The acceptance bar for the analyzer is asymmetric: the positive
+direction (all 11 solvers x 3 layouts x 2 drivers verify) runs as a
+subprocess matrix with 4 forced host devices, while the negative
+direction — the reason the subsystem exists — is exercised in-process
+on 1-device meshes: a solver that moves a collective it never charged,
+or charges one it never moves, must be REJECTED with a finding naming
+the equation and the axis.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro
+from repro.analysis import (AnalysisError, StaticCapture, build_problem,
+                            check_trace, lint_file, trace_solver, walk)
+from repro.analysis.shard_lint import drift_lint
+from repro.runtime.mesh import MeshRuntime, task_mesh
+from repro.runtime.sim import SimRuntime
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+# ---------------------------------------------------------------------------
+# helpers: capture a hand-written round body on a 1-device mesh
+# ---------------------------------------------------------------------------
+def _capture_body(body, rounds=2, scan=True, sharded=(), method="custom"):
+    prob, _ = build_problem()
+    rt = MeshRuntime(prob, mesh=task_mesh(1))
+    cap = StaticCapture()
+    rt._capture = cap
+    state = {"W": jnp.zeros((prob.p, prob.m), prob.Xs.dtype)}
+    out = rt.run_rounds(rounds, lambda k, s, d: body(rt, k, s, d), state,
+                        sharded=sharded, scan=scan,
+                        data_leaves=("gram_A", "gram_b"))
+    cap.trace.method = method
+    cap.trace.layout = "mesh"
+    return cap.trace, state, out
+
+
+# ---------------------------------------------------------------------------
+# the acceptance-criterion negative tests: mis-charged solvers rejected
+# ---------------------------------------------------------------------------
+def test_uncharged_collective_rejected():
+    """A body that all-gathers WITHOUT charging the ledger: the verifier
+    must name the equation (all_gather) and the axis (tasks)."""
+    def body(rt, k, state, data):
+        cols = rt.local_slice(state["W"])
+        # raw collective, bypassing rt.gather_columns -> never charged
+        W = jax.lax.all_gather(cols, rt.axis, axis=1, tiled=True)
+        return {"W": rt.broadcast(W, "untracked gather")}
+
+    trace, _, _ = _capture_body(body, method="rogue_uncharged")
+    rep = check_trace(trace)
+    hits = [f for f in rep.findings if f.code == "COMM001"]
+    assert hits, rep.findings
+    msg = str(hits[0])
+    assert "all_gather" in msg          # names the equation
+    assert "'tasks'" in msg             # names the axis
+    assert "/all_gather" in msg         # jaxpr path of the equation
+
+
+def test_phantom_charge_rejected():
+    """A body that charges a psum it never performs: COMM002 with the
+    claimed primitive and axis in the message."""
+    def body(rt, k, state, data):
+        # the charge claims a psum collective; the body never issues one
+        rt._charge("worker->master", 1, rt.prob.p, "phantom", wire=0,
+                   kind="psum", payload=rt.prob.p)
+        return {"W": state["W"] + 1.0}
+
+    trace, _, _ = _capture_body(body, method="rogue_phantom")
+    rep = check_trace(trace)
+    hits = [f for f in rep.findings if f.code == "COMM002"]
+    assert hits, rep.findings
+    msg = str(hits[0])
+    assert "psum" in msg and "'tasks'" in msg
+
+
+def test_wrong_multiplicity_rejected():
+    """Charging once but gathering inside a fori_loop: the scan-length
+    multiplier in the walker must expose the count mismatch."""
+    def body(rt, k, state, data):
+        W = state["W"]
+
+        def inner(_, W):
+            cols = rt.local_slice(W)
+            return jax.lax.all_gather(cols, rt.axis, axis=1, tiled=True)
+
+        W = jax.lax.fori_loop(0, 3, inner, W)
+        # one charge for three physical gathers
+        rt._charge("worker->master", 1, rt.prob.p, "undercounted", wire=0,
+                   kind="all_gather",
+                   payload=rt.prob.p * rt.local_tasks)
+        return {"W": W}
+
+    trace, _, _ = _capture_body(body, method="rogue_multiplicity")
+    rep = check_trace(trace)
+    assert any(f.code == "COMM001" for f in rep.findings), rep.findings
+
+
+def test_collective_under_while_rejected():
+    """Collectives with data-dependent trip counts are unverifiable."""
+    def body(rt, k, state, data):
+        def cond(carry):
+            W, i = carry
+            return i < 2
+
+        def step(carry):
+            W, i = carry
+            cols = rt.local_slice(W)
+            W = jax.lax.all_gather(cols, rt.axis, axis=1, tiled=True)
+            return W, i + 1
+
+        W, _ = jax.lax.while_loop(cond, step, (state["W"], 0))
+        return {"W": W}
+
+    trace, _, _ = _capture_body(body, method="rogue_while")
+    rep = check_trace(trace)
+    hits = [f for f in rep.findings if f.code == "COMM003"]
+    assert hits, rep.findings
+    assert "while" in str(hits[0])
+
+
+# ---------------------------------------------------------------------------
+# capture semantics: zero rounds executed, ledger identical to a real run
+# ---------------------------------------------------------------------------
+def test_capture_executes_zero_rounds():
+    prob, _ = build_problem()
+    trace = trace_solver("dgsp", "sim", "scan", prob=prob)
+    # the ledger replays template x rounds exactly as a real solve...
+    real = repro.solve(prob, method="dgsp", rounds=3, sv_iters=8)
+    assert trace.comm.rounds == real.comm.rounds
+    assert [(e.round, e.direction, e.vectors, e.dim)
+            for e in trace.comm.events] == \
+           [(e.round, e.direction, e.vectors, e.dim)
+            for e in real.comm.events]
+
+
+def test_capture_returns_initial_state():
+    def body(rt, k, state, data):
+        cols = rt.local_slice(state["W"]) + 1.0
+        return {"W": rt.gather_columns(cols, "w")}
+
+    _, state0, out = _capture_body(body, rounds=5, scan=True)
+    # 5 rounds would add 5.0; the capture driver must never execute one
+    assert jnp.array_equal(out["W"], state0["W"])
+
+
+@pytest.mark.parametrize("driver", ["scan", "eager"])
+def test_sim_and_mesh1_verify_inprocess(driver):
+    """One cheap positive cell per driver without forcing devices (the
+    full 3-layout matrix runs in the subprocess test below)."""
+    prob, extras = build_problem()
+    for method in ("proxgd", "dgsp"):
+        rep = check_trace(trace_solver(method, "sim", driver, prob=prob,
+                                       extras=extras))
+        assert rep.ok, rep.findings
+
+
+def test_verify_static_api():
+    prob, _ = build_problem()
+    res = repro.solve(prob, method="proxgd", rounds=2, init="zeros",
+                      verify="static")
+    assert res.extras["static_verify"] == "ok"
+    with pytest.raises(ValueError):
+        repro.solve(prob, method="proxgd", rounds=2, verify="dynamic")
+
+
+def test_verify_static_rejects_rogue_runtime(monkeypatch):
+    """End-to-end: a runtime whose gather stops charging fails
+    verify='static' with an AnalysisError naming the equation."""
+    prob, _ = build_problem()
+    real_gather = SimRuntime.gather_columns
+    # sim charges no collective kind; make it CLAIM one falsely instead
+    def lying_gather(self, x, note=""):
+        self._charge("worker->master", 1, x.shape[0], note, wire=x.size,
+                     kind="all_gather", payload=x.size)
+        return x
+    monkeypatch.setattr(SimRuntime, "gather_columns", lying_gather)
+    with pytest.raises(AnalysisError) as ei:
+        repro.solve(prob, method="proxgd", rounds=2, init="zeros",
+                    verify="static")
+    assert "all_gather" in str(ei.value) and "'tasks'" in str(ei.value)
+    monkeypatch.setattr(SimRuntime, "gather_columns", real_gather)
+
+
+# ---------------------------------------------------------------------------
+# walker unit semantics
+# ---------------------------------------------------------------------------
+def test_walker_scan_multiplier_and_vmap_filter():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.runtime.mesh import _NO_REP_CHECK, shard_map
+
+    mesh = task_mesh(1)
+
+    def prog(x):
+        def body(i, x):
+            return jax.lax.psum(x, "tasks")
+        return jax.lax.fori_loop(0, 7, body, x)
+
+    fn = shard_map(prog, mesh=mesh, in_specs=P(), out_specs=P(),
+                   **_NO_REP_CHECK)
+    closed = jax.make_jaxpr(fn)(jnp.ones((4,)))
+    res = walk(closed)
+    assert len(res.calls) == 1
+    call = res.calls[0]
+    assert call.primitive == "psum" and call.axes == ("tasks",)
+    assert call.mult == 7 and call.payload == 4
+
+    # vmap-emulated axes are positional -> filtered, no named calls
+    def vprog(x):
+        return jax.lax.psum(x, "data")
+    closed_v = jax.make_jaxpr(
+        jax.vmap(vprog, axis_name="data"))(jnp.ones((2, 3)))
+    assert walk(closed_v).calls == []
+
+
+# ---------------------------------------------------------------------------
+# satellite: D=1 identity collectives are layout-invariant (weak type)
+# ---------------------------------------------------------------------------
+def test_identity_collectives_strip_weak_type():
+    prob, _ = build_problem()
+    weak = jnp.asarray(1.0)             # python-scalar lineage: weak
+    assert weak.weak_type
+    # D == 1 identity branch, sim and mesh alike (the bug: identities
+    # used to PRESERVE weak type while real psum/pmean strip it)
+    for rt in (SimRuntime(prob), MeshRuntime(prob, mesh=task_mesh(1))):
+        for op in (rt.psum_data, rt.pmean_data):
+            out = op(weak)
+            assert not out.weak_type, (rt.name, op)
+            assert out.dtype == weak.dtype
+    # the sim emulation's vmapped psum (D == 2) agrees: same non-weak
+    # aval as every other branch, so the carry is layout-invariant
+    rt2 = SimRuntime(prob, data_shards=2)
+    for op in (rt2.psum_data, rt2.pmean_data):
+        emulated = jax.vmap(lambda x: op(x), in_axes=None, out_axes=None,
+                            axis_name="data", axis_size=2)
+        out = jax.eval_shape(emulated, weak)
+        assert not out.weak_type, op
+        assert out.dtype == weak.dtype
+
+
+def test_drift_lint_catches_weak_type_promotion():
+    in_shapes = jax.eval_shape(lambda: {"s": jnp.zeros(())})
+    out_shapes = jax.eval_shape(lambda: {"s": jnp.asarray(0.0)})
+    findings = drift_lint(in_shapes, out_shapes, "unit")
+    assert findings and findings[0].code == "SHRD003"
+    assert "'s'" in str(findings[0]) or "s" in str(findings[0])
+    assert drift_lint(in_shapes, in_shapes, "unit") == []
+
+
+# ---------------------------------------------------------------------------
+# AST repo lints
+# ---------------------------------------------------------------------------
+def _lint_src(tmp_path, rel, src):
+    f = tmp_path / "f.py"
+    f.write_text(textwrap.dedent(src))
+    return lint_file(f, rel)
+
+
+def test_lint_svd_outside_spectral(tmp_path):
+    src = """
+        import jax.numpy as jnp
+        def f(M):
+            return jnp.linalg.svd(M)
+    """
+    hits = _lint_src(tmp_path, "src/repro/core/methods/foo.py", src)
+    assert [f.code for f in hits] == ["LINT101"]
+    assert _lint_src(tmp_path, "src/repro/core/spectral.py", src) == []
+
+
+def test_lint_hot_path_item_and_callback(tmp_path):
+    src = """
+        import jax
+        def f(x):
+            jax.debug.callback(print, x)
+            return x.sum().item()
+    """
+    hits = _lint_src(tmp_path, "src/repro/core/worker_ops.py", src)
+    assert sorted(f.code for f in hits) == ["LINT102", "LINT102"]
+    assert _lint_src(tmp_path, "src/repro/core/methods/foo.py", src) == []
+
+
+def test_lint_serve_state_mutation(tmp_path):
+    src = """
+        def swap(self):
+            st = _ServeState(model=1)
+            st.C = None
+            object.__setattr__(st, "U", 0)
+            return st
+    """
+    hits = _lint_src(tmp_path, "src/repro/serve/mtl.py", src)
+    assert sorted(f.code for f in hits) == ["LINT103", "LINT103"]
+    ok = """
+        def swap(self):
+            st = _ServeState(model=1)
+            self._state = st
+            return st
+    """
+    assert _lint_src(tmp_path, "src/repro/serve/mtl.py", ok) == []
+
+
+def test_repo_lints_clean():
+    from repro.analysis import lint_repo
+    assert lint_repo(REPO) == []
+
+
+# ---------------------------------------------------------------------------
+# the positive matrix: all 11 solvers x 3 layouts x 2 drivers (subprocess
+# with 4 forced host devices; the CI static-verify job runs the same CLI)
+# ---------------------------------------------------------------------------
+def test_full_matrix_subprocess(tmp_path):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count=4").strip()
+    env["PYTHONPATH"] = str(REPO / "src")
+    out_json = tmp_path / "report.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis",
+         "--json", str(out_json)],
+        env=env, capture_output=True, text=True, timeout=1800)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "PASS" in proc.stdout
+    import json
+    report = json.loads(out_json.read_text())
+    assert report["ok"]
+    # 11 solvers x 3 layouts x 2 drivers
+    assert len(report["cases"]) == 66
+    assert all(c["ok"] for c in report["cases"])

@@ -1,0 +1,166 @@
+"""Direct unit coverage for CommLog template replay with ``repeats=``
+inside nested ``fori_loop``s (the PR 3 accounting path — previously
+covered only end-to-end by the parity matrix).
+
+The runtime records each data-axis collective ONCE (the round body is
+traced a single time) and replays ``floats x repeats`` per executed
+round; ``repeats`` is the caller's claim about how many times ``lax``
+control flow runs the call.  Two directions are tested:
+
+* dynamic — a counting Sim runtime replays nested-loop repeats into
+  ``data_collective_floats_per_chip`` identically under the scan and
+  eager drivers, template x rounds;
+* static — on a real 2-device ``(tasks, data)`` mesh the analyzer
+  cross-checks the SAME claim against the traced jaxpr's loop-length
+  multipliers: the true worker_ops Newton path (pmean repeats=iters
+  inside ``fori_loop(iters)``) verifies, and a deliberately wrong
+  ``repeats=`` is rejected naming the psum equation and the data axis.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import build_problem
+from repro.runtime.sim import SimRuntime
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+OUTER, INNER, ROUNDS = 2, 3, 4
+
+
+class CountingSim(SimRuntime):
+    """Sim backend that measures data-axis payloads like the mesh does
+    (the emulation's vmapped collectives move no bytes, so plain Sim
+    keeps the counter at 0 — here we want the replay arithmetic)."""
+    _count_data_wire = True
+
+
+def _nested_body(rt):
+    def body(k, state, data):
+        W = state["W"]
+
+        def outer(i, W):
+            def inner(j, W):
+                g = rt.pmean_data(W, "nested stat",
+                                  repeats=OUTER * INNER)
+                return W + 0.0 * g
+            return jax.lax.fori_loop(0, INNER, inner, W)
+
+        W = jax.lax.fori_loop(0, OUTER, outer, W)
+        h = rt.psum_data(jnp.sum(W), "flat stat")        # repeats=1
+        return {"W": W + 0.0 * h}
+    return body
+
+
+@pytest.mark.parametrize("scan", [True, False])
+def test_nested_fori_repeats_replay(scan):
+    prob, _ = build_problem()
+    rt = CountingSim(prob, data_shards=2)
+    W0 = jnp.zeros((prob.p, prob.m), prob.Xs.dtype)
+    rt.run_rounds(ROUNDS, _nested_body(rt), {"W": W0}, scan=scan,
+                  data_leaves=("gram_A", "gram_b"))
+    # template: one pmean of W.size floats x (OUTER*INNER) + one scalar
+    per_round = W0.size * OUTER * INNER + 1
+    assert rt.data_collective_floats_per_chip == per_round * ROUNDS
+    # the template itself carries the claim, not its expansion
+    assert [(ev.floats, ev.repeats) for ev in rt._data_template] == \
+        [(W0.size, OUTER * INNER), (1, 1)]
+
+
+def test_scan_eager_replay_identical():
+    prob, _ = build_problem()
+    counts = []
+    for scan in (True, False):
+        rt = CountingSim(prob, data_shards=2)
+        W0 = jnp.zeros((prob.p, prob.m), prob.Xs.dtype)
+        rt.run_rounds(ROUNDS, _nested_body(rt), {"W": W0}, scan=scan,
+                      data_leaves=("gram_A", "gram_b"))
+        counts.append(rt.data_collective_floats_per_chip)
+    assert counts[0] == counts[1]
+
+
+# ---------------------------------------------------------------------------
+# static cross-check on a real 2-device (tasks, data) mesh
+# ---------------------------------------------------------------------------
+SCRIPT = textwrap.dedent("""
+    import jax, jax.numpy as jnp
+    assert len(jax.devices()) == 2, jax.devices()
+    from repro.analysis import StaticCapture, build_problem, check_trace
+    from repro.core.methods import MTLProblem
+    from repro.data.synthetic import SimSpec, generate
+    from repro.runtime.mesh import MeshRuntime, task_data_mesh
+
+    OUTER, INNER, ROUNDS = {outer}, {inner}, {rounds}
+
+    def capture(body, prob):
+        rt = MeshRuntime(prob, mesh=task_data_mesh(2, 2), data_shards=2)
+        cap = StaticCapture()
+        rt._capture = cap
+        W0 = jnp.zeros((prob.p, prob.m), prob.Xs.dtype)
+        rt.run_rounds(ROUNDS, lambda k, s, d: body(rt, k, s, d),
+                      {{"W": W0}}, scan=True,
+                      data_leaves=("gram_A", "gram_b"))
+        cap.trace.method = "nested"
+        cap.trace.layout = "mesh2d"
+        return cap.trace
+
+    prob, _ = build_problem()
+
+    def nested(rt, k, state, data, claimed=OUTER * INNER):
+        W = state["W"]
+        def outer(i, W):
+            def inner(j, W):
+                g = rt.pmean_data(W, "nested stat", repeats=claimed)
+                return W + 0.0 * g
+            return jax.lax.fori_loop(0, INNER, inner, W)
+        W = jax.lax.fori_loop(0, OUTER, outer, W)
+        return {{"W": W}}
+
+    rep = check_trace(capture(nested, prob))
+    print("HONEST", "OK" if rep.ok else "FAIL", rep.findings)
+
+    def lying(rt, k, state, data):
+        return nested(rt, k, state, data, claimed=OUTER * INNER + 1)
+
+    rep2 = check_trace(capture(lying, prob))
+    bad = [f for f in rep2.findings if f.code in ("COMM001", "COMM002")]
+    named = bad and "psum" in str(bad[0]) and "'data'" in str(bad[0])
+    print("LYING", "REJECTED" if (bad and named) else "MISSED",
+          [str(f) for f in rep2.findings])
+
+    # the real PR 3 path: raw-data logistic ERM, pmean repeats=iters
+    # inside fori_loop(iters) in worker_ops._newton_cols
+    spec = SimSpec(p=6, m=4, r=2, n=8, task="classification")
+    Xs, ys, Wstar, _ = generate(jax.random.PRNGKey(1), spec)
+    lprob = MTLProblem.make(Xs, ys, "logistic", gram=False, r=2)
+    from repro import api
+    rt = MeshRuntime(lprob, mesh=task_data_mesh(2, 2), data_shards=2)
+    cap = StaticCapture()
+    rt._capture = cap
+    api.solve(lprob, method="local", runtime=rt, scan=True, l2=1e-3)
+    cap.trace.method = "local"
+    cap.trace.layout = "mesh2d"
+    lrep = check_trace(cap.trace)
+    print("WORKER_OPS", "OK" if lrep.ok else "FAIL",
+          [str(f) for f in lrep.findings])
+""").format(outer=OUTER, inner=INNER, rounds=ROUNDS)
+
+
+def test_repeats_static_crosscheck_mesh2d():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count=2").strip()
+    env["PYTHONPATH"] = str(REPO / "src")
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    out = proc.stdout
+    assert proc.returncode == 0, out + proc.stderr
+    assert "HONEST OK" in out, out
+    assert "LYING REJECTED" in out, out
+    assert "WORKER_OPS OK" in out, out

@@ -1,7 +1,6 @@
 """System-level tests: end-to-end training (loss goes down, checkpoints
 round-trip), serving engine behaviour, MTLHead on a real backbone, and
 the launcher spec machinery on a 1-device mesh."""
-import os
 
 import jax
 import jax.numpy as jnp
