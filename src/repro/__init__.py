@@ -10,13 +10,17 @@ Sub-packages are imported lazily so ``import repro`` stays cheap.
 """
 import importlib
 
-__all__ = ["solve", "core", "runtime", "data", "serve"]
+__all__ = ["solve", "resume", "core", "runtime", "data", "serve", "faults"]
 
 
 def __getattr__(name):
     if name == "solve":
         from .api import solve
         return solve
-    if name in ("core", "runtime", "data", "api", "serve"):
+    if name == "resume":
+        from .api import resume
+        return resume
+    if name in ("core", "runtime", "data", "api", "serve", "faults",
+                "train"):
         return importlib.import_module("." + name, __name__)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

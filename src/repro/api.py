@@ -24,7 +24,10 @@ def solve(prob, method: str = "dgsp", backend: str = "sim", *,
           data_axis: str = "data", rounds: Optional[int] = None,
           scan: Optional[bool] = None, sv_engine: Optional[str] = None,
           runtime: Optional[ProtocolRuntime] = None,
-          verify: Optional[str] = None, **hp):
+          verify: Optional[str] = None,
+          checkpoint_every: Optional[int] = None,
+          ckpt_dir: Optional[str] = None,
+          ckpt_keep: Optional[int] = 3, **hp):
     """Run one registered solver on one backend.
 
     Parameters
@@ -71,6 +74,19 @@ def solve(prob, method: str = "dgsp", backend: str = "sim", *,
         ``sv_rank=`` hyper-parameter overrides the carried rank hint
         (default: the problem's assumed rank bound r).
     runtime: pass an explicit ProtocolRuntime instead of backend/mesh.
+    checkpoint_every / ckpt_dir / ckpt_keep: preemption-safe solves
+        (DESIGN.md §12).  With ``ckpt_dir`` set, the round loop runs in
+        ``checkpoint_every``-round segments (default
+        ``runtime.recovery.DEFAULT_SEGMENT``) whose full carry — solver
+        state, spectral-engine carry, snapshot history, ledger cursor +
+        comm-template hash — persists through the atomic content-hashed
+        ``train/checkpoint`` store after every segment, keeping the last
+        ``ckpt_keep`` segments (None = all).  A killed solve restarts
+        via ``repro.resume(ckpt_dir)`` — or by re-issuing the SAME
+        ``solve`` call, which picks up the newest intact segment instead
+        of starting over — and finishes with ``W``, ledger, and measured
+        collective floats bit-identical to an uninterrupted run.
+        ``result.extras["checkpoint"]`` reports the segment bookkeeping.
     verify: ``"static"`` statically verifies THIS solve configuration
         before running it (``repro.analysis``, DESIGN.md §11): the
         round program is traced — zero rounds executed — its jaxpr's
@@ -129,6 +145,23 @@ def solve(prob, method: str = "dgsp", backend: str = "sim", *,
         hp["scan"] = scan
     if sv_engine is not None:
         hp["sv_engine"] = sv_engine
+    ckpt = None
+    if ckpt_dir is not None or checkpoint_every is not None:
+        if ckpt_dir is None:
+            raise ValueError("checkpoint_every needs ckpt_dir= (where "
+                             "the solve store lives)")
+        from .runtime.recovery import (DEFAULT_SEGMENT, SolveCheckpointer,
+                                       write_store)
+        every = DEFAULT_SEGMENT if checkpoint_every is None \
+            else checkpoint_every
+        config = {"method": method, "backend": backend, "axis": axis,
+                  "data_axis": data_axis, "data_shards": data_shards,
+                  "checkpoint_every": every, "ckpt_keep": ckpt_keep,
+                  "hp": hp}
+        write_store(ckpt_dir, prob, config)
+        ckpt = SolveCheckpointer(ckpt_dir, every=every, keep=ckpt_keep)
+        ckpt.load_resume()      # no-op on a fresh store
+        runtime._ckpt = ckpt
     res = get_solver(method)(prob, runtime=runtime, **hp)
     # stamp the trained loss so res.factorize() builds the serving
     # artifact with the right prediction/onboarding math by default
@@ -141,4 +174,18 @@ def solve(prob, method: str = "dgsp", backend: str = "sim", *,
         runtime.data_collective_floats_per_chip
     if verify is not None:
         res.extras["static_verify"] = "ok"
+    if ckpt is not None:
+        res.extras["checkpoint"] = dict(ckpt.info)
     return res
+
+
+def resume(ckpt_dir: str, *, mesh=None):
+    """Restart a checkpointed solve from its store (DESIGN.md §12).
+
+    The one-argument recovery front door: rebuilds the problem + solve
+    configuration from the store's manifest, restores the newest intact
+    segment and finishes the solve — see
+    :func:`repro.runtime.recovery.resume`.
+    """
+    from .runtime.recovery import resume as _resume
+    return _resume(ckpt_dir, mesh=mesh)

@@ -1,0 +1,448 @@
+"""Deterministic fault injection for the preemption-recovery path.
+
+Recovery code that is never exercised is decoration.  This module makes
+killing a solve a REPRODUCIBLE experiment: a seeded :class:`FaultPlan`
+arms the ``train/checkpoint`` fault hook inside a subprocess solve, the
+harness (:func:`run_case`) kills/corrupts the store exactly as planned,
+resumes via ``repro.resume``, and bit-compares the recovered result
+against an uninterrupted baseline run of the same solve.
+
+Fault kinds (the preemption taxonomy of DESIGN.md §12):
+
+* ``sigkill``        — SIGKILL mid-solve, right after the ``after``-th
+                       segment checkpoint lands (the clean preemption).
+* ``crash_rename``   — SIGKILL between the checkpoint's npz write and
+                       its atomic rename: a ``*.tmp`` orphan, no
+                       truncated ``step_*.npz`` ever becomes visible.
+* ``corrupt``        — the newest checkpoint's bytes are flipped after
+                       the kill (seeded); recovery must fall back to
+                       the previous intact step.
+* ``stale_manifest`` — the newest checkpoint vanishes while the store
+                       manifest still points at it; recovery must roll
+                       back to what verifies on disk.
+
+Harness entry points::
+
+    python -m repro.faults report --out RECOVERY_report.json   # all kinds
+    python -m repro.faults multiprocess --out MP_report.json   # 2-proc kill
+    repro.faults.run_case("sigkill", backend="mesh", devices=4)
+
+Every case runs the solver in subprocesses (baseline / faulted /
+resumed) so the kill is a real process death, not an exception.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import signal
+import socket
+import subprocess
+import sys
+import tempfile
+import time
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+KINDS = ("sigkill", "crash_rename", "corrupt", "stale_manifest")
+
+_PLAN_ENV = "REPRO_FAULT_PLAN"
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """One planned process death, deterministic given the plan."""
+    kind: str                 # one of KINDS
+    after: int = 2            # die on the after-th firing of the event
+    at_event: str = ""        # override; default derived from kind
+    seed: int = 0             # corruption RNG seed (corrupt kind)
+
+    @property
+    def event(self) -> str:
+        if self.at_event:
+            return self.at_event
+        # crash_rename dies INSIDE the checkpoint write (between npz
+        # write and rename); every other kind dies after a durable save
+        return "pre_rename" if self.kind == "crash_rename" \
+            else "segment_saved"
+
+    def to_env(self) -> str:
+        return json.dumps(dataclasses.asdict(self))
+
+
+def arm(plan: FaultPlan) -> None:
+    """Install the plan on this process's checkpoint fault hook."""
+    if plan.kind not in KINDS:
+        raise ValueError(f"unknown fault kind {plan.kind!r}; have {KINDS}")
+    from .train import checkpoint as ck
+    count = {"n": 0}
+
+    def hook(event: str, **info) -> None:
+        if event != plan.event:
+            return
+        count["n"] += 1
+        if count["n"] == plan.after:
+            # a real preemption, not an exception: nothing gets to
+            # clean up, flush, or finish the rename
+            os.kill(os.getpid(), signal.SIGKILL)
+
+    ck._fault_hook = hook
+
+
+def arm_from_env(env_var: str = _PLAN_ENV) -> Optional[FaultPlan]:
+    raw = os.environ.get(env_var)
+    if not raw:
+        return None
+    plan = FaultPlan(**json.loads(raw))
+    arm(plan)
+    return plan
+
+
+def corrupt_npz(path: str, seed: int = 0, mode: str = "flip") -> None:
+    """Deterministically damage a checkpoint file in place.
+
+    ``flip`` xors 16 seeded bytes in the payload region; ``truncate``
+    cuts the file to 60% — both must be caught by the store's content
+    hash / zip structure check, never silently loaded.
+    """
+    with open(path, "rb") as f:
+        blob = bytearray(f.read())
+    rng = np.random.default_rng(seed)
+    if mode == "truncate":
+        blob = blob[: max(1, int(len(blob) * 0.6))]
+    elif mode == "flip":
+        lo, hi = len(blob) // 4, 3 * len(blob) // 4
+        for i in rng.integers(lo, hi, size=16):
+            blob[int(i)] ^= 0xFF
+    else:
+        raise ValueError(f"unknown corruption mode {mode!r}")
+    with open(path, "wb") as f:
+        f.write(bytes(blob))
+
+
+def _newest_step(ckpt_dir: str) -> str:
+    from .train import checkpoint as ck
+    steps = ck.available_steps(ckpt_dir)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    return os.path.join(ckpt_dir, f"step_{steps[-1]:08d}.npz")
+
+
+# ----------------------------------------------------------------------
+# the standard tiny solve every case runs
+# ----------------------------------------------------------------------
+def demo_problem():
+    """The harness's deterministic problem (seeded synthetic data)."""
+    import jax
+    from .core.methods.base import MTLProblem
+    from .data.synthetic import SimSpec, generate
+    spec = SimSpec(p=16, m=8, r=3, n=32)
+    Xs, ys, _, _ = generate(jax.random.PRNGKey(0), spec)
+    return MTLProblem.make(Xs, ys, "squared", A=2.0, r=3)
+
+
+SOLVE_KW: Dict[str, Any] = {"method": "proxgd", "lam": 0.05, "rounds": 11,
+                            "record_every": 3}
+CHECKPOINT_EVERY = 3          # segments end at rounds 3, 6, 9, 11
+
+
+def _result_blob(res) -> Dict[str, np.ndarray]:
+    """Everything bit-identity covers, as npz-able arrays."""
+    ledger = json.dumps([[e.round, e.direction, e.vectors, e.dim, e.note]
+                         for e in res.comm.events]).encode()
+    return {
+        "W": np.asarray(res.W),
+        "iterates": np.stack([np.asarray(w) for w in res.iterates]),
+        "rounds_axis": np.asarray(res.rounds_axis, np.int64),
+        "ledger": np.frombuffer(ledger, np.uint8).copy(),
+        "floats": np.asarray(
+            [res.extras["collective_floats_per_chip"],
+             res.extras["data_collective_floats_per_chip"],
+             res.comm.rounds], np.int64),
+    }
+
+
+def blobs_equal(a, b) -> bool:
+    keys = sorted(set(a) | set(b))
+    return all(k in a and k in b
+               and np.array_equal(np.asarray(a[k]), np.asarray(b[k]))
+               for k in keys)
+
+
+# ----------------------------------------------------------------------
+# subprocess plumbing
+# ----------------------------------------------------------------------
+def _child_env(devices: int = 1,
+               plan: Optional[FaultPlan] = None) -> Dict[str, str]:
+    env = dict(os.environ)
+    src_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = src_root + os.pathsep + env.get("PYTHONPATH", "")
+    if devices > 1:
+        env["XLA_FLAGS"] = \
+            f"--xla_force_host_platform_device_count={devices}"
+    if plan is not None:
+        env[_PLAN_ENV] = plan.to_env()
+    else:
+        env.pop(_PLAN_ENV, None)
+    return env
+
+
+def _spawn(args: List[str], env: Dict[str, str],
+           timeout: float = 300.0) -> int:
+    proc = subprocess.Popen([sys.executable, "-m", "repro.faults"] + args,
+                            env=env, stdout=subprocess.PIPE,
+                            stderr=subprocess.STDOUT)
+    try:
+        out, _ = proc.communicate(timeout=timeout)
+    except subprocess.TimeoutExpired:
+        proc.kill()
+        out, _ = proc.communicate()
+        raise RuntimeError(f"faults child timed out: {args}\n"
+                           f"{out.decode(errors='replace')[-2000:]}")
+    if proc.returncode not in (0, -signal.SIGKILL, 128 + signal.SIGKILL):
+        raise RuntimeError(
+            f"faults child failed ({proc.returncode}): {args}\n"
+            f"{out.decode(errors='replace')[-2000:]}")
+    return proc.returncode
+
+
+def run_case(kind: str, backend: str = "sim", scan: bool = True,
+             data_shards: int = 1, devices: int = 1,
+             workdir: Optional[str] = None) -> Dict[str, Any]:
+    """Fault one solve, resume it, bit-compare against the baseline.
+
+    Returns a report dict: ``recovered`` is True when ONE resume after
+    the planned fault reproduced the uninterrupted result exactly.
+    """
+    if kind not in KINDS:
+        raise ValueError(f"unknown fault kind {kind!r}; have {KINDS}")
+    work = workdir or tempfile.mkdtemp(prefix=f"faults_{kind}_")
+    os.makedirs(work, exist_ok=True)
+    ckpt_dir = os.path.join(work, "store")
+    base_out = os.path.join(work, "base.npz")
+    res_out = os.path.join(work, "resumed.npz")
+    common = ["child", "--backend", backend, "--data-shards",
+              str(data_shards), "--scan", str(int(scan))]
+
+    # 1. uninterrupted baseline (no checkpointing at all)
+    _spawn(common + ["--out", base_out], _child_env(devices))
+
+    # 2. the faulted solve: dies per plan (corrupt/stale kinds die via
+    #    a late sigkill so enough durable segments exist to damage)
+    after = {"sigkill": 2, "crash_rename": 2,
+             "corrupt": 3, "stale_manifest": 3}[kind]
+    plan = FaultPlan(kind=kind, after=after)
+    rc = _spawn(common + ["--ckpt-dir", ckpt_dir],
+                _child_env(devices, plan))
+    killed = rc != 0
+
+    # 3. post-mortem store damage for the byte-level kinds
+    if kind == "corrupt":
+        corrupt_npz(_newest_step(ckpt_dir), seed=plan.seed)
+    elif kind == "stale_manifest":
+        os.remove(_newest_step(ckpt_dir))
+
+    # 4. one resume must finish the solve
+    _spawn(common + ["--ckpt-dir", ckpt_dir, "--resume",
+                     "--out", res_out], _child_env(devices))
+
+    with np.load(base_out) as d:
+        base = {k: d[k] for k in d.files}
+    with np.load(res_out) as d:
+        resumed = {k: d[k] for k in d.files}
+    identical = blobs_equal(base, resumed)
+    report = {"kind": kind, "backend": backend, "scan": scan,
+              "data_shards": data_shards, "devices": devices,
+              "killed": killed, "bit_identical": identical,
+              "recovered": bool(killed and identical)}
+    return report
+
+
+# ----------------------------------------------------------------------
+# multi-process recipe: 2 processes × 4 devices, kill one, resume
+# ----------------------------------------------------------------------
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("localhost", 0))
+        return s.getsockname()[1]
+
+
+def _mp_ranks(nprocs: int, port: int, extra: List[str],
+              fault_rank: Optional[int] = None,
+              plan: Optional[FaultPlan] = None,
+              devices: int = 4, timeout: float = 240.0) -> List[int]:
+    """Launch all ranks, wait for them (killing stragglers a dead peer
+    left blocked in a collective), return the exit codes."""
+    procs = []
+    for rank in range(nprocs):
+        env = _child_env(devices,
+                         plan if rank == fault_rank else None)
+        args = [sys.executable, "-m", "repro.faults", "mp-child",
+                "--rank", str(rank), "--nprocs", str(nprocs),
+                "--port", str(port)] + extra
+        procs.append(subprocess.Popen(args, env=env,
+                                      stdout=subprocess.PIPE,
+                                      stderr=subprocess.STDOUT))
+    deadline = time.time() + timeout
+    codes: List[Optional[int]] = [None] * nprocs
+    outs = [b""] * nprocs
+    while time.time() < deadline and any(c is None for c in codes):
+        for i, p in enumerate(procs):
+            if codes[i] is None and p.poll() is not None:
+                outs[i] = p.stdout.read()
+                codes[i] = p.returncode
+        time.sleep(0.2)
+    for i, p in enumerate(procs):
+        if codes[i] is None:
+            # a peer died mid-collective and left this rank blocked —
+            # exactly what a real preemption does to the survivors
+            p.kill()
+            outs[i] = p.stdout.read()
+            codes[i] = p.returncode
+    if fault_rank is None and any(c != 0 for c in codes):
+        raise RuntimeError(
+            "multi-process ranks failed: "
+            + "; ".join(f"rank{i}={c}" for i, c in enumerate(codes))
+            + "\n" + b"\n".join(outs).decode(errors="replace")[-3000:])
+    return [c if c is not None else -9 for c in codes]
+
+
+def run_multiprocess_case(workdir: Optional[str] = None,
+                          nprocs: int = 2, devices: int = 4
+                          ) -> Dict[str, Any]:
+    """The documented CPU recovery recipe, end to end: a 2-process ×
+    4-device mesh solve is killed on rank 1 mid-solve, every surviving
+    rank is reaped, and a fresh 2-process launch resumes the store to a
+    result bit-identical to the uninterrupted 2-process baseline."""
+    work = workdir or tempfile.mkdtemp(prefix="faults_mp_")
+    os.makedirs(work, exist_ok=True)
+    ckpt_dir = os.path.join(work, "store")
+    base_out = os.path.join(work, "mp_base.npz")
+    res_out = os.path.join(work, "mp_resumed.npz")
+
+    # uninterrupted 2-process baseline (no checkpointing)
+    _mp_ranks(nprocs, _free_port(), ["--out", base_out], devices=devices)
+    # kill rank 1 after the second durable segment
+    codes = _mp_ranks(nprocs, _free_port(), ["--ckpt-dir", ckpt_dir],
+                      fault_rank=1, plan=FaultPlan("sigkill", after=2),
+                      devices=devices)
+    # fresh launch resumes the store
+    _mp_ranks(nprocs, _free_port(),
+              ["--ckpt-dir", ckpt_dir, "--resume", "--out", res_out],
+              devices=devices)
+
+    with np.load(base_out) as d:
+        base = {k: d[k] for k in d.files}
+    with np.load(res_out) as d:
+        resumed = {k: d[k] for k in d.files}
+    identical = blobs_equal(base, resumed)
+    return {"kind": "mp_sigkill", "nprocs": nprocs, "devices": devices,
+            "killed": any(c != 0 for c in codes),
+            "exit_codes": codes, "bit_identical": identical,
+            "recovered": bool(any(c != 0 for c in codes) and identical)}
+
+
+# ----------------------------------------------------------------------
+# CLI
+# ----------------------------------------------------------------------
+def _cmd_child(args) -> None:
+    arm_from_env()
+    import repro
+    prob = demo_problem()
+    kw = dict(SOLVE_KW)
+    if args.resume:
+        res = repro.resume(args.ckpt_dir)
+    else:
+        res = repro.solve(prob, backend=args.backend,
+                          data_shards=args.data_shards,
+                          scan=bool(int(args.scan)),
+                          ckpt_dir=args.ckpt_dir,
+                          checkpoint_every=(CHECKPOINT_EVERY
+                                            if args.ckpt_dir else None),
+                          **kw)
+    if args.out:
+        np.savez(args.out, **_result_blob(res))
+
+
+def _cmd_mp_child(args) -> None:
+    from .runtime.recovery import init_cluster
+    init_cluster(f"localhost:{args.port}", args.nprocs, args.rank)
+    arm_from_env()
+    import jax
+
+    import repro
+    prob = demo_problem()
+    if args.resume:
+        res = repro.resume(args.ckpt_dir)
+    else:
+        res = repro.solve(prob, backend="mesh", scan=True,
+                          ckpt_dir=args.ckpt_dir,
+                          checkpoint_every=(CHECKPOINT_EVERY
+                                            if args.ckpt_dir else None),
+                          **SOLVE_KW)
+    if args.out and jax.process_index() == 0:
+        np.savez(args.out, **_result_blob(res))
+
+
+def _cmd_report(args) -> None:
+    cases = [run_case(kind, backend=args.backend, scan=True)
+             for kind in KINDS]
+    ok = all(c["recovered"] for c in cases)
+    report = {"ok": ok, "cases": cases}
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(json.dumps(report, indent=2))
+    sys.exit(0 if ok else 1)
+
+
+def _cmd_multiprocess(args) -> None:
+    rep = run_multiprocess_case(nprocs=args.nprocs, devices=args.devices)
+    with open(args.out, "w") as f:
+        json.dump(rep, f, indent=2)
+    print(json.dumps(rep, indent=2))
+    sys.exit(0 if rep["recovered"] else 1)
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    import argparse
+    ap = argparse.ArgumentParser(prog="repro.faults")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    c = sub.add_parser("child", help="one harness solve (internal)")
+    c.add_argument("--backend", default="sim")
+    c.add_argument("--data-shards", type=int, default=1)
+    c.add_argument("--scan", default="1")
+    c.add_argument("--ckpt-dir", default=None)
+    c.add_argument("--resume", action="store_true")
+    c.add_argument("--out", default=None)
+    c.set_defaults(fn=_cmd_child)
+
+    m = sub.add_parser("mp-child", help="one distributed rank (internal)")
+    m.add_argument("--rank", type=int, required=True)
+    m.add_argument("--nprocs", type=int, required=True)
+    m.add_argument("--port", type=int, required=True)
+    m.add_argument("--ckpt-dir", default=None)
+    m.add_argument("--resume", action="store_true")
+    m.add_argument("--out", default=None)
+    m.set_defaults(fn=_cmd_mp_child)
+
+    r = sub.add_parser("report", help="run every fault kind, write the "
+                                      "recovery report")
+    r.add_argument("--out", default="RECOVERY_report.json")
+    r.add_argument("--backend", default="sim")
+    r.set_defaults(fn=_cmd_report)
+
+    p = sub.add_parser("multiprocess", help="2-process kill-and-resume "
+                                            "recipe")
+    p.add_argument("--out", default="MP_RECOVERY_report.json")
+    p.add_argument("--nprocs", type=int, default=2)
+    p.add_argument("--devices", type=int, default=4)
+    p.set_defaults(fn=_cmd_multiprocess)
+
+    args = ap.parse_args(argv)
+    args.fn(args)
+
+
+if __name__ == "__main__":
+    main()

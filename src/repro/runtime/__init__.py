@@ -12,6 +12,10 @@ each task's samples sharded across ``data_shards`` devices
 from .base import ProtocolRuntime, RecordSpec, make_runtime
 from .sim import SimRuntime
 from .mesh import MeshRuntime, task_mesh, task_data_mesh
+from .recovery import (DEFAULT_SEGMENT, SolveCheckpointer, init_cluster,
+                       resume)
 
 __all__ = ["ProtocolRuntime", "RecordSpec", "SimRuntime", "MeshRuntime",
-           "task_mesh", "task_data_mesh", "make_runtime"]
+           "task_mesh", "task_data_mesh", "make_runtime",
+           "SolveCheckpointer", "init_cluster", "resume",
+           "DEFAULT_SEGMENT"]

@@ -180,6 +180,13 @@ class ProtocolRuntime:
         # recorded exactly as in a real solve, the jaxpr is stored on
         # the capture, and the initial state is returned unchanged
         self._capture = None
+        # when set (repro.runtime.recovery.SolveCheckpointer), run_rounds
+        # hands the whole drive to the segmented resumable driver: the
+        # round loop splits into checkpoint_every-round segments whose
+        # full carry persists between segments, and a preempted solve
+        # restarts from the latest intact segment with a bit-identical
+        # W + ledger continuation (DESIGN.md §12)
+        self._ckpt = None
 
     # ------------------------------------------------------------------
     # topology
@@ -519,6 +526,59 @@ class ProtocolRuntime:
 
         return program
 
+    def _scan_segment_program(self, body: RoundBody, seg_len: int,
+                              record_key: Optional[str], n_snaps: int):
+        """The segment core of a RESUMABLE scanned solve: program(state,
+        data, start, slot_of) -> (state, snaps), running ``seg_len``
+        rounds from GLOBAL round index ``start``.
+
+        The round index the body sees is ``start + i`` — the same value
+        an uninterrupted ``_scan_program`` run would feed it — and the
+        per-round W dataflow is the identical HLO, so a segmented solve
+        agrees bit-for-bit with the fused single-scan run (the
+        acceptance invariant of DESIGN.md §12).  ``start`` and the
+        per-round snapshot-slot map ``slot_of`` (slot index or -1,
+        length ``seg_len``) enter as ARGUMENTS, not trace constants, so
+        every equal-length segment of a solve shares one compile.
+        """
+        def program(state, data, start, slot_of):
+            ks = start + jnp.arange(seg_len, dtype=jnp.int32)
+            if record_key is None or n_snaps == 0:
+                # no snapshot falls inside this segment: skip the snap
+                # write machinery entirely (a dynamic_update into a
+                # zero-length buffer would not even compile)
+                def step(st, k):
+                    return body(k, st, data), None
+                state, _ = jax.lax.scan(step, state, ks)
+                return state, ()
+
+            leaf = state[record_key]
+            snaps0 = jnp.zeros((n_snaps,) + leaf.shape, leaf.dtype)
+
+            def step(carry, k_slot):
+                k, slot = k_slot
+                st, snaps = carry
+                st = body(k, st, data)
+                snaps = jax.lax.cond(
+                    slot >= 0,
+                    lambda s: jax.lax.dynamic_update_index_in_dim(
+                        s, st[record_key], slot, 0),
+                    lambda s: s, snaps)
+                return (st, snaps), None
+
+            (state, snaps), _ = jax.lax.scan(step, (state, snaps0),
+                                             (ks, slot_of))
+            return state, snaps
+
+        return program
+
+    def _compile_segment(self, body: RoundBody, state, sharded,
+                         seg_len: int, record_key: Optional[str],
+                         n_snaps: int):
+        """Return fn(state, start, slot_of) -> (state, snaps) running one
+        ``seg_len``-round segment device-resident (backend-specific)."""
+        raise NotImplementedError
+
     @staticmethod
     def _state_donation():
         """argnums donating the state arg of the fused scan call (arg 0).
@@ -589,6 +649,13 @@ class ProtocolRuntime:
         self._data_template = []
         self._data_leaves = None if data_leaves is None else \
             tuple(data_leaves)
+        if self._ckpt is not None and self._capture is None:
+            # segmented resumable driver (repro.runtime.recovery): same
+            # per-round program + accounting, with the carry persisted
+            # between checkpoint_every-round segments
+            return self._ckpt.drive(self, rounds, body, state,
+                                    tuple(sharded), record, count_rounds,
+                                    scan)
         self._recording = True
         if self._capture is not None:
             return self._capture_rounds(rounds, body, state, tuple(sharded),

@@ -36,6 +36,7 @@ import inspect
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 try:                       # jax >= 0.5 promotes shard_map out of experimental
     from jax import shard_map
 except ImportError:
@@ -212,14 +213,14 @@ class MeshRuntime(ProtocolRuntime):
         sharded-vs-unsharded agreement is tested)."""
         return _shard_gram_fn(self.mesh, self.axis, self.data_axis)(Xs, ys)
 
+    def _leaf_spec(self, leaf, shard_it: bool):
+        nd = jnp.ndim(leaf)
+        if shard_it and nd:
+            return P(*([None] * (nd - 1)), self.axis)  # task columns last
+        return P(*([None] * nd))
+
     def _specs(self, state, sharded):
         axis = self.axis
-
-        def spec(leaf, shard_it):
-            nd = jnp.ndim(leaf)
-            if shard_it and nd:
-                return P(*([None] * (nd - 1)), axis)   # task columns last
-            return P(*([None] * nd))
 
         # state entries may be pytrees (a solver's spectral-engine
         # carry rides next to W); every leaf of an entry shares the
@@ -228,7 +229,7 @@ class MeshRuntime(ProtocolRuntime):
         for n, v in state.items():
             shard_it = n in sharded
             state_specs[n] = jax.tree.map(
-                lambda leaf, s=shard_it: spec(leaf, s), v)
+                lambda leaf, s=shard_it: self._leaf_spec(leaf, s), v)
         data = self._round_data()
 
         def data_spec(name, v):
@@ -244,18 +245,60 @@ class MeshRuntime(ProtocolRuntime):
         data_specs = {n: data_spec(n, v) for n, v in data.items()}
         return state_specs, data, data_specs
 
+    # ------------------------------------------------------------------
+    # multi-controller input binding
+    # ------------------------------------------------------------------
+    def _put_global(self, x, spec):
+        """Commit one host value to its global mesh sharding.  Under
+        multi-controller jax (``jax.process_count() > 1``) jit inputs
+        must be globally-addressable Arrays; every process holds the
+        full value (the problem is built deterministically on each
+        host), so the callback just slices its local block."""
+        from jax.sharding import NamedSharding
+        sh = NamedSharding(self.mesh, spec)
+        if isinstance(x, jax.Array) and not x.is_fully_addressable:
+            return x            # already a global array (prior segment out)
+        host = np.asarray(x)
+        return jax.make_array_from_callback(
+            host.shape, sh, lambda idx: host[idx])
+
+    def _bind_data(self, data, data_specs):
+        if jax.process_count() == 1:
+            return data
+        return {n: self._put_global(v, data_specs[n])
+                for n, v in data.items()}
+
+    def _bind_state(self, state, sharded):
+        if jax.process_count() == 1:
+            return state
+        out = {}
+        for n, v in state.items():
+            shard_it = n in sharded
+            out[n] = jax.tree.map(
+                lambda leaf, s=shard_it: self._put_global(
+                    leaf, self._leaf_spec(leaf, s)), v)
+        return out
+
+    def _bind_scalar(self, x, spec=P()):
+        if jax.process_count() == 1:
+            return jnp.asarray(x, jnp.int32)
+        return self._put_global(np.asarray(x, np.int32), spec)
+
     def _compile(self, body, state, sharded):
         state_specs, data, data_specs = self._specs(state, sharded)
+        data = self._bind_data(data, data_specs)
         fn = shard_map(lambda k, s, d: body(k, s, d),
                        mesh=self.mesh,
                        in_specs=(P(), state_specs, data_specs),
                        out_specs=state_specs,
                        **_NO_REP_CHECK)
         step = jax.jit(fn)
-        return lambda t, s: step(jnp.int32(t), s, data)
+        return lambda t, s: step(self._bind_scalar(t),
+                                 self._bind_state(s, sharded), data)
 
     def _compile_scan(self, body, state, sharded, rounds, record):
         state_specs, data, data_specs = self._specs(state, sharded)
+        data = self._bind_data(data, data_specs)
         program = self._scan_program(body, rounds, record)
         if record is None:
             snaps_spec = ()
@@ -269,4 +312,29 @@ class MeshRuntime(ProtocolRuntime):
                        **_NO_REP_CHECK)
         donate = self._state_donation()
         step = jax.jit(fn, donate_argnums=donate)
-        return lambda s: step(self._shield_donated(s, donate), data)
+        return lambda s: step(
+            self._shield_donated(self._bind_state(s, sharded), donate),
+            data)
+
+    def _compile_segment(self, body, state, sharded, seg_len, record_key,
+                         n_snaps):
+        state_specs, data, data_specs = self._specs(state, sharded)
+        data = self._bind_data(data, data_specs)
+        program = self._scan_segment_program(body, seg_len, record_key,
+                                             n_snaps)
+        if record_key is None or n_snaps == 0:
+            snaps_spec = ()
+        else:
+            leaf_spec = state_specs[record_key]
+            snaps_spec = P(None, *leaf_spec)   # leading snapshot axis
+        fn = shard_map(program,
+                       mesh=self.mesh,
+                       in_specs=(state_specs, data_specs, P(), P(None)),
+                       out_specs=(state_specs, snaps_spec),
+                       **_NO_REP_CHECK)
+        donate = self._state_donation()
+        step = jax.jit(fn, donate_argnums=donate)
+        return lambda s, start, slots: step(
+            self._shield_donated(self._bind_state(s, sharded), donate),
+            data, self._bind_scalar(start),
+            self._bind_scalar(np.asarray(slots), P(None)))

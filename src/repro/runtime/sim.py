@@ -155,3 +155,24 @@ class SimRuntime(ProtocolRuntime):
         # batched, so the (global-shaped) input buffers cannot be reused
         step = jax.jit(lambda s, d: self._unreplicate(vprog(s, d)))
         return lambda s: step(s, data)
+
+    def _compile_segment(self, body, state, sharded, seg_len, record_key,
+                         n_snaps):
+        program = self._scan_segment_program(body, seg_len, record_key,
+                                             n_snaps)
+        data = self._round_data()
+        if self.data_shards == 1:
+            donate = self._state_donation()
+            step = jax.jit(program, donate_argnums=donate)
+            return lambda s, start, slots: step(
+                self._shield_donated(s, donate), data,
+                jnp.int32(start), jnp.asarray(slots, jnp.int32))
+
+        axes = self._data_in_axes(data)
+        vprog = jax.vmap(program, in_axes=(None, axes, None, None),
+                         out_axes=0, axis_name=self.data_axis,
+                         axis_size=self.data_shards)
+        step = jax.jit(lambda s, d, k0, sl: self._unreplicate(
+            vprog(s, d, k0, sl)))
+        return lambda s, start, slots: step(
+            s, data, jnp.int32(start), jnp.asarray(slots, jnp.int32))

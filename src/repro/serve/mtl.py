@@ -41,6 +41,8 @@ import dataclasses
 import hashlib
 import json
 import threading
+import time
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -369,7 +371,8 @@ class MTLServer:
     def version(self) -> str:
         return self._state.version
 
-    def maybe_reload(self, store_dir: str) -> bool:
+    def maybe_reload(self, store_dir: str, *, retries: int = 2,
+                     backoff_s: float = 0.05) -> bool:
         """Hot-swap to the store's newest version if it is newer than
         the one being served (the background-re-solve handoff).  False
         when already current or the store is empty.
@@ -383,13 +386,45 @@ class MTLServer:
         can never overwrite ANY model installed concurrently (a newer
         store step, a ``swap``, an ``onboard``) — it simply loses the
         race and returns False.
+
+        Degradation (DESIGN.md §12): a store version that fails to load
+        — truncated/bit-flipped npz (the checkpoint content hash), a
+        manifest/factor mismatch, or plain I/O errors — NEVER raises
+        into the serving path.  Each candidate step is retried
+        ``retries`` times with ``backoff_s`` exponential backoff (a
+        concurrent writer may be mid-publish), then skipped with a
+        warning in favor of the next older step; when nothing newer
+        verifies, the server pins the version it is already serving and
+        returns False.
         """
         start = self._state
         steps = checkpoint.available_steps(store_dir)
-        if not steps or (start.step is not None
-                         and steps[-1] <= start.step):
+        newer = [s for s in steps
+                 if start.step is None or s > start.step]
+        if not newer:
             return False
-        step, model = FactoredModel.load(store_dir, steps[-1])
+        step = model = None
+        for cand in reversed(newer):       # newest first, degrade older
+            err = None
+            for attempt in range(retries + 1):
+                try:
+                    step, model = FactoredModel.load(store_dir, cand)
+                    err = None
+                    break
+                except (checkpoint.CheckpointError, ValueError, KeyError,
+                        OSError, json.JSONDecodeError) as e:
+                    err = e
+                    if attempt < retries:
+                        time.sleep(backoff_s * (2 ** attempt))
+            if err is None:
+                break
+            warnings.warn(
+                f"serve store {store_dir} step {cand} failed to load "
+                f"after {retries + 1} attempts ({type(err).__name__}: "
+                f"{err}) — skipping it (pinning the served version if "
+                f"nothing older verifies)")
+        if model is None:
+            return False                  # every newer step is damaged
         if model.version == start.version:
             # already serving this exact artifact (e.g. from memory,
             # before its save): adopt the store step, report no swap

@@ -10,17 +10,59 @@ Crash safety: a write that dies before the final ``os.replace`` leaves
 only a ``*.tmp`` file behind — never a truncated ``step_*.npz`` —
 and ``available_steps`` ignores tmp files, so readers always see the
 last complete checkpoint (tests/test_checkpoint.py).
+
+Content integrity: every checkpoint embeds a sha256 over its arrays
+(key, dtype, shape, bytes — the same digest convention as the serve
+store manifests of ``repro.serve.mtl``).  ``load_checkpoint`` verifies
+it and raises :class:`CheckpointCorruptError` naming the offending step
+on a truncated, bit-flipped, or unreadable file; loading "the latest"
+falls back to the previous intact step instead of failing the caller
+(the preemption-recovery behavior ``repro.resume`` and the serving
+``maybe_reload`` path build on — DESIGN.md §12).
 """
 from __future__ import annotations
 
+import hashlib
 import os
 import re
 import tempfile
-from typing import Any, Optional, Tuple
+import warnings
+from typing import Any, Callable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+# sha256 hex digest of the checkpoint's arrays, stored as one more npz
+# entry — excluded from the returned pytree and from its own digest
+HASH_KEY = "__checkpoint_hash__"
+
+# Test-only injection point (repro.faults): when set, called as
+# ``hook(event, **info)`` at named crash sites ("pre_rename" fires
+# between the npz write and the atomic rename).  None in production —
+# zero overhead, nothing to configure.
+_fault_hook: Optional[Callable[..., None]] = None
+
+
+def _fire(event: str, **info) -> None:
+    if _fault_hook is not None:
+        _fault_hook(event, **info)
+
+
+class CheckpointError(Exception):
+    """A checkpoint could not be read or written."""
+
+
+class CheckpointCorruptError(CheckpointError):
+    """A checkpoint file exists but its bytes are unreadable or its
+    content hash does not match — truncated write, bit rot, or a
+    tampered store.  ``step`` and ``path`` name the offender."""
+
+    def __init__(self, msg: str, step: Optional[int] = None,
+                 path: Optional[str] = None):
+        super().__init__(msg)
+        self.step = step
+        self.path = path
 
 
 def _flatten(tree) -> dict:
@@ -65,6 +107,24 @@ def _listify(node):
     return node
 
 
+def content_hash(flat: dict) -> str:
+    """sha256 over the flat array dict, key-sorted: digest covers each
+    entry's key, dtype, shape and raw bytes, so a reordered, reshaped,
+    retyped or bit-flipped array all change the hash."""
+    h = hashlib.sha256()
+    for key in sorted(k for k in flat if k != HASH_KEY):
+        arr = np.ascontiguousarray(np.asarray(flat[key]))
+        h.update(key.encode())
+        h.update(str(arr.dtype).encode())
+        h.update(repr(arr.shape).encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+def _step_path(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+
+
 def save_checkpoint(ckpt_dir: str, step: int, state: Any,
                     keep: Optional[int] = 3) -> str:
     if keep is not None and keep < 1:
@@ -72,27 +132,83 @@ def save_checkpoint(ckpt_dir: str, step: int, state: Any,
         # nonsensical value loud (keep=None is the keep-all knob)
         raise ValueError(f"keep={keep} must be >= 1 (or None)")
     os.makedirs(ckpt_dir, exist_ok=True)
-    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    path = _step_path(ckpt_dir, step)
     flat = _flatten(state)
+    digest = content_hash(flat)
+    flat[HASH_KEY] = np.frombuffer(digest.encode(), np.uint8).copy()
     fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
     with os.fdopen(fd, "wb") as f:
         np.savez(f, **flat)
+    _fire("pre_rename", step=step, path=path, tmp=tmp)
     os.replace(tmp, path)
     if keep is not None:
         _gc(ckpt_dir, keep)
     return path
 
 
+def _load_step(ckpt_dir: str, step: int) -> Any:
+    """Read + verify ONE checkpoint file; CheckpointCorruptError names
+    the step on any unreadable bytes or hash mismatch."""
+    path = _step_path(ckpt_dir, step)
+    try:
+        with np.load(path) as data:
+            flat = {k: data[k] for k in data.files}
+    except FileNotFoundError:
+        raise
+    except Exception as e:      # zipfile.BadZipFile, OSError, ValueError...
+        raise CheckpointCorruptError(
+            f"checkpoint step {step} ({path}) is unreadable "
+            f"(truncated or corrupt npz): {type(e).__name__}: {e}",
+            step=step, path=path) from e
+    stored = flat.pop(HASH_KEY, None)
+    if stored is not None:
+        want = bytes(np.asarray(stored)).decode(errors="replace")
+        got = content_hash(flat)
+        if got != want:
+            raise CheckpointCorruptError(
+                f"checkpoint step {step} ({path}) fails its content-hash "
+                f"check (stored {want[:12]}…, recomputed {got[:12]}…) — "
+                f"corrupt or tampered store", step=step, path=path)
+    # pre-hash checkpoints (older stores) carry no digest; accepted as-is
+    return _unflatten(flat)
+
+
 def load_checkpoint(ckpt_dir: str, step: Optional[int] = None
                     ) -> Tuple[int, Any]:
+    """Load a checkpoint, verifying its embedded content hash.
+
+    ``step`` given: load exactly that step; a corrupt file raises
+    :class:`CheckpointCorruptError` naming it.  ``step=None`` (the
+    latest): walk steps newest-first, skipping corrupt files with a
+    warning and returning the newest INTACT one — a half-written or
+    bit-rotted newest step degrades to the previous checkpoint instead
+    of failing recovery.  Raises when no intact checkpoint exists.
+    """
+    step_, tree, _ = load_latest_intact(ckpt_dir) if step is None else \
+        (step, _load_step(ckpt_dir, step), [])
+    return step_, tree
+
+
+def load_latest_intact(ckpt_dir: str) -> Tuple[int, Any, List[int]]:
+    """The newest checkpoint that verifies, plus the corrupt steps that
+    were skipped on the way down (newest first)."""
     steps = available_steps(ckpt_dir)
     if not steps:
         raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
-    step = step if step is not None else steps[-1]
-    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
-    with np.load(path) as data:
-        flat = {k: data[k] for k in data.files}
-    return step, _unflatten(flat)
+    skipped: List[int] = []
+    last_err: Optional[CheckpointCorruptError] = None
+    for s in reversed(steps):
+        try:
+            tree = _load_step(ckpt_dir, s)
+        except CheckpointCorruptError as e:
+            warnings.warn(f"skipping corrupt checkpoint: {e}")
+            skipped.append(s)
+            last_err = e
+            continue
+        return s, tree, skipped
+    raise CheckpointCorruptError(
+        f"no intact checkpoint in {ckpt_dir}: all of steps {steps} fail "
+        f"verification (last: {last_err})")
 
 
 def available_steps(ckpt_dir: str):
@@ -109,4 +225,4 @@ def available_steps(ckpt_dir: str):
 def _gc(ckpt_dir: str, keep: int):
     steps = available_steps(ckpt_dir)
     for s in steps[:-keep]:
-        os.remove(os.path.join(ckpt_dir, f"step_{s:08d}.npz"))
+        os.remove(_step_path(ckpt_dir, s))

@@ -2,33 +2,66 @@
 from __future__ import annotations
 
 import time
+import warnings
 from typing import Callable, Dict, Iterable, Optional
 
 import jax
 
-from .checkpoint import save_checkpoint
+from .checkpoint import (available_steps, load_latest_intact,
+                         save_checkpoint)
 
 
 def train_loop(train_step: Callable, state, batches: Iterable,
                n_steps: int, *, log_every: int = 10,
                ckpt_dir: Optional[str] = None, ckpt_every: int = 500,
+               resume: bool = True,
                log_fn: Callable[[str], None] = print) -> Dict:
+    """Run ``n_steps`` of ``train_step`` with periodic checkpoints.
+
+    Preemption recovery (DESIGN.md §12): when ``ckpt_dir`` already holds
+    checkpoints and ``resume=True`` (the default), the loop restarts
+    from the newest INTACT one instead of silently training from step 0
+    — corrupt/truncated files are skipped with a warning (the
+    content-hash verification of ``train/checkpoint``), and the batch
+    iterator is fast-forwarded past the consumed batches so the resumed
+    run sees the stream a never-killed run would have seen.  Pass
+    ``resume=False`` to force a fresh start (existing checkpoints are
+    then overwritten as their steps are reached).
+    """
     step_fn = jax.jit(train_step, donate_argnums=(0,))
     history = {"step": [], "loss": [], "nll": []}
-    t0 = time.time()
     it = iter(batches)
-    for step in range(n_steps):
+    start_step = 0
+    if ckpt_dir and resume and available_steps(ckpt_dir):
+        ckpt_step, ckpt_state, skipped = load_latest_intact(ckpt_dir)
+        if skipped:
+            warnings.warn(f"train_loop resume skipped corrupt "
+                          f"checkpoint steps {skipped} in {ckpt_dir}")
+        if ckpt_step >= n_steps:
+            log_fn(f"resume: {ckpt_dir} already holds step {ckpt_step} "
+                   f">= n_steps={n_steps}; nothing to do")
+            return history
+        state = ckpt_state
+        start_step = ckpt_step
+        for _ in range(start_step):       # fast-forward the batch stream
+            next(it)
+        log_fn(f"resume: restarting from checkpoint step {start_step} "
+               f"in {ckpt_dir}")
+    t0 = time.time()
+    done = 0
+    for step in range(start_step, n_steps):
         batch = next(it)
         if isinstance(batch, tuple):          # (tokens, targets) pipelines
             batch = {"tokens": batch[0], "targets": batch[1]}
         batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
         state, metrics = step_fn(state, batch)
-        if (step + 1) % log_every == 0 or step == 0:
+        done += 1
+        if (step + 1) % log_every == 0 or step == start_step:
             loss = float(metrics["loss"])
             nll = float(metrics.get("nll", metrics["loss"]))
             dt = time.time() - t0
             log_fn(f"step {step + 1:5d}  loss {loss:.4f}  nll {nll:.4f}  "
-                   f"({dt / (step + 1):.2f}s/step)")
+                   f"({dt / done:.2f}s/step)")
             history["step"].append(step + 1)
             history["loss"].append(loss)
             history["nll"].append(nll)

@@ -120,3 +120,92 @@ def test_available_steps_ignores_foreign_files(tmp_path):
     (tmp_path / "notes.txt").write_text("hi")
     (tmp_path / "abc123.tmp").write_bytes(b"partial")
     assert checkpoint.available_steps(d) == [2]
+
+
+# ---------------------------------------------------------------------------
+# content-hash verification + corrupt-store degradation (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+def _flip_bytes(path, where=0.5, n=8):
+    with open(path, "rb") as f:
+        blob = bytearray(f.read())
+    at = int(len(blob) * where)
+    for i in range(at, min(at + n, len(blob))):
+        blob[i] ^= 0xFF
+    with open(path, "wb") as f:
+        f.write(bytes(blob))
+
+
+def test_corrupt_explicit_step_raises_naming_step(tmp_path):
+    d = str(tmp_path)
+    checkpoint.save_checkpoint(d, 4, _tree(4.0))
+    _flip_bytes(os.path.join(d, "step_00000004.npz"))
+    with pytest.raises(checkpoint.CheckpointCorruptError, match="step 4"):
+        checkpoint.load_checkpoint(d, step=4)
+    try:
+        checkpoint.load_checkpoint(d, step=4)
+    except checkpoint.CheckpointCorruptError as e:
+        assert e.step == 4 and e.path.endswith("step_00000004.npz")
+
+
+def test_truncated_npz_detected(tmp_path):
+    d = str(tmp_path)
+    checkpoint.save_checkpoint(d, 1, _tree(1.0))
+    path = os.path.join(d, "step_00000001.npz")
+    with open(path, "rb") as f:
+        blob = f.read()
+    with open(path, "wb") as f:
+        f.write(blob[: len(blob) // 2])
+    with pytest.raises(checkpoint.CheckpointCorruptError, match="step 1"):
+        checkpoint.load_checkpoint(d, step=1)
+
+
+def test_latest_falls_back_past_corrupt_step(tmp_path):
+    """The newest checkpoint is damaged: loading 'the latest' must warn,
+    skip it, and return the previous INTACT step — the degradation
+    repro.resume and MTLServer.maybe_reload build on."""
+    d = str(tmp_path)
+    checkpoint.save_checkpoint(d, 1, _tree(1.0))
+    checkpoint.save_checkpoint(d, 2, _tree(2.0))
+    _flip_bytes(os.path.join(d, "step_00000002.npz"))
+    with pytest.warns(UserWarning, match="skipping corrupt"):
+        step, loaded = checkpoint.load_checkpoint(d)
+    assert step == 1
+    _assert_trees_equal(_tree(1.0), loaded)
+    step, loaded, skipped = checkpoint.load_latest_intact(d)
+    assert (step, skipped) == (1, [2])
+
+
+def test_all_corrupt_raises(tmp_path):
+    d = str(tmp_path)
+    checkpoint.save_checkpoint(d, 0, _tree(0.0))
+    _flip_bytes(os.path.join(d, "step_00000000.npz"))
+    with pytest.warns(UserWarning):
+        with pytest.raises(checkpoint.CheckpointCorruptError,
+                           match="no intact checkpoint"):
+            checkpoint.load_checkpoint(d)
+
+
+def test_fault_hook_fires_between_write_and_rename(tmp_path):
+    """The repro.faults injection point: 'pre_rename' fires after the
+    npz bytes are durable under the tmp name but BEFORE the atomic
+    rename — dying there must leave the store without the new step."""
+    d = str(tmp_path)
+    seen = []
+
+    def hook(event, **info):
+        seen.append((event, info["step"]))
+        if event == "pre_rename":
+            raise RuntimeError("fault injected")
+
+    checkpoint._fault_hook = hook
+    try:
+        with pytest.raises(RuntimeError, match="fault injected"):
+            checkpoint.save_checkpoint(d, 5, _tree(5.0))
+    finally:
+        checkpoint._fault_hook = None
+    assert seen == [("pre_rename", 5)]
+    assert checkpoint.available_steps(d) == []
+    assert any(f.endswith(".tmp") for f in os.listdir(d))
+    # and with the hook disarmed the same save succeeds
+    checkpoint.save_checkpoint(d, 5, _tree(5.0))
+    assert checkpoint.available_steps(d) == [5]
