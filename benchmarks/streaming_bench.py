@@ -1,0 +1,200 @@
+"""Streaming re-solve benchmark: warm rounds-to-accuracy + staleness.
+
+Two measurements of the closed train->serve loop
+(``repro.train.streaming``, DESIGN.md §13):
+
+1. **Rounds-to-accuracy, warm vs cold.**  After the reservoirs absorb a
+   burst of fresh stream samples, the refreshed problem is solved two
+   ways: the streaming path — stochastic rounds (``batch_size`` /
+   ``local_steps``) warm-started from the previously published
+   predictors and spectral carry — and the cold baseline — a full-batch
+   re-fit from zeros, the "throw it away and retrain" strategy.  Both
+   record every iterate; the score is the number of CHARGED
+   communication rounds (the paper's Table-1 currency — local steps are
+   free) each needs to reach the cold run's converged excess risk.
+   The warm re-solver MUST win (asserted — the CI gate).
+
+2. **End-to-end staleness.**  A live ``MTLServer`` is refreshed through
+   :class:`~repro.train.streaming.StreamingResolver` for several
+   ingest->re-solve->publish cycles; per publish we report how old the
+   oldest not-yet-served sample was when its model swap landed
+   (``staleness_oldest_s``), plus the solve+publish wall time.
+
+Merges a ``"streaming"`` section into ``BENCH_solvers.json`` at the
+repo root (preserving the solver bench's sections):
+
+    PYTHONPATH=src python -m benchmarks.streaming_bench [--tiny]
+
+``--tiny`` shrinks the spec for CI smoke runs (same code paths, same
+warm-beats-cold gate).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+
+import jax
+
+import repro
+from repro.core.methods import MTLProblem
+from repro.data.synthetic import SimSpec, excess_risk_regression, generate
+from repro.serve.mtl import MTLServer
+from repro.train.streaming import SampleStream, StreamingResolver
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+# Warm-vs-cold spec: the reservoir keeps capacity n, the stream adds
+# fresh_frac * n new rows before the re-solve, so the refreshed problem
+# overlaps heavily with what the published predictors were trained on —
+# the regime where a warm start pays (and real streams live in).
+FULL = dict(p=100, m=30, n=50, r=5, rounds=80, lam=0.02,
+            batch_size=25, local_steps=2, fresh=16, refreshes=4)
+TINY = dict(p=40, m=16, n=24, r=2, rounds=30, lam=0.05,
+            batch_size=12, local_steps=2, fresh=8, refreshes=3)
+# rounds-to-accuracy target: 10% above the WORSE of the two runs'
+# converged excess risks — an accuracy level both provably reach (the
+# stochastic run settles into a noise floor set by batch_size /
+# local_steps; the cold full-batch run converges lower but starts at
+# zeros), so the comparison is purely "how many charged rounds until
+# serving-grade accuracy"
+TARGET_SLACK = 1.10
+
+
+def _rounds_to_target(res, Wstar, Sigma, target: float):
+    """First charged round whose recorded iterate reaches the target
+    excess risk (None when never reached)."""
+    for rnd, W in zip(res.rounds_axis, res.iterates):
+        if float(excess_risk_regression(W, Wstar, Sigma)) <= target:
+            return int(rnd)
+    return None
+
+
+def bench_rounds_to_accuracy(spec: dict) -> dict:
+    key = jax.random.PRNGKey(0)
+    sim = SimSpec(p=spec["p"], m=spec["m"], r=spec["r"], n=spec["n"])
+    Xs, ys, Wstar, Sigma = generate(key, sim)
+    prob = MTLProblem.make(Xs, ys, r=spec["r"])
+    hp = dict(rounds=spec["rounds"], lam=spec["lam"], record_every=1)
+
+    # the published model: a full-batch offline solve on the original data
+    res0 = repro.solve(prob, method="proxgd", keep_sv_carry=True, **hp)
+
+    # absorb a burst of fresh samples, then re-solve both ways
+    stream = SampleStream(Wstar, Sigma, noise=sim.noise, seed=7)
+    resolver = StreamingResolver(prob, server=None, store_dir="unused",
+                                 method="proxgd", rank=spec["r"])
+    Xs_new, ys_new = stream.draw(spec["fresh"])
+    resolver.ingest(Xs_new, ys_new)
+    prob2 = resolver.buffer.problem(prob)
+
+    cold = repro.solve(prob2, method="proxgd", **hp)
+    warm = repro.solve(prob2, method="proxgd",
+                       batch_size=spec["batch_size"],
+                       local_steps=spec["local_steps"],
+                       init_W=res0.W, sv_carry=res0.extras["sv_carry"],
+                       **hp)
+
+    cold_final = float(excess_risk_regression(cold.W, Wstar, Sigma))
+    warm_final = float(excess_risk_regression(warm.W, Wstar, Sigma))
+    target = max(cold_final, warm_final) * TARGET_SLACK
+    r_cold = _rounds_to_target(cold, Wstar, Sigma, target)
+    r_warm = _rounds_to_target(warm, Wstar, Sigma, target)
+    return {
+        "target_excess": target,
+        "cold_final_excess": cold_final,
+        "warm_final_excess": warm_final,
+        "warm_start_excess":
+            float(excess_risk_regression(warm.iterates[0], Wstar, Sigma)),
+        "cold_start_excess":
+            float(excess_risk_regression(cold.iterates[0], Wstar, Sigma)),
+        "rounds_to_target_cold": r_cold,
+        "rounds_to_target_warm": r_warm,
+        "batch_size": spec["batch_size"],
+        "local_steps": spec["local_steps"],
+        "warm_beats_cold": (r_warm is not None and r_cold is not None
+                            and r_warm < r_cold),
+    }
+
+
+def bench_staleness(spec: dict) -> dict:
+    key = jax.random.PRNGKey(1)
+    sim = SimSpec(p=spec["p"], m=spec["m"], r=spec["r"], n=spec["n"])
+    Xs, ys, Wstar, Sigma = generate(key, sim)
+    prob = MTLProblem.make(Xs, ys, r=spec["r"])
+    res0 = repro.solve(prob, method="proxgd", rounds=spec["rounds"],
+                       lam=spec["lam"], keep_sv_carry=True)
+    store = tempfile.mkdtemp(prefix="streaming_bench_")
+    model0 = res0.factorize(spec["r"])
+    model0.save(store)
+    server = MTLServer(model0)
+    stream = SampleStream(Wstar, Sigma, noise=sim.noise, seed=11)
+    resolver = StreamingResolver(
+        prob, server, store, method="proxgd", rank=spec["r"],
+        rounds=max(4, spec["rounds"] // 4),
+        batch_size=spec["batch_size"], local_steps=spec["local_steps"],
+        warm_from=res0, solver_hp={"lam": spec["lam"]})
+    for _ in range(spec["refreshes"]):
+        resolver.step(stream, count=spec["fresh"])
+    hist = resolver.history
+    stale = [h["staleness_oldest_s"] for h in hist]
+    return {
+        "refreshes": len(hist),
+        "all_published": all(h["reloaded"] for h in hist),
+        "all_warm": all(h["warm_started"] for h in hist),
+        "staleness_oldest_s_mean": sum(stale) / len(stale),
+        "staleness_oldest_s_max": max(stale),
+        "solve_s_mean": sum(h["solve_s"] for h in hist) / len(hist),
+        "model_swaps": len(server.swap_log),
+        "served_version": server.version,
+    }
+
+
+def main(tiny: bool = False, out_json: str | None = None) -> dict:
+    spec = TINY if tiny else FULL
+    section = {
+        "spec": dict(spec, tiny=tiny),
+        "rounds_to_accuracy": bench_rounds_to_accuracy(spec),
+        "staleness": bench_staleness(spec),
+    }
+    path = out_json or os.path.join(ROOT, "BENCH_solvers.json")
+    report = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            report = json.load(f)
+    report["streaming"] = section
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    rta = section["rounds_to_accuracy"]
+    st = section["staleness"]
+    print(f"streaming_bench: wrote {path} "
+          f"(rounds-to-accuracy warm={rta['rounds_to_target_warm']} "
+          f"vs cold={rta['rounds_to_target_cold']}; "
+          f"staleness mean={st['staleness_oldest_s_mean']:.3f}s over "
+          f"{st['refreshes']} refreshes)", flush=True)
+    # The CI gate: the warm-started stochastic re-solver must reach the
+    # cold run's converged accuracy in strictly fewer charged rounds.
+    if not rta["warm_beats_cold"]:
+        raise AssertionError(
+            f"warm-started re-solve did not beat the cold full-batch "
+            f"re-fit in rounds-to-accuracy: warm="
+            f"{rta['rounds_to_target_warm']} cold="
+            f"{rta['rounds_to_target_cold']} "
+            f"(target excess {rta['target_excess']:.4g}) — see "
+            f"streaming in {path}")
+    if not st["all_published"]:
+        raise AssertionError("a streaming refresh failed to publish — "
+                             f"see streaming.staleness in {path}")
+    return section
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke spec (same code paths + gates)")
+    ap.add_argument("--json", default=None,
+                    help="output path (default: <repo>/BENCH_solvers.json)")
+    a = ap.parse_args()
+    main(tiny=a.tiny, out_json=a.json)

@@ -73,6 +73,28 @@ ANALYSIS_CASES: Dict[str, Dict] = {
     "altmin": {"rounds": 3},
 }
 
+# The stochastic-path cells (DESIGN.md §13): every gradient-served
+# solver traced again with a REAL mini-batch + local-step configuration
+# (batch_size=4 of n=8, local_steps=2 — not the degenerate full-batch
+# canonicalization).  The same checks must hold: local steps issue no
+# tasks-axis collective (COMM001 fires otherwise), the Table-1
+# vectors/round are unchanged (COMM005 keys on the base solver name),
+# and the ledger stays layout/driver-invariant (COMM006).
+STOCHASTIC_CASES: Dict[str, Dict] = {
+    "proxgd": {"rounds": 3, "init": "zeros", "batch_size": 4,
+               "local_steps": 2},
+    "accproxgd": {"rounds": 3, "init": "zeros", "batch_size": 4,
+                  "local_steps": 2},
+    "admm": {"rounds": 3, "batch_size": 4, "local_steps": 2},
+    "dgsp": {"rounds": 3, "sv_iters": 8, "batch_size": 4,
+             "local_steps": 2},
+    "dnsp": {"rounds": 3, "sv_iters": 8, "batch_size": 4,
+             "local_steps": 2},
+}
+
+#: label of a stochastic matrix cell (the report's method column)
+STOCHASTIC_TAG = "+sgd"
+
 
 class AnalysisError(Exception):
     """Static verification failed; ``.findings`` has the diff."""
@@ -374,13 +396,23 @@ def run_analysis(methods: Optional[List[str]] = None,
     prob, extras = build_problem()
     report = AnalysisReport()
     by_method: Dict[str, List[Tuple[str, SolverTrace]]] = {}
-    for method in methods:
+    # every registry cell, then the stochastic variant of each
+    # gradient-served solver in the selection (the hp carries
+    # batch_size/local_steps; COMM005 keys on the base solver name —
+    # a stochastic round must charge the SAME Table-1 vectors)
+    cells = [(m, None) for m in methods] + \
+            [(m, STOCHASTIC_CASES[m]) for m in sorted(STOCHASTIC_CASES)
+             if m in methods]
+    for method, hp in cells:
+        label = method if hp is None else method + STOCHASTIC_TAG
         for layout in layouts:
             for driver in drivers:
                 trace = trace_solver(method, layout, driver, prob=prob,
-                                     extras=extras)
-                report.cases.append(check_trace(trace))
-                by_method.setdefault(method, []).append(
+                                     extras=extras, hp=hp)
+                rep = check_trace(trace)
+                rep.method = label
+                report.cases.append(rep)
+                by_method.setdefault(label, []).append(
                     (f"{layout}/{driver}", trace))
 
     # ledger layout/driver invariance (COMM006)

@@ -23,6 +23,8 @@ def solve(prob, method: str = "dgsp", backend: str = "sim", *,
           mesh=None, axis: str = "tasks", data_shards: int = 1,
           data_axis: str = "data", rounds: Optional[int] = None,
           scan: Optional[bool] = None, sv_engine: Optional[str] = None,
+          batch_size: Optional[int] = None,
+          local_steps: Optional[int] = None, batch_seed: int = 0,
           runtime: Optional[ProtocolRuntime] = None,
           verify: Optional[str] = None,
           checkpoint_every: Optional[int] = None,
@@ -73,6 +75,25 @@ def solve(prob, method: str = "dgsp", backend: str = "sim", *,
         take it (prox family, centralize, svd_trunc); a per-solver
         ``sv_rank=`` hyper-parameter overrides the carried rank hint
         (default: the problem's assumed rank bound r).
+    batch_size / local_steps / batch_seed: the stochastic worker path
+        (DESIGN.md §13), for the gradient-served solvers
+        (``repro.core.methods.base.STOCHASTIC_SOLVERS`` — proxgd,
+        accproxgd, admm, dgsp, dnsp).  ``batch_size`` rows per task per
+        gradient (sampled with replacement from a seeded,
+        device-resident sampler keyed on ``(batch_seed, task id,
+        round, local step, data shard)`` — no RNG state in the solver
+        loop, so draws are identical across backends, drivers and
+        layouts); ``local_steps`` communication-free worker steps
+        between charged rounds (arXiv 1802.03830).  The CommLog keeps
+        charging ONLY the tasks-axis rounds in Table-1 units — local
+        steps issue no tasks-axis collective, which ``verify="static"``
+        proves on the traced program.  ``batch_size=n`` with
+        ``local_steps=1`` canonicalizes to the exact full-batch code
+        path (bit-identical W, ledger, and measured collective floats —
+        the degeneracy rule).  Under ``data_shards=D > 1``,
+        ``batch_size`` must be divisible by D (each shard samples
+        batch_size/D of its local rows; mini-batch gradients
+        pmean-reduce over the data axis like the full-batch raw path).
     runtime: pass an explicit ProtocolRuntime instead of backend/mesh.
     checkpoint_every / ckpt_dir / ckpt_keep: preemption-safe solves
         (DESIGN.md §12).  With ``ckpt_dir`` set, the round loop runs in
@@ -119,6 +140,19 @@ def solve(prob, method: str = "dgsp", backend: str = "sim", *,
       ``data_shards == 1``.
     """
     from .core.methods import get_solver
+
+    if batch_size is not None or local_steps is not None:
+        from .core.methods.base import STOCHASTIC_SOLVERS
+        if method not in STOCHASTIC_SOLVERS:
+            raise ValueError(
+                f"batch_size/local_steps need a gradient-served solver "
+                f"{STOCHASTIC_SOLVERS}; {method!r} is full-batch only")
+        # normalized and validated (against n, data_shards) inside the
+        # solver via stochastic_config — batch_size == n, local_steps
+        # == 1 canonicalizes to the exact full-batch program there
+        hp["batch_size"] = batch_size
+        hp["local_steps"] = local_steps
+        hp["batch_seed"] = batch_seed
 
     if verify is not None:
         if verify != "static":

@@ -39,6 +39,13 @@ class CommLog:
         self.events.append(CommEvent(self.rounds, direction, vectors, dim, note))
 
     # ---- summaries -------------------------------------------------------
+    def ledger(self) -> List[tuple]:
+        """The full event log as plain comparable tuples — the
+        bit-identity currency of the parity tests: two solves agree on
+        communication iff their ledgers compare equal."""
+        return [(e.round, e.direction, e.vectors, e.dim, e.note)
+                for e in self.events]
+
     def floats_per_machine(self) -> int:
         return sum(e.floats for e in self.events)
 

@@ -66,8 +66,13 @@ class MTLProblem:
         under a 2-D runtime (``data_shards > 1``) that axis is
         additionally sharded across the "data" mesh axis, and the Gram
         leaves are REPLACED by a psum of per-shard partial Grams
-        (``runtime.SAMPLE_AXIS_LEAVES``, DESIGN.md §8)."""
-        d = {"Xs": self.Xs, "ys": self.ys}
+        (``runtime.SAMPLE_AXIS_LEAVES``, DESIGN.md §8).  ``task_ids``
+        carries each task's GLOBAL index (sharded along the task axis
+        under mesh, like every per-task leaf): the stochastic batch
+        sampler folds it into its key chain so a task draws the same
+        mini-batch rows on every backend and layout (DESIGN.md §13)."""
+        d = {"Xs": self.Xs, "ys": self.ys,
+             "task_ids": jnp.arange(self.m, dtype=jnp.int32)}
         if self.gram_A is not None:
             d["gram_A"], d["gram_b"] = self.gram_A, self.gram_b
         return d
@@ -127,6 +132,59 @@ class MTLResult:
             loss = self.extras.get("loss", "squared")
         return FactoredModel.from_W(self.W, rank, loss=loss,
                                     task_keys=task_keys)
+
+
+# Registry names of the gradient-served solvers that accept the
+# stochastic worker path (``repro.solve(..., batch_size=, local_steps=)``,
+# DESIGN.md §13): mini-batch gradients + communication-free local steps.
+# The one-shot baselines and DFW (whose Frank-Wolfe step is defined on
+# the exact gradient) stay full-batch.
+STOCHASTIC_SOLVERS = ("accproxgd", "admm", "dgsp", "dnsp", "proxgd")
+
+
+def stochastic_config(prob: MTLProblem, batch_size, local_steps,
+                      data_shards: int = 1):
+    """Normalize a solver's ``(batch_size, local_steps)`` pair.
+
+    Returns ``(B, L)`` for a genuinely stochastic configuration, or
+    ``None`` when the solver must run its EXACT full-batch program.
+
+    The degeneracy rule (DESIGN.md §13): ``batch_size == n`` and
+    ``local_steps == 1`` IS the full-batch algorithm, so it
+    canonicalizes — at trace time, on static ints — to the historical
+    full-batch code path.  That makes the stochastic front door
+    bit-identical there by construction: same HLO, same ledger, same
+    measured collective floats on every backend, driver and layout.
+
+    ``batch_size`` is the GLOBAL per-task mini-batch; under a 2-D
+    layout each data shard samples ``batch_size / data_shards`` of its
+    local rows (hence the divisibility requirement), and the per-shard
+    mini-batch gradients are pmean-reduced over the data axis exactly
+    like the full-batch raw path.
+    """
+    if batch_size is None and local_steps in (None, 1):
+        return None
+    B = prob.n if batch_size is None else int(batch_size)
+    L = 1 if local_steps is None else int(local_steps)
+    if not 1 <= B <= prob.n:
+        raise ValueError(f"batch_size={B} outside [1, n={prob.n}]")
+    if L < 1:
+        raise ValueError(f"local_steps={L} must be >= 1")
+    if B % data_shards:
+        raise ValueError(f"batch_size={B} must be divisible by "
+                         f"data_shards={data_shards} (each shard samples "
+                         f"batch_size/data_shards of its local rows)")
+    if B == prob.n and L == 1:
+        return None
+    return B, L
+
+
+def stochastic_round_leaves(prob: MTLProblem):
+    """Data leaves a stochastic round body reads: the raw samples plus
+    the global task ids that key the sampler's fold_in chain — never
+    the Gram cache (a mini-batch gradient is computed from sampled
+    rows, not from full-data sufficient statistics)."""
+    return ("Xs", "ys", "task_ids")
 
 
 def gram_round_leaves(prob: MTLProblem):

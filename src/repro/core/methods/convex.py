@@ -32,7 +32,8 @@ import jax.numpy as jnp
 from .. import spectral, worker_ops
 from ..spectral import leading_sv
 from .base import (MTLProblem, MTLResult, default_runtime, gram_round_leaves,
-                   iterate_recorder, register)
+                   iterate_recorder, register, stochastic_config,
+                   stochastic_round_leaves)
 
 
 def data_smoothness(prob: MTLProblem) -> float:
@@ -73,7 +74,17 @@ def data_smoothness(prob: MTLProblem) -> float:
     return float(prob.loss.smoothness * lmax)
 
 
-def _init_W(prob: MTLProblem, init: str) -> jnp.ndarray:
+def _init_W(prob: MTLProblem, init: str,
+            init_W: jnp.ndarray = None) -> jnp.ndarray:
+    if init_W is not None:
+        # an explicit (p, m) warm start — the streaming re-solver hands
+        # in the previous solve's predictors (DESIGN.md §13); worker-
+        # local state, no communication, like the "local" init
+        init_W = jnp.asarray(init_W, prob.Xs.dtype)
+        if init_W.shape != (prob.p, prob.m):
+            raise ValueError(f"init_W shape {init_W.shape} != "
+                             f"{(prob.p, prob.m)}")
+        return init_W
     if init == "zeros":
         return jnp.zeros((prob.p, prob.m), prob.Xs.dtype)
     if init == "local":
@@ -83,6 +94,20 @@ def _init_W(prob: MTLProblem, init: str) -> jnp.ndarray:
         from .baselines import _local_W
         return _local_W(prob, max(prob.l2, 1e-6))
     raise ValueError(init)
+
+
+def _sv_carry0(sv, sv_carry):
+    """The spectral engine's initial carry: a fresh cold probe, or —
+    streaming warm start — the carry a previous solve of the SAME
+    (m, rank) geometry finished with (its converged right basis makes
+    round one a warm sweep instead of the cold exact fallback)."""
+    if sv_carry is None:
+        return sv.init_carry()
+    cold = sv.init_carry()
+    if jax.tree.structure(sv_carry) != jax.tree.structure(cold):
+        raise ValueError("sv_carry does not match this solve's spectral "
+                         "engine (engine mode or rank differ)")
+    return sv_carry
 
 
 def _grad_columns(rt, prob, Z, data, note):
@@ -101,30 +126,62 @@ def _grad_columns(rt, prob, Z, data, note):
 def proxgd(prob: MTLProblem, lam: float = 1e-3, rounds: int = 200,
            eta: float = None, init: str = "local", record_every: int = 1,
            runtime=None, scan: bool = True, sv_engine: str = "lazy",
-           sv_rank: int = None, **_) -> MTLResult:
+           sv_rank: int = None, batch_size: int = None,
+           local_steps: int = None, batch_seed: int = 0, init_W=None,
+           sv_carry=None, keep_sv_carry: bool = False, **_) -> MTLResult:
     rt = default_runtime(prob, runtime)
     if eta is None:
         eta = 1.0 / data_smoothness(prob)
     m = prob.m
     sv = spectral.shrink_engine(prob, sv_engine, rank=sv_rank)
+    sgd = stochastic_config(prob, batch_size, local_steps, rt.data_shards)
 
-    def body(k, state, data):
-        G = _grad_columns(rt, prob, state["W"], data, "gradient column")
-        # master prox step (3.3); grad of (1/m)sum L_nj carries 1/m, the
-        # per-task smoothness is H/m so the per-W step uses eta*m
-        W_new, _, svc = sv.shrink(state["W"] - eta * m * G, eta * m * lam,
-                                  state["sv"])
-        return {"W": rt.broadcast(W_new, "updated predictor"), "sv": svc}
+    if sgd is None:
+        def body(k, state, data):
+            G = _grad_columns(rt, prob, state["W"], data, "gradient column")
+            # master prox step (3.3); grad of (1/m)sum L_nj carries 1/m,
+            # the per-task smoothness is H/m so the per-W step uses eta*m
+            W_new, _, svc = sv.shrink(state["W"] - eta * m * G,
+                                      eta * m * lam, state["sv"])
+            return {"W": rt.broadcast(W_new, "updated predictor"),
+                    "sv": svc}
+    else:
+        B, L = sgd
 
-    state = {"W": _init_W(prob, init), "sv": sv.init_carry()}
+        def body(k, state, data):
+            # L communication-free local steps on the worker's OWN task
+            # columns (arXiv 1802.03830): the nuclear-norm coupling only
+            # acts at communication time, so workers descend their local
+            # smooth losses between rounds and the master's charged
+            # shrinkage is applied to the gathered locally-stepped
+            # columns.  The unrolled loop calls no tasks-axis primitive
+            # — statically provable communication-freeness.
+            Wl = rt.local_slice(state["W"])
+            for i in range(L):
+                G = worker_ops.minibatch_grad_columns(
+                    prob.loss, Wl, data, prob.l2, rt=rt, seed=batch_seed,
+                    round_k=k, local_step=i, batch_size=B) / m
+                Wl = Wl - eta * m * G
+            W_new = rt.gather_columns(Wl, "locally stepped columns")
+            W_new, _, svc = sv.shrink(W_new, eta * m * lam, state["sv"])
+            return {"W": rt.broadcast(W_new, "updated predictor"),
+                    "sv": svc}
+
+    state = {"W": _init_W(prob, init, init_W),
+             "sv": _sv_carry0(sv, sv_carry)}
     res = MTLResult("proxgd", state["W"], rt.comm,
                     extras={"lam": lam, "eta": eta, "sv_engine": sv.mode})
+    if sgd is not None:
+        res.extras.update(batch_size=sgd[0], local_steps=sgd[1])
     res.record(0, state["W"])
     state = rt.run_rounds(rounds, body, state, scan=scan,
                           record=iterate_recorder(res, record_every),
-                          data_leaves=gram_round_leaves(prob))
+                          data_leaves=gram_round_leaves(prob) if sgd is None
+                          else stochastic_round_leaves(prob))
     res.W = state["W"]
     res.extras.update(sv.stats(state["sv"]))
+    if keep_sv_carry:
+        res.extras["sv_carry"] = state["sv"]
     return res
 
 
@@ -132,34 +189,68 @@ def proxgd(prob: MTLProblem, lam: float = 1e-3, rounds: int = 200,
 def accproxgd(prob: MTLProblem, lam: float = 1e-3, rounds: int = 200,
               eta: float = None, init: str = "local", record_every: int = 1,
               runtime=None, scan: bool = True, sv_engine: str = "lazy",
-              sv_rank: int = None, **_) -> MTLResult:
+              sv_rank: int = None, batch_size: int = None,
+              local_steps: int = None, batch_seed: int = 0, init_W=None,
+              sv_carry=None, keep_sv_carry: bool = False, **_) -> MTLResult:
     rt = default_runtime(prob, runtime)
     if eta is None:
         eta = 1.0 / data_smoothness(prob)
     m = prob.m
     sv = spectral.shrink_engine(prob, sv_engine, rank=sv_rank)
+    sgd = stochastic_config(prob, batch_size, local_steps, rt.data_shards)
 
-    def body(k, state, data):
-        W, Z, t = state["W"], state["Z"], state["t"]
-        G = _grad_columns(rt, prob, Z, data, "gradient at Z")
-        W_new, _, svc = sv.shrink(Z - eta * m * G, eta * m * lam,
-                                  state["sv"])                  # (3.4)
-        t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
-        Z_new = W_new + ((t - 1.0) / t_new) * (W_new - W)       # (3.5)
-        return {"W": W_new, "Z": rt.broadcast(Z_new, "updated Z column"),
-                "t": t_new, "sv": svc}
+    if sgd is None:
+        def body(k, state, data):
+            W, Z, t = state["W"], state["Z"], state["t"]
+            G = _grad_columns(rt, prob, Z, data, "gradient at Z")
+            W_new, _, svc = sv.shrink(Z - eta * m * G, eta * m * lam,
+                                      state["sv"])              # (3.4)
+            t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+            Z_new = W_new + ((t - 1.0) / t_new) * (W_new - W)   # (3.5)
+            return {"W": W_new,
+                    "Z": rt.broadcast(Z_new, "updated Z column"),
+                    "t": t_new, "sv": svc}
+    else:
+        B, L = sgd
 
-    W0 = _init_W(prob, init)
-    sv0 = sv.init_carry()
+        def body(k, state, data):
+            # local steps descend the momentum sequence Z's columns
+            # (the point (3.4) evaluates the gradient at); the master
+            # shrinks the gathered locally-stepped columns and rebuilds
+            # the Nesterov extrapolation — 2 charged vectors per round,
+            # exactly Table 1.
+            W, Z, t = state["W"], state["Z"], state["t"]
+            Zl = rt.local_slice(Z)
+            for i in range(L):
+                G = worker_ops.minibatch_grad_columns(
+                    prob.loss, Zl, data, prob.l2, rt=rt, seed=batch_seed,
+                    round_k=k, local_step=i, batch_size=B) / m
+                Zl = Zl - eta * m * G
+            Z_stepped = rt.gather_columns(Zl, "locally stepped Z columns")
+            W_new, _, svc = sv.shrink(Z_stepped, eta * m * lam,
+                                      state["sv"])
+            t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+            Z_new = W_new + ((t - 1.0) / t_new) * (W_new - W)
+            return {"W": W_new,
+                    "Z": rt.broadcast(Z_new, "updated Z column"),
+                    "t": t_new, "sv": svc}
+
+    W0 = _init_W(prob, init, init_W)
+    sv0 = _sv_carry0(sv, sv_carry)
     state = {"W": W0, "Z": W0, "t": jnp.array(1.0, W0.dtype), "sv": sv0}
     res = MTLResult("accproxgd", state["W"], rt.comm,
                     extras={"lam": lam, "eta": eta, "sv_engine": sv.mode})
+    if sgd is not None:
+        res.extras.update(batch_size=sgd[0], local_steps=sgd[1])
     res.record(0, state["W"])
     state = rt.run_rounds(rounds, body, state, scan=scan,
                           record=iterate_recorder(res, record_every),
-                          data_leaves=gram_round_leaves(prob))
+                          data_leaves=gram_round_leaves(prob) if sgd is None
+                          else stochastic_round_leaves(prob))
     res.W = state["W"]
     res.extras.update(sv.stats(state["sv"]))
+    if keep_sv_carry:
+        res.extras["sv_carry"] = state["sv"]
     return res
 
 
@@ -167,7 +258,9 @@ def accproxgd(prob: MTLProblem, lam: float = 1e-3, rounds: int = 200,
 def admm(prob: MTLProblem, lam: float = 1e-3, rho: float = 1.0,
          rounds: int = 200, record_every: int = 1, newton_iters: int = 8,
          runtime=None, scan: bool = True, sv_engine: str = "lazy",
-         sv_rank: int = None, **_) -> MTLResult:
+         sv_rank: int = None, batch_size: int = None,
+         local_steps: int = None, batch_seed: int = 0,
+         sv_carry=None, keep_sv_carry: bool = False, **_) -> MTLResult:
     """Appendix A. Worker step (A.1) is a regularized ERM:
         w_j+ = argmin_w L_nj(w)/m + <w - z_j, q_j> + rho/2 ||w - z_j||^2.
     Squared loss: closed form (from the Gram cache when present —
@@ -175,37 +268,72 @@ def admm(prob: MTLProblem, lam: float = 1e-3, rho: float = 1.0,
     under 2-D sharding). Logistic: a few Newton steps (strongly convex
     objective, Newton converges fast), reducing per step across data
     shards.  All of it dispatched by ``worker_ops.prox_columns``.
+
+    Stochastic path (``batch_size``/``local_steps``, DESIGN.md §13):
+    the closed-form (A.1) solve is replaced by ``local_steps``
+    prox-gradient steps on the SAME augmented Lagrangian, each using a
+    seeded mini-batch gradient — an inexact-ADMM worker, still 3
+    charged vectors per round.
     """
     rt = default_runtime(prob, runtime)
     loss, m, p = prob.loss, prob.m, prob.p
     sv = spectral.shrink_engine(prob, sv_engine, rank=sv_rank)
+    sgd = stochastic_config(prob, batch_size, local_steps, rt.data_shards)
 
-    def body(k, state, data):
-        W_local, Z, Q = state["W"], state["Z"], state["Q"]
-        z_loc, q_loc = rt.local_slice(Z), rt.local_slice(Q)
-        W_local = worker_ops.prox_columns(loss, data, z_loc, q_loc, W_local,
-                                          rho, m, prob.l2,
-                                          iters=newton_iters, rt=rt)
-        W_full = rt.gather_columns(W_local, "local w")
-        Z_new, _, svc = sv.shrink(W_full + Q / rho, lam / rho,
-                                  state["sv"])                    # (A.2)
-        Q_new = Q + rho * (W_full - Z_new)                        # (A.3)
-        return {"W": W_local,
-                "Z": rt.broadcast(Z_new, "z columns"),
-                "Q": rt.broadcast(Q_new, "q columns"), "sv": svc}
+    if sgd is None:
+        def body(k, state, data):
+            W_local, Z, Q = state["W"], state["Z"], state["Q"]
+            z_loc, q_loc = rt.local_slice(Z), rt.local_slice(Q)
+            W_local = worker_ops.prox_columns(loss, data, z_loc, q_loc,
+                                              W_local, rho, m, prob.l2,
+                                              iters=newton_iters, rt=rt)
+            W_full = rt.gather_columns(W_local, "local w")
+            Z_new, _, svc = sv.shrink(W_full + Q / rho, lam / rho,
+                                      state["sv"])                # (A.2)
+            Q_new = Q + rho * (W_full - Z_new)                    # (A.3)
+            return {"W": W_local,
+                    "Z": rt.broadcast(Z_new, "z columns"),
+                    "Q": rt.broadcast(Q_new, "q columns"), "sv": svc}
+    else:
+        B, L = sgd
+        # the augmented Lagrangian's per-column smoothness is the data
+        # smoothness of L_nj/m plus the rho-quadratic's curvature
+        eta_w = 1.0 / (data_smoothness(prob) / m + rho)
+
+        def body(k, state, data):
+            W_local, Z, Q = state["W"], state["Z"], state["Q"]
+            z_loc, q_loc = rt.local_slice(Z), rt.local_slice(Q)
+            Wl = W_local
+            for i in range(L):
+                g = worker_ops.minibatch_grad_columns(
+                    loss, Wl, data, prob.l2, rt=rt, seed=batch_seed,
+                    round_k=k, local_step=i, batch_size=B)
+                Wl = Wl - eta_w * (g / m + q_loc + rho * (Wl - z_loc))
+            W_full = rt.gather_columns(Wl, "local w")
+            Z_new, _, svc = sv.shrink(W_full + Q / rho, lam / rho,
+                                      state["sv"])
+            Q_new = Q + rho * (W_full - Z_new)
+            return {"W": Wl,
+                    "Z": rt.broadcast(Z_new, "z columns"),
+                    "Q": rt.broadcast(Q_new, "q columns"), "sv": svc}
 
     W0 = jnp.zeros((p, m), prob.Xs.dtype)
-    state = {"W": W0, "Z": W0, "Q": W0, "sv": sv.init_carry()}
+    state = {"W": W0, "Z": W0, "Q": W0, "sv": _sv_carry0(sv, sv_carry)}
     res = MTLResult("admm", state["W"], rt.comm,
                     extras={"lam": lam, "rho": rho, "sv_engine": sv.mode})
+    if sgd is not None:
+        res.extras.update(batch_size=sgd[0], local_steps=sgd[1])
     res.record(0, state["W"])
     # consensus variable Z is the estimator
     state = rt.run_rounds(rounds, body, state, sharded=("W",), scan=scan,
                           record=iterate_recorder(res, record_every,
                                                   key="Z"),
-                          data_leaves=gram_round_leaves(prob))
+                          data_leaves=gram_round_leaves(prob) if sgd is None
+                          else stochastic_round_leaves(prob))
     res.W = state["Z"]
     res.extras.update(sv.stats(state["sv"]))
+    if keep_sv_carry:
+        res.extras["sv_carry"] = state["sv"]
     return res
 
 

@@ -33,29 +33,71 @@ from .. import worker_ops
 from ..spectral import leading_sv
 from ..svd_ops import gram_schmidt_append
 from .base import (MTLProblem, MTLResult, default_runtime, gram_round_leaves,
-                   iterate_recorder, register)
+                   iterate_recorder, register, stochastic_config,
+                   stochastic_round_leaves)
 
 
 def _subspace_pursuit(prob: MTLProblem, rounds: int, direction: str,
                       record_every: int, sv_iters: int, l2: float,
                       newton_damping: float = 1e-6, runtime=None,
-                      scan: bool = True) -> MTLResult:
+                      scan: bool = True, batch_size: int = None,
+                      local_steps: int = None,
+                      batch_seed: int = 0) -> MTLResult:
     rt = default_runtime(prob, runtime)
     m, p = prob.m, prob.p
     loss = prob.loss
     max_k = rounds
     name = "dgsp" if direction == "gradient" else "dnsp"
+    sgd = stochastic_config(prob, batch_size, local_steps, rt.data_shards)
 
-    def messages(W_local, data):
+    def messages(W_local, data, k):
+        if sgd is not None:
+            # local step 0 is reserved for the round's worker message;
+            # the refit's projected SGD steps fold steps 1..L so every
+            # draw in a round is distinct
+            if direction == "newton":
+                return worker_ops.minibatch_newton_columns(
+                    loss, W_local, data, prob.l2, newton_damping, rt=rt,
+                    seed=batch_seed, round_k=k, local_step=0,
+                    batch_size=sgd[0])
+            return worker_ops.minibatch_grad_columns(
+                loss, W_local, data, prob.l2, rt=rt, seed=batch_seed,
+                round_k=k, local_step=0, batch_size=sgd[0]) / m
         if direction == "newton":
             return worker_ops.newton_columns(loss, W_local, data, prob.l2,
                                              newton_damping, rt=rt)
         return worker_ops.grad_columns(loss, W_local, data, prob.l2,
                                        rt=rt) / m
 
+    if sgd is not None:
+        # the projected refit's smoothness: with orthonormal columns of
+        # U, the projected per-task Gram U^T A_j U inherits the data
+        # spectral bound, so the full-batch step size is safe for the
+        # stochastic projected SGD too
+        from .convex import data_smoothness
+        eta_v = 1.0 / data_smoothness(prob)
+
+    def refit(Um, V, W_local, data, k):
+        """The per-round local refit v_j = argmin_v L_nj(U v): exact
+        projected ERM in the full-batch path; ``local_steps`` seeded
+        projected SGD steps on the codes (communication-free — no
+        tasks-axis primitive in the unrolled loop) in the stochastic
+        path."""
+        if sgd is None:
+            W_local, _ = worker_ops.projected_solves(loss, Um, data, l2,
+                                                     rt=rt)
+            return W_local, V
+        B, L = sgd
+        for i in range(L):
+            g = worker_ops.minibatch_grad_columns(
+                loss, Um @ V, data, max(l2, 1e-9), rt=rt, seed=batch_seed,
+                round_k=k, local_step=i + 1, batch_size=B)
+            V = V - eta_v * (Um.T @ g)
+        return Um @ V, V
+
     def body(k, state, data):
         U, mask, W_local = state["U"], state["mask"], state["W"]
-        G_local = messages(W_local, data)
+        G_local = messages(W_local, data, k)
         G = rt.gather_columns(
             G_local, "gradient" if direction == "gradient" else "newton dir")
         u, _, _ = leading_sv(G, iters=sv_iters)        # master
@@ -65,17 +107,28 @@ def _subspace_pursuit(prob: MTLProblem, rounds: int, direction: str,
         U = U.at[:, k].set(u)                          # workers append
         mask = mask.at[k].set(1.0)
         Um = U * mask[None, :]
-        W_local, _ = worker_ops.projected_solves(loss, Um, data, l2, rt=rt)
-        return {"U": U, "mask": mask, "W": W_local}
+        W_local, V = refit(Um, state.get("V"), W_local, data, k)
+        out = {"U": U, "mask": mask, "W": W_local}
+        if sgd is not None:
+            out["V"] = V
+        return out
 
     state = {"U": jnp.zeros((p, max_k), prob.Xs.dtype),
              "mask": jnp.zeros((max_k,), prob.Xs.dtype),
              "W": jnp.zeros((p, m), prob.Xs.dtype)}
+    sharded = ("W",)
+    if sgd is not None:
+        # the codes are worker state like W: (max_k, m) task columns
+        state["V"] = jnp.zeros((max_k, m), prob.Xs.dtype)
+        sharded = ("W", "V")
     res = MTLResult(name, state["W"], rt.comm)
+    if sgd is not None:
+        res.extras.update(batch_size=sgd[0], local_steps=sgd[1])
     res.record(0, state["W"])
-    state = rt.run_rounds(rounds, body, state, sharded=("W",), scan=scan,
+    state = rt.run_rounds(rounds, body, state, sharded=sharded, scan=scan,
                           record=iterate_recorder(res, record_every),
-                          data_leaves=gram_round_leaves(prob))
+                          data_leaves=gram_round_leaves(prob) if sgd is None
+                          else stochastic_round_leaves(prob))
     res.W = state["W"]
     res.extras["U"] = state["U"]
     res.extras["mask"] = state["mask"]
@@ -85,20 +138,25 @@ def _subspace_pursuit(prob: MTLProblem, rounds: int, direction: str,
 @register("dgsp")
 def dgsp(prob: MTLProblem, rounds: int = 20, record_every: int = 1,
          sv_iters: int = 60, l2: float = 0.0, runtime=None,
-         scan: bool = True, **_) -> MTLResult:
+         scan: bool = True, batch_size: int = None, local_steps: int = None,
+         batch_seed: int = 0, **_) -> MTLResult:
     return _subspace_pursuit(prob, rounds, "gradient", record_every,
                              sv_iters, l2 if l2 else prob.l2,
-                             runtime=runtime, scan=scan)
+                             runtime=runtime, scan=scan,
+                             batch_size=batch_size, local_steps=local_steps,
+                             batch_seed=batch_seed)
 
 
 @register("dnsp")
 def dnsp(prob: MTLProblem, rounds: int = 20, record_every: int = 1,
          sv_iters: int = 60, l2: float = 0.0, damping: float = 1e-4,
-         runtime=None, scan: bool = True, **_) -> MTLResult:
+         runtime=None, scan: bool = True, batch_size: int = None,
+         local_steps: int = None, batch_seed: int = 0, **_) -> MTLResult:
     return _subspace_pursuit(prob, rounds, "newton", record_every,
                              sv_iters, l2 if l2 else prob.l2,
                              newton_damping=damping, runtime=runtime,
-                             scan=scan)
+                             scan=scan, batch_size=batch_size,
+                             local_steps=local_steps, batch_seed=batch_seed)
 
 
 @register("altmin")

@@ -160,6 +160,104 @@ def grad_columns(loss: Loss, W_cols: jnp.ndarray,
     return G
 
 
+# ---------------------------------------------------------------------------
+# stochastic worker path (DESIGN.md §13): a seeded, device-resident
+# batch sampler + the mini-batch gradient/Newton messages built on it
+# ---------------------------------------------------------------------------
+def batch_indices(seed: int, task_ids: jnp.ndarray, round_k, local_step,
+                  batch_size: int, n_local: int, shard=0) -> jnp.ndarray:
+    """Per-task mini-batch row indices ``(L, batch_size)`` into this
+    shard's ``n_local`` local rows.
+
+    Deterministic by construction: each task's key is a fold_in chain
+    over ``(seed, global task id, round, local step, data-shard
+    index)`` — no carried RNG state rides in the solver loop, so the
+    draw is identical across backends, drivers and layouts (sim and
+    mesh fold the same global ids; a 1-D layout folds shard 0, a 2-D
+    layout folds each shard's index over the same named axis).
+
+    ``batch_size == n_local`` returns ``arange(n_local)`` — the natural
+    row order, so the degenerate mini-batch touches exactly the rows of
+    the full-batch raw path in the same order and its gradient is
+    bit-identical to ``grad_columns``'s (the anchor of the degeneracy
+    rule; property-tested).  Smaller batches sample WITH replacement
+    (the unbiased-SGD convention of arXiv 1802.03830).
+    """
+    B, n_local = int(batch_size), int(n_local)
+    L = task_ids.shape[0]
+    if B == n_local:
+        return jnp.broadcast_to(jnp.arange(n_local, dtype=jnp.int32),
+                                (L, n_local))
+
+    def one(tid):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), tid)
+        key = jax.random.fold_in(key, round_k)
+        key = jax.random.fold_in(key, local_step)
+        key = jax.random.fold_in(key, shard)
+        return jax.random.randint(key, (B,), 0, n_local, dtype=jnp.int32)
+
+    return jax.vmap(one)(task_ids)
+
+
+def _sample_batch(data: Dict[str, jnp.ndarray], rt, seed: int, round_k,
+                  local_step, batch_size: int
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Gather one seeded mini-batch ``(Xb (L, B_loc, p), yb (L, B_loc))``
+    from the worker-local rows.  ``batch_size`` is the GLOBAL per-task
+    batch; each data shard draws ``batch_size / data_shards`` of its
+    local rows under its own folded shard index."""
+    Xs, ys = data["Xs"], data["ys"]
+    D = rt.data_shards if rt is not None else 1
+    idx = batch_indices(seed, data["task_ids"], round_k, local_step,
+                        batch_size // D, Xs.shape[1],
+                        shard=rt.data_index() if rt is not None else 0)
+    Xb = jax.vmap(lambda X, i: X[i])(Xs, idx)
+    yb = jax.vmap(lambda y, i: y[i])(ys, idx)
+    return Xb, yb
+
+
+def minibatch_grad_columns(loss: Loss, W_cols: jnp.ndarray,
+                           data: Dict[str, jnp.ndarray], l2: float = 0.0,
+                           rt=None, *, seed: int, round_k, local_step,
+                           batch_size: int) -> jnp.ndarray:
+    """Per-task MINI-BATCH gradient columns (p, L): ``grad_columns`` on
+    a seeded batch of sampled rows instead of the full local data.
+
+    Communication-free along the tasks axis by construction — the body
+    of a local step calls no runtime primitive there (the static
+    verifier proves it on the traced program); under a 2-D layout the
+    per-shard batch gradients pmean-reduce over the data axis exactly
+    like the full-batch raw path.  Callers apply the global 1/m factor
+    themselves, as with ``grad_columns``.
+    """
+    Xb, yb = _sample_batch(data, rt, seed, round_k, local_step, batch_size)
+    G = jax.vmap(lambda w, X, y: lm.task_grad(loss, w, X, y),
+                 in_axes=(1, 0, 0), out_axes=1)(W_cols, Xb, yb)
+    G = _pmean(rt, G, "minibatch gradient shards")
+    if l2:
+        G = G + l2 * W_cols
+    return G
+
+
+def minibatch_newton_columns(loss: Loss, W_cols: jnp.ndarray,
+                             data: Dict[str, jnp.ndarray], l2: float = 0.0,
+                             damping: float = 1e-6, rt=None, *, seed: int,
+                             round_k, local_step, batch_size: int
+                             ) -> jnp.ndarray:
+    """DNSP's stochastic worker messages: the Newton direction of the
+    MINI-BATCH objective — gradient and Hessian both evaluated on the
+    same seeded batch (each pmean-reduced over the data axis before the
+    solve under 2-D, mirroring ``newton_columns``'s raw path)."""
+    Xb, yb = _sample_batch(data, rt, seed, round_k, local_step, batch_size)
+    p = W_cols.shape[0]
+    eye = jnp.eye(p, dtype=W_cols.dtype)
+    g, H = _grad_hess(loss, W_cols, Xb, yb, l2)
+    g = _pmean(rt, g, "minibatch newton grad shards")
+    H = _pmean(rt, H, "minibatch newton hess shards")
+    return jax.vmap(lambda Hj, gj: jnp.linalg.solve(Hj + damping * eye, gj),
+                    in_axes=(0, 1), out_axes=1)(H, g)
+
+
 def newton_columns(loss: Loss, W_cols: jnp.ndarray,
                    data: Dict[str, jnp.ndarray], l2: float = 0.0,
                    damping: float = 1e-6, rt=None) -> jnp.ndarray:

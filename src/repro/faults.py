@@ -268,44 +268,64 @@ def _free_port() -> int:
         return s.getsockname()[1]
 
 
-def _mp_ranks(nprocs: int, port: int, extra: List[str],
+_BIND_CLASH_MARKERS = (b"ddress already in use", b"Failed to bind",
+                       b"EADDRINUSE")
+
+
+def _mp_ranks(nprocs: int, extra: List[str],
               fault_rank: Optional[int] = None,
               plan: Optional[FaultPlan] = None,
-              devices: int = 4, timeout: float = 240.0) -> List[int]:
+              devices: int = 4, timeout: float = 240.0,
+              bind_retries: int = 3) -> List[int]:
     """Launch all ranks, wait for them (killing stragglers a dead peer
-    left blocked in a collective), return the exit codes."""
-    procs = []
-    for rank in range(nprocs):
-        env = _child_env(devices,
-                         plan if rank == fault_rank else None)
-        args = [sys.executable, "-m", "repro.faults", "mp-child",
-                "--rank", str(rank), "--nprocs", str(nprocs),
-                "--port", str(port)] + extra
-        procs.append(subprocess.Popen(args, env=env,
-                                      stdout=subprocess.PIPE,
-                                      stderr=subprocess.STDOUT))
-    deadline = time.time() + timeout
-    codes: List[Optional[int]] = [None] * nprocs
-    outs = [b""] * nprocs
-    while time.time() < deadline and any(c is None for c in codes):
+    left blocked in a collective), return the exit codes.
+
+    The coordinator port is picked HERE, per attempt: ``_free_port``'s
+    probe socket closes before the coordinator binds, so another
+    process (a parallel CI job, an unrelated service) can steal the
+    port in the window.  A launch whose output shows a bind clash is
+    not a test failure — it is retried on a fresh port, up to
+    ``bind_retries`` times, before the codes count."""
+    for attempt in range(bind_retries):
+        port = _free_port()
+        procs = []
+        for rank in range(nprocs):
+            env = _child_env(devices,
+                             plan if rank == fault_rank else None)
+            args = [sys.executable, "-m", "repro.faults", "mp-child",
+                    "--rank", str(rank), "--nprocs", str(nprocs),
+                    "--port", str(port)] + extra
+            procs.append(subprocess.Popen(args, env=env,
+                                          stdout=subprocess.PIPE,
+                                          stderr=subprocess.STDOUT))
+        deadline = time.time() + timeout
+        codes: List[Optional[int]] = [None] * nprocs
+        outs = [b""] * nprocs
+        while time.time() < deadline and any(c is None for c in codes):
+            for i, p in enumerate(procs):
+                if codes[i] is None and p.poll() is not None:
+                    outs[i] = p.stdout.read()
+                    codes[i] = p.returncode
+            time.sleep(0.2)
         for i, p in enumerate(procs):
-            if codes[i] is None and p.poll() is not None:
+            if codes[i] is None:
+                # a peer died mid-collective and left this rank blocked
+                # — exactly what a real preemption does to survivors
+                p.kill()
                 outs[i] = p.stdout.read()
                 codes[i] = p.returncode
-        time.sleep(0.2)
-    for i, p in enumerate(procs):
-        if codes[i] is None:
-            # a peer died mid-collective and left this rank blocked —
-            # exactly what a real preemption does to the survivors
-            p.kill()
-            outs[i] = p.stdout.read()
-            codes[i] = p.returncode
-    if fault_rank is None and any(c != 0 for c in codes):
-        raise RuntimeError(
-            "multi-process ranks failed: "
-            + "; ".join(f"rank{i}={c}" for i, c in enumerate(codes))
-            + "\n" + b"\n".join(outs).decode(errors="replace")[-3000:])
-    return [c if c is not None else -9 for c in codes]
+        clash = any(c != 0 for c in codes) and any(
+            m in o for o in outs for m in _BIND_CLASH_MARKERS)
+        if clash and attempt < bind_retries - 1:
+            continue
+        if fault_rank is None and any(c != 0 for c in codes):
+            raise RuntimeError(
+                "multi-process ranks failed: "
+                + "; ".join(f"rank{i}={c}" for i, c in enumerate(codes))
+                + "\n"
+                + b"\n".join(outs).decode(errors="replace")[-3000:])
+        return [c if c is not None else -9 for c in codes]
+    raise AssertionError("unreachable")
 
 
 def run_multiprocess_case(workdir: Optional[str] = None,
@@ -322,13 +342,13 @@ def run_multiprocess_case(workdir: Optional[str] = None,
     res_out = os.path.join(work, "mp_resumed.npz")
 
     # uninterrupted 2-process baseline (no checkpointing)
-    _mp_ranks(nprocs, _free_port(), ["--out", base_out], devices=devices)
+    _mp_ranks(nprocs, ["--out", base_out], devices=devices)
     # kill rank 1 after the second durable segment
-    codes = _mp_ranks(nprocs, _free_port(), ["--ckpt-dir", ckpt_dir],
+    codes = _mp_ranks(nprocs, ["--ckpt-dir", ckpt_dir],
                       fault_rank=1, plan=FaultPlan("sigkill", after=2),
                       devices=devices)
     # fresh launch resumes the store
-    _mp_ranks(nprocs, _free_port(),
+    _mp_ranks(nprocs,
               ["--ckpt-dir", ckpt_dir, "--resume", "--out", res_out],
               devices=devices)
 

@@ -226,6 +226,17 @@ class ProtocolRuntime:
         """Index of this worker view along the task axis (0 under sim)."""
         raise NotImplementedError
 
+    def data_index(self) -> jnp.ndarray:
+        """Index of this shard along the data axis (0 when
+        ``data_shards == 1``).  The stochastic batch sampler folds it
+        into its key chain so each shard of a 2-D layout draws its own
+        rows of a mini-batch (``worker_ops.batch_indices``, DESIGN.md
+        §13); both backends expose the same named axis when sharded
+        (a mesh axis, or the sim emulation's vmapped axis)."""
+        if self.data_shards == 1:
+            return jnp.int32(0)
+        return jax.lax.axis_index(self.data_axis)
+
     def local_slice(self, x: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
         """This worker view's task-columns of a replicated master array.
 

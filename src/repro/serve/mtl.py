@@ -328,7 +328,12 @@ class MTLServer:
         self.B = int(batch_size)
         self.mesh, self.axis = mesh, axis
         self._lock = threading.Lock()
+        # (monotonic install time, version id) per install — the
+        # streaming loop's staleness probe (sample arrival -> the swap
+        # that first serves a model trained on it, DESIGN.md §13)
+        self.swap_log: list = []
         self._state: _ServeState = self._prepare(model)
+        self.swap_log.append((time.monotonic(), self._state.version))
 
     # -- state building / swapping -------------------------------------
     def _prepare(self, model: FactoredModel,
@@ -354,6 +359,7 @@ class MTLServer:
         """Rebind the served state (CALL UNDER self._lock): every
         install bumps the generation token."""
         self._state = dataclasses.replace(state, gen=self._state.gen + 1)
+        self.swap_log.append((time.monotonic(), self._state.version))
 
     def swap(self, model: FactoredModel, step: Optional[int] = None) -> str:
         """Install a new model version; in-flight waves finish on the

@@ -8,17 +8,20 @@ import importlib
 
 __all__ = ["TrainConfig", "make_train_step", "make_serve_step",
            "train_loop", "load_checkpoint", "save_checkpoint",
-           "checkpoint"]
+           "checkpoint", "SampleStream", "ReservoirBuffer",
+           "StreamingResolver", "streaming"]
 
 _LAZY = {"TrainConfig": "steps", "make_train_step": "steps",
          "make_serve_step": "steps", "train_loop": "loop",
-         "load_checkpoint": "checkpoint", "save_checkpoint": "checkpoint"}
+         "load_checkpoint": "checkpoint", "save_checkpoint": "checkpoint",
+         "SampleStream": "streaming", "ReservoirBuffer": "streaming",
+         "StreamingResolver": "streaming"}
 
 
 def __getattr__(name):
     if name in _LAZY:
         return getattr(importlib.import_module(
             "." + _LAZY[name], __name__), name)
-    if name in ("steps", "loop", "checkpoint"):
+    if name in ("steps", "loop", "checkpoint", "streaming"):
         return importlib.import_module("." + name, __name__)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

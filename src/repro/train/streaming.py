@@ -1,0 +1,311 @@
+"""Closed train->serve loop: a streaming background re-solver (§13).
+
+The offline half of the system solves a FIXED problem; real deployments
+keep collecting samples.  This module closes the loop on the factored
+serving stack (``repro.serve.mtl``, DESIGN.md §10):
+
+* :class:`SampleStream` — a seeded stream of fresh per-task samples
+  drawn from the same ``W*`` generative model as ``repro.data.synthetic``
+  (the simulated production traffic of the streaming benchmarks).
+* :class:`ReservoirBuffer` — per-task fixed-capacity reservoirs
+  (algorithm R) over the stream.  Capacity stays at the initial
+  problem's ``n`` so every rebuilt :class:`~repro...base.MTLProblem`
+  has the SAME shapes — each ``refresh`` re-enters the solver's
+  existing jit cache instead of recompiling.
+* :class:`StreamingResolver` — ingest -> re-solve -> publish.  The
+  re-solve runs the stochastic worker path (``repro.solve(...,
+  batch_size=, local_steps=)``), warm-started from the previous
+  result's predictors (``init_W``) and spectral-engine carry
+  (``sv_carry`` — the §9 ShrinkEngine basis carries ACROSS solves the
+  same way it carries across rounds).  The refreshed predictors are
+  re-factorized (``MTLResult.factorize``), persisted through the
+  atomic model store (``FactoredModel.save``), and picked up by the
+  live :class:`~repro.serve.mtl.MTLServer` via ``maybe_reload`` — the
+  server's lock-free readers never block on a refresh.
+
+Staleness (DESIGN.md §13): for every publish, ``staleness_oldest`` is
+``publish time - earliest arrival`` over the samples ingested since the
+previous publish — the age of the oldest sample the served model had
+not yet seen (``staleness_newest`` is the same against the latest
+arrival).  Arrival times are host-side ``time.monotonic`` stamps taken
+at ``ingest``; publish time is stamped after ``maybe_reload`` returns.
+
+Everything here is HOST-side orchestration — the solver itself stays a
+pure device program; this module only rebuilds its inputs and moves its
+outputs into the store.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.methods.base import MTLProblem, STOCHASTIC_SOLVERS
+
+# solvers whose signatures accept a predictor warm start (init_W) /
+# a spectral-engine carry (sv_carry): the prox family re-enters from
+# the previous published iterate; ADMM re-uses the engine basis only
+# (its W/Z/Q splitting has no single warm iterate).
+WARM_INIT_SOLVERS = ("accproxgd", "proxgd")
+WARM_SV_SOLVERS = ("accproxgd", "admm", "proxgd")
+
+
+class SampleStream:
+    """Seeded per-task sample stream from the ``W*`` generative model.
+
+    Each :meth:`draw` returns ``count`` fresh rows per task, keyed on
+    ``(seed, draw index)`` — two streams with the same seed replay the
+    same sample sequence, which is what makes the warm-vs-cold
+    benchmark a controlled comparison.
+    """
+
+    def __init__(self, Wstar, Sigma, noise: float = 1.0,
+                 task: str = "regression", seed: int = 0):
+        self.Wstar = jnp.asarray(Wstar)
+        self.p, self.m = self.Wstar.shape
+        Sigma = jnp.asarray(Sigma)
+        self.chol = jnp.linalg.cholesky(
+            Sigma + 1e-9 * jnp.eye(self.p, dtype=Sigma.dtype))
+        self.noise = float(noise)
+        if task not in ("regression", "classification"):
+            raise ValueError(f"unknown task {task!r}")
+        self.task = task
+        self.seed = int(seed)
+        self._tick = 0
+
+    def draw(self, count: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Next ``count`` samples per task: ``(m, count, p), (m, count)``."""
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), self._tick)
+        self._tick += 1
+        kx, ky = jax.random.split(key)
+        Z = jax.random.normal(kx, (self.m, int(count), self.p),
+                              self.Wstar.dtype)
+        Xs = Z @ self.chol.T
+        margins = jnp.einsum("mnp,pm->mn", Xs, self.Wstar)
+        if self.task == "regression":
+            ys = margins + self.noise * jax.random.normal(ky, margins.shape)
+        else:
+            prob1 = jax.nn.sigmoid(margins)
+            ys = jnp.where(jax.random.uniform(ky, margins.shape) < prob1,
+                           1.0, -1.0)
+        return Xs, ys
+
+
+class ReservoirBuffer:
+    """Per-task algorithm-R reservoirs over the sample stream.
+
+    Capacity is fixed at construction (the initial problem's ``n``):
+    until a task has seen ``capacity`` samples the buffer fills in
+    order; afterwards each new sample replaces a uniformly random slot
+    with probability ``capacity / seen`` — every sample ever streamed
+    is in the reservoir with equal probability.  Replacement draws come
+    from a seeded ``numpy`` generator (host-side state: the buffers are
+    mutable host arrays, converted to device arrays only when a refresh
+    rebuilds the problem).
+    """
+
+    def __init__(self, Xs, ys, seed: int = 0):
+        self.Xs = np.array(Xs)            # (m, cap, p) — owned, mutable
+        self.ys = np.array(ys)            # (m, cap)
+        self.m, self.capacity, self.p = self.Xs.shape
+        self.seen = int(self.capacity)    # per task; fills start full
+        self._rng = np.random.default_rng(int(seed))
+
+    def add(self, Xs_new, ys_new) -> int:
+        """Fold a fresh draw ``(m, t, p), (m, t)`` into the reservoirs.
+
+        Returns the number of rows (per task) that actually landed in a
+        reservoir slot this call."""
+        Xs_new, ys_new = np.asarray(Xs_new), np.asarray(ys_new)
+        if Xs_new.shape[0] != self.m or Xs_new.shape[2] != self.p:
+            raise ValueError(f"stream shape {Xs_new.shape} does not match "
+                             f"buffer (m={self.m}, p={self.p})")
+        kept = 0
+        for i in range(Xs_new.shape[1]):
+            self.seen += 1
+            # one shared slot decision per arrival keeps every task's
+            # reservoir a faithful uniform sample of ITS stream (the
+            # streams are task-aligned: row i arrived for all tasks)
+            j = int(self._rng.integers(self.seen))
+            if j < self.capacity:
+                self.Xs[:, j] = Xs_new[:, i]
+                self.ys[:, j] = ys_new[:, i]
+                kept += 1
+        return kept
+
+    def problem(self, template: MTLProblem) -> MTLProblem:
+        """Rebuild an :class:`MTLProblem` from the current reservoirs,
+        inheriting the template's loss and structural constants — same
+        shapes as the template, so solver jit caches are reused."""
+        return MTLProblem.make(
+            jnp.asarray(self.Xs), jnp.asarray(self.ys),
+            loss_name=template.loss.name,
+            gram=template.gram_A is not None,
+            A=template.A, r=template.r, l2=template.l2)
+
+
+class StreamingResolver:
+    """The closed loop: ingest samples -> re-solve -> publish.
+
+    One :meth:`step` (or one ``ingest`` + ``refresh`` pair) runs the
+    whole cycle synchronously; :meth:`start` wraps the same cycle in a
+    daemon thread for live serving.  The served
+    :class:`~repro.serve.mtl.MTLServer` is only ever touched through
+    its public ``maybe_reload`` — readers keep scoring lock-free
+    against the old snapshot until the swap lands.
+    """
+
+    def __init__(self, prob: MTLProblem, server, store_dir: str, *,
+                 method: str = "proxgd", rank: Optional[int] = None,
+                 rounds: int = 8, batch_size: Optional[int] = None,
+                 local_steps: Optional[int] = None, batch_seed: int = 0,
+                 warm_start: bool = True, warm_from=None,
+                 backend: str = "sim", buffer_seed: int = 0,
+                 solver_hp: Optional[Dict] = None):
+        if method not in STOCHASTIC_SOLVERS:
+            raise ValueError(
+                f"streaming re-solves run the stochastic worker path; "
+                f"method must be one of {STOCHASTIC_SOLVERS}, "
+                f"got {method!r}")
+        self.template = prob
+        self.server = server
+        self.store_dir = str(store_dir)
+        self.method = method
+        self.rank = int(rank if rank is not None else prob.r)
+        self.rounds = int(rounds)
+        self.batch_size = batch_size
+        self.local_steps = local_steps
+        self.batch_seed = int(batch_seed)
+        self.warm_start = bool(warm_start)
+        self.backend = backend
+        self.solver_hp = dict(solver_hp or {})
+        self.buffer = ReservoirBuffer(prob.Xs, prob.ys, seed=buffer_seed)
+        # warm-start carry: previous solve's predictors + engine carry.
+        # ``warm_from`` (an MTLResult, e.g. the initial offline solve)
+        # seeds the carry so the FIRST refresh is warm too.
+        self._prev_W = None if warm_from is None else warm_from.W
+        self._prev_sv = None if warm_from is None \
+            else warm_from.extras.get("sv_carry")
+        self._refresh_idx = 0
+        # arrival stamps (time.monotonic) of draws not yet published
+        self._pending_arrivals: List[float] = []
+        self.history: List[Dict] = []     # one report dict per refresh
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.error: Optional[BaseException] = None
+
+    # -- the loop body -------------------------------------------------
+    def ingest(self, Xs_new, ys_new,
+               arrival: Optional[float] = None) -> int:
+        """Fold a fresh stream draw into the reservoirs, stamping its
+        arrival time for the staleness ledger."""
+        self._pending_arrivals.append(
+            time.monotonic() if arrival is None else float(arrival))
+        return self.buffer.add(Xs_new, ys_new)
+
+    def refresh(self) -> Dict:
+        """Re-solve on the current reservoirs and publish.
+
+        Returns the refresh report (also appended to ``history``):
+        solve metadata, the published store step / served version, and
+        the staleness of the samples this publish absorbed."""
+        from .. import api
+
+        prob = self.buffer.problem(self.template)
+        hp = dict(self.solver_hp)
+        hp.setdefault("rounds", self.rounds)
+        if self.batch_size is not None:
+            hp["batch_size"] = self.batch_size
+        if self.local_steps is not None:
+            hp["local_steps"] = self.local_steps
+        if self.batch_size is not None or self.local_steps is not None:
+            # a fresh sub-stream of batch draws per refresh
+            hp["batch_seed"] = self.batch_seed + self._refresh_idx
+        warmed = False
+        if self.warm_start:
+            if self._prev_W is not None and self.method in WARM_INIT_SOLVERS:
+                hp["init_W"] = self._prev_W
+                warmed = True
+            if self._prev_sv is not None and self.method in WARM_SV_SOLVERS:
+                hp["sv_carry"] = self._prev_sv
+                warmed = True
+        if self.method in WARM_SV_SOLVERS:
+            hp["keep_sv_carry"] = True
+        t0 = time.monotonic()
+        res = api.solve(prob, method=self.method, backend=self.backend, **hp)
+        self._prev_W = res.W
+        self._prev_sv = res.extras.get("sv_carry")
+        model = res.factorize(self.rank)
+        step = model.save(self.store_dir)
+        reloaded = self.server.maybe_reload(self.store_dir) \
+            if self.server is not None else False
+        t_pub = time.monotonic()
+        arrivals, self._pending_arrivals = self._pending_arrivals, []
+        report = {
+            "refresh": self._refresh_idx,
+            "method": self.method,
+            "rounds": self.rounds,
+            "warm_started": warmed,
+            "samples_seen": self.buffer.seen,
+            "store_step": int(step),
+            "reloaded": bool(reloaded),
+            "served_version": getattr(self.server, "version", None),
+            "solve_s": t_pub - t0,
+            "staleness_oldest_s":
+                (t_pub - min(arrivals)) if arrivals else 0.0,
+            "staleness_newest_s":
+                (t_pub - max(arrivals)) if arrivals else 0.0,
+            "ingests_absorbed": len(arrivals),
+        }
+        self._refresh_idx += 1
+        self.history.append(report)
+        self._last_result = res
+        return report
+
+    def step(self, stream: SampleStream, count: int) -> Dict:
+        """One synchronous cycle: draw -> ingest -> refresh -> publish."""
+        Xs_new, ys_new = stream.draw(count)
+        self.ingest(Xs_new, ys_new)
+        return self.refresh()
+
+    # -- background wrapper --------------------------------------------
+    def start(self, stream: SampleStream, count: int,
+              interval_s: float = 0.0,
+              max_refreshes: Optional[int] = None) -> threading.Thread:
+        """Run :meth:`step` cycles in a daemon thread until
+        :meth:`stop` (or ``max_refreshes``).  Exceptions are captured
+        in ``self.error`` and end the loop."""
+        if self._thread is not None and self._thread.is_alive():
+            raise RuntimeError("streaming resolver already running")
+        self._stop.clear()
+
+        def loop():
+            try:
+                while not self._stop.is_set():
+                    if max_refreshes is not None \
+                            and self._refresh_idx >= max_refreshes:
+                        break
+                    self.step(stream, count)
+                    if interval_s:
+                        self._stop.wait(interval_s)
+            except BaseException as e:       # surfaced to the caller
+                self.error = e
+
+        self._thread = threading.Thread(
+            target=loop, name="streaming-resolver", daemon=True)
+        self._thread.start()
+        return self._thread
+
+    def stop(self, timeout: float = 30.0) -> None:
+        """Signal the background loop to finish and join it (re-raises
+        any exception the loop captured)."""
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout)
+            self._thread = None
+        if self.error is not None:
+            raise self.error

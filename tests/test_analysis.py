@@ -130,6 +130,32 @@ def test_collective_under_while_rejected():
     assert "while" in str(hits[0])
 
 
+def test_collective_inside_local_step_rejected():
+    """The local-step contract (DESIGN.md §13): the unrolled
+    communication-free steps between charged rounds must emit NO
+    tasks-axis primitive.  A body that sneaks a raw all-gather into one
+    of its local steps is rejected with COMM001 naming the equation —
+    the static proof behind 'local steps buy FLOPs, never wire'."""
+    def body(rt, k, state, data):
+        Wl = rt.local_slice(state["W"])
+        for i in range(3):              # "local" steps, unrolled like
+            Wl = Wl * 0.9               # the stochastic solver bodies
+            if i == 1:
+                # a worker peeking at its neighbours mid-local-step:
+                # an uncharged tasks-axis collective
+                full = jax.lax.all_gather(Wl, rt.axis, axis=1, tiled=True)
+                Wl = Wl + 0.0 * full[:, :Wl.shape[1]]
+        W = rt.gather_columns(Wl, "locally stepped columns")
+        return {"W": rt.broadcast(W, "updated predictor")}
+
+    trace, _, _ = _capture_body(body, method="rogue_local_step")
+    rep = check_trace(trace)
+    hits = [f for f in rep.findings if f.code == "COMM001"]
+    assert hits, rep.findings
+    msg = str(hits[0])
+    assert "all_gather" in msg and "'tasks'" in msg
+
+
 # ---------------------------------------------------------------------------
 # capture semantics: zero rounds executed, ledger identical to a real run
 # ---------------------------------------------------------------------------
@@ -319,6 +345,7 @@ def test_repo_lints_clean():
 # the positive matrix: all 11 solvers x 3 layouts x 2 drivers (subprocess
 # with 4 forced host devices; the CI static-verify job runs the same CLI)
 # ---------------------------------------------------------------------------
+@pytest.mark.slow
 def test_full_matrix_subprocess(tmp_path):
     env = dict(os.environ)
     env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
@@ -334,6 +361,11 @@ def test_full_matrix_subprocess(tmp_path):
     import json
     report = json.loads(out_json.read_text())
     assert report["ok"]
-    # 11 solvers x 3 layouts x 2 drivers
-    assert len(report["cases"]) == 66
+    # 11 solvers x 3 layouts x 2 drivers, plus the 5 stochastic
+    # configurations ("<method>+sgd", batch_size + local_steps) on the
+    # same layouts/drivers
+    assert len(report["cases"]) == 96
     assert all(c["ok"] for c in report["cases"])
+    labels = {c["method"] for c in report["cases"]}
+    assert {"proxgd+sgd", "accproxgd+sgd", "admm+sgd", "dgsp+sgd",
+            "dnsp+sgd"} <= labels

@@ -158,3 +158,67 @@ def test_chunked_ssd_equals_full_scan_property(S, chunk, I, N, seed):
                                atol=1e-4, rtol=1e-4)
     np.testing.assert_allclose(np.asarray(hf), np.asarray(h[:, -1]),
                                atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# the stochastic worker path (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(p=st.integers(2, 10), m=st.integers(1, 6), n=st.integers(2, 16),
+       loss_name=st.sampled_from(["squared", "logistic"]), seed=seeds)
+def test_minibatch_gradient_full_batch_parity(p, m, n, loss_name, seed):
+    """The degeneracy anchor: at batch_size == n the sampler yields the
+    natural row order, so the mini-batch gradient IS the raw full-batch
+    gradient — bit for bit, any loss, any shapes."""
+    from repro.core import worker_ops
+    X = _randn(seed, (m, n, p))
+    y = _randn(seed + 1, (m, n))
+    if loss_name == "logistic":
+        y = jnp.sign(y) + (y == 0)
+    W = _randn(seed + 2, (p, m))
+    data = {"Xs": X, "ys": y, "task_ids": jnp.arange(m, dtype=jnp.int32)}
+    loss = get_loss(loss_name)
+    full = worker_ops.grad_columns(loss, W, data, impl="xla")
+    mb = worker_ops.minibatch_grad_columns(
+        loss, W, data, seed=seed, round_k=3, local_step=1, batch_size=n)
+    assert jnp.array_equal(full, mb)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(1, 8), n=st.integers(2, 32), seed=seeds,
+       round_k=st.integers(0, 50), local_step=st.integers(0, 7),
+       shard=st.integers(0, 3))
+def test_batch_indices_seeded_pure_function(m, n, seed, round_k,
+                                            local_step, shard):
+    """Draws are a pure function of the key chain (seed, task id, round,
+    local step, shard): replayable, in-bounds, right shape — the
+    property that makes stochastic solves backend/driver/layout
+    deterministic without any RNG state in the solver loop."""
+    from repro.core.worker_ops import batch_indices
+    ids = jnp.arange(m, dtype=jnp.int32)
+    B = max(1, n // 2)
+    a = batch_indices(seed, ids, round_k, local_step, B, n, shard=shard)
+    b = batch_indices(seed, ids, round_k, local_step, B, n, shard=shard)
+    assert jnp.array_equal(a, b)
+    assert a.shape == (m, B) and a.dtype == jnp.int32
+    assert bool(jnp.all((a >= 0) & (a < n)))
+    # the GLOBAL task id keys the draw: reindexing tasks (a mesh layout
+    # change) cannot move any task's batch
+    sub = batch_indices(seed, ids[m // 2:], round_k, local_step, B, n,
+                        shard=shard)
+    assert jnp.array_equal(a[m // 2:], sub)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(1, 6), n=st.integers(1, 32), seed=seeds,
+       round_k=st.integers(0, 50), local_step=st.integers(0, 7))
+def test_batch_indices_full_batch_natural_order(m, n, seed, round_k,
+                                                local_step):
+    """B == n short-circuits to arange for EVERY key — no draw, no
+    reordering: the bitwise bridge between stochastic and exact paths."""
+    from repro.core.worker_ops import batch_indices
+    ids = jnp.arange(m, dtype=jnp.int32)
+    idx = batch_indices(seed, ids, round_k, local_step, n, n)
+    assert jnp.array_equal(
+        idx, jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (m, n)))

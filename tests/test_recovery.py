@@ -116,7 +116,7 @@ def test_corrupt_segment_falls_back_one_segment(tmp_path):
 # mesh matrix: one 4-device subprocess runs mesh × eager/scan × 1-D/2-D
 # ---------------------------------------------------------------------------
 MESH_SCRIPT = textwrap.dedent("""
-    import json, os, shutil, tempfile, warnings
+    import json, os, tempfile, warnings
     import numpy as np, jax
     assert len(jax.devices()) == 4, jax.devices()
     import repro
@@ -139,41 +139,49 @@ MESH_SCRIPT = textwrap.dedent("""
         for scan in (True, False):
             base = repro.solve(prob(), backend="mesh", data_shards=ds,
                                scan=scan, **KW)
-            d = tempfile.mkdtemp()
-            seg = repro.solve(prob(), backend="mesh", data_shards=ds,
-                              scan=scan, checkpoint_every=4, ckpt_dir=d,
-                              **KW)
-            ok_seg = (np.array_equal(np.asarray(base.W),
-                                     np.asarray(seg.W))
-                      and ledger(base) == ledger(seg))
-            for s in ck.available_steps(d)[1:]:
-                os.remove(os.path.join(d, f"step_{s:08d}.npz"))
-            with warnings.catch_warnings():
-                warnings.simplefilter("ignore")
-                res = repro.resume(d)
-            ok_res = (np.array_equal(np.asarray(base.W),
-                                     np.asarray(res.W))
-                      and ledger(base) == ledger(res)
-                      and base.extras["collective_floats_per_chip"]
-                          == res.extras["collective_floats_per_chip"]
-                      and base.extras["data_collective_floats_per_chip"]
-                          == res.extras["data_collective_floats_per_chip"]
-                      and all(np.array_equal(np.asarray(a), np.asarray(b))
-                              for a, b in zip(base.iterates, res.iterates)))
-            print(f"RCASE ds={ds} scan={int(scan)} seg={int(ok_seg)} "
-                  f"res={int(ok_res)} from="
-                  f"{res.extras['checkpoint']['resumed_from']}")
-            shutil.rmtree(d)
+            # TemporaryDirectory (not mkdtemp): the scratch store is
+            # removed even when an assertion/exception aborts this
+            # case — a leaked store must never survive into a rerun
+            with tempfile.TemporaryDirectory() as d:
+                seg = repro.solve(prob(), backend="mesh", data_shards=ds,
+                                  scan=scan, checkpoint_every=4,
+                                  ckpt_dir=d, **KW)
+                ok_seg = (np.array_equal(np.asarray(base.W),
+                                         np.asarray(seg.W))
+                          and ledger(base) == ledger(seg))
+                for s in ck.available_steps(d)[1:]:
+                    os.remove(os.path.join(d, f"step_{s:08d}.npz"))
+                with warnings.catch_warnings():
+                    warnings.simplefilter("ignore")
+                    res = repro.resume(d)
+                ok_res = (np.array_equal(np.asarray(base.W),
+                                         np.asarray(res.W))
+                          and ledger(base) == ledger(res)
+                          and base.extras["collective_floats_per_chip"]
+                              == res.extras["collective_floats_per_chip"]
+                          and base.extras["data_collective_floats_per_chip"]
+                              == res.extras[
+                                  "data_collective_floats_per_chip"]
+                          and all(np.array_equal(np.asarray(a),
+                                                 np.asarray(b))
+                                  for a, b in zip(base.iterates,
+                                                  res.iterates)))
+                print(f"RCASE ds={ds} scan={int(scan)} seg={int(ok_seg)} "
+                      f"res={int(ok_res)} from="
+                      f"{res.extras['checkpoint']['resumed_from']}")
     print("MESH_RECOVERY_DONE")
 """)
 
 
 @pytest.fixture(scope="module")
-def mesh_lines():
+def mesh_lines(tmp_path_factory):
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     env["PYTHONPATH"] = os.path.abspath(
         os.path.join(os.path.dirname(__file__), "..", "src"))
+    # scratch under pytest's pruned basetemp: even a SIGKILLed
+    # subprocess cannot leak stores into the shared system tmpdir
+    env["TMPDIR"] = str(tmp_path_factory.mktemp("mesh_recovery"))
     out = subprocess.run([sys.executable, "-c", MESH_SCRIPT], env=env,
                          capture_output=True, text=True, timeout=1800)
     assert out.returncode == 0, out.stdout + out.stderr

@@ -1,0 +1,299 @@
+"""The stochastic worker path (DESIGN.md §13): degeneracy, determinism,
+local-step accounting.
+
+The contract under test:
+
+* **Degeneracy rule** — ``batch_size=n, local_steps=1`` routes through
+  the EXACT full-batch program: bit-identical ``W``, ledger, and
+  measured collective floats (sim in-process; the mesh half of the
+  matrix runs in the 4-device subprocess below, both drivers, 1-D and
+  2-D layouts).
+* **Sampler determinism** — batch draws are a pure function of
+  ``(batch_seed, global task id, round, local step, data shard)``; the
+  same seed replays the same solve bit-for-bit, a different seed moves
+  the iterates.
+* **Local-step accounting** — ``local_steps > 1`` multiplies worker
+  FLOPs, not communication: the ledger (Table-1 tasks-axis units) is
+  bit-identical to the ``local_steps=1`` run of the same solver.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.core.methods import MTLProblem
+from repro.core.methods.base import STOCHASTIC_SOLVERS, stochastic_config
+from repro.core.worker_ops import batch_indices
+from repro.data.synthetic import SimSpec, generate
+
+jax.config.update("jax_platform_name", "cpu")
+
+HP = {
+    "proxgd": {"lam": 0.02, "rounds": 4},
+    "accproxgd": {"lam": 0.02, "rounds": 4},
+    "admm": {"lam": 0.02, "rho": 0.5, "rounds": 4},
+    "dgsp": {"rounds": 3},
+    "dnsp": {"rounds": 3, "damping": 0.5, "l2": 1e-3},
+}
+
+
+@pytest.fixture(scope="module")
+def prob():
+    spec = SimSpec(p=16, m=6, r=2, n=12)
+    Xs, ys, *_ = generate(jax.random.PRNGKey(0), spec)
+    return MTLProblem.make(Xs, ys, r=2)
+
+
+# ---------------------------------------------------------------------------
+# degeneracy rule (sim half; the mesh half is the subprocess matrix)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", STOCHASTIC_SOLVERS)
+def test_degenerate_config_is_bitwise_full_batch(prob, method):
+    """B=n, L=1 canonicalizes to the full-batch program — same W, same
+    ledger, same floats, bit for bit."""
+    full = repro.solve(prob, method=method, **HP[method])
+    degen = repro.solve(prob, method=method, batch_size=prob.n,
+                        local_steps=1, **HP[method])
+    assert jnp.array_equal(full.W, degen.W), method
+    assert full.comm.ledger() == degen.comm.ledger(), method
+    assert full.extras["collective_floats_per_chip"] \
+        == degen.extras["collective_floats_per_chip"], method
+    # the canonicalized solve does NOT advertise a stochastic config
+    assert "batch_size" not in degen.extras
+
+
+def test_stochastic_config_normalization(prob):
+    assert stochastic_config(prob, None, None) is None
+    assert stochastic_config(prob, None, 1) is None
+    assert stochastic_config(prob, prob.n, 1) is None
+    assert stochastic_config(prob, prob.n, 2) == (prob.n, 2)
+    assert stochastic_config(prob, 4, None) == (4, 1)
+    with pytest.raises(ValueError):
+        stochastic_config(prob, prob.n + 1, 1)
+    with pytest.raises(ValueError):
+        stochastic_config(prob, 0, 1)
+    with pytest.raises(ValueError):
+        stochastic_config(prob, 4, 0)
+    with pytest.raises(ValueError):
+        stochastic_config(prob, 5, 1, data_shards=2)
+
+
+def test_full_batch_solvers_reject_stochastic(prob):
+    with pytest.raises(ValueError, match="full-batch only"):
+        repro.solve(prob, method="dfw", batch_size=4, rounds=2)
+    with pytest.raises(ValueError, match="full-batch only"):
+        repro.solve(prob, method="local", local_steps=2)
+
+
+# ---------------------------------------------------------------------------
+# sampler determinism
+# ---------------------------------------------------------------------------
+
+def test_batch_indices_deterministic_and_seed_keyed():
+    ids = jnp.arange(6, dtype=jnp.int32)
+    a = batch_indices(0, ids, 2, 1, 4, 12)
+    b = batch_indices(0, ids, 2, 1, 4, 12)
+    assert jnp.array_equal(a, b)
+    assert a.shape == (6, 4)
+    assert bool(jnp.all((a >= 0) & (a < 12)))
+    # every key component moves the draw
+    for other in (batch_indices(1, ids, 2, 1, 4, 12),
+                  batch_indices(0, ids, 3, 1, 4, 12),
+                  batch_indices(0, ids, 2, 0, 4, 12),
+                  batch_indices(0, ids, 2, 1, 4, 12, shard=1)):
+        assert not jnp.array_equal(a, other)
+    # tasks draw independently (keyed on the GLOBAL task id)
+    assert not jnp.array_equal(a[0], a[1])
+
+
+def test_batch_indices_full_batch_is_natural_order():
+    """B == n_local short-circuits to arange — the bitwise anchor that
+    makes the degenerate gradient EQUAL the full-batch gradient."""
+    ids = jnp.arange(3, dtype=jnp.int32)
+    idx = batch_indices(7, ids, 5, 0, 8, 8)
+    assert jnp.array_equal(idx, jnp.broadcast_to(jnp.arange(8), (3, 8)))
+
+
+@pytest.mark.parametrize("method", ["proxgd", "dgsp"])
+def test_same_seed_replays_different_seed_moves(prob, method):
+    kw = dict(batch_size=4, local_steps=2, **HP[method])
+    a = repro.solve(prob, method=method, batch_seed=0, **kw)
+    b = repro.solve(prob, method=method, batch_seed=0, **kw)
+    c = repro.solve(prob, method=method, batch_seed=1, **kw)
+    assert jnp.array_equal(a.W, b.W)
+    assert not jnp.array_equal(a.W, c.W)
+    # the ledger is sample-independent: seeds never move accounting
+    assert a.comm.ledger() == c.comm.ledger()
+
+
+# ---------------------------------------------------------------------------
+# local-step accounting
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", STOCHASTIC_SOLVERS)
+def test_local_steps_are_communication_free(prob, method):
+    """L=1 vs L=4 at the same B: identical ledger and Table-1
+    vectors/round — local steps buy FLOPs, never wire."""
+    one = repro.solve(prob, method=method, batch_size=4, local_steps=1,
+                      **HP[method])
+    four = repro.solve(prob, method=method, batch_size=4, local_steps=4,
+                       **HP[method])
+    assert one.comm.ledger() == four.comm.ledger(), method
+    assert one.comm.per_round_vectors() == four.comm.per_round_vectors()
+    assert four.extras["local_steps"] == 4
+
+
+@pytest.mark.parametrize("method", STOCHASTIC_SOLVERS)
+def test_stochastic_ledger_matches_full_batch(prob, method):
+    """Mini-batching changes WHAT the workers send, never HOW MUCH: the
+    stochastic ledger equals the full-batch ledger of the same solver
+    in every accounted quantity (notes differ — the stochastic bodies
+    label their payloads honestly)."""
+    full = repro.solve(prob, method=method, **HP[method])
+    sgd = repro.solve(prob, method=method, batch_size=4, local_steps=2,
+                      **HP[method])
+    wire = lambda res: [e[:4] for e in res.comm.ledger()]  # noqa: E731
+    assert wire(full) == wire(sgd), method
+
+
+def test_scan_eager_parity_stochastic(prob):
+    """Both round drivers replay the same seeded draws."""
+    for method in ("proxgd", "admm"):
+        kw = dict(batch_size=4, local_steps=2, **HP[method])
+        s = repro.solve(prob, method=method, scan=True, **kw)
+        e = repro.solve(prob, method=method, scan=False, **kw)
+        np.testing.assert_allclose(s.W, e.W, rtol=1e-6, atol=1e-7)
+        assert s.comm.ledger() == e.comm.ledger()
+
+
+def test_verify_static_passes_stochastic(prob):
+    """The static verifier accepts the stochastic program (local steps
+    emit no tasks-axis collective; rounds charge Table-1 vectors)."""
+    res = repro.solve(prob, method="proxgd", batch_size=4, local_steps=3,
+                      verify="static", **HP["proxgd"])
+    assert res.extras["static_verify"] == "ok"
+
+
+# ---------------------------------------------------------------------------
+# convergence sanity: the stochastic rounds make progress
+# ---------------------------------------------------------------------------
+
+def test_stochastic_rounds_reduce_objective(prob):
+    def objective(W):
+        preds = jnp.einsum("mnp,pm->mn", prob.Xs, W)
+        return float(jnp.mean((preds - prob.ys) ** 2))
+
+    res = repro.solve(prob, method="proxgd", rounds=12, lam=0.02,
+                      batch_size=8, local_steps=2, record_every=1)
+    first = objective(res.iterates[0])
+    last = objective(res.W)
+    assert last < first, (first, last)
+
+
+# ---------------------------------------------------------------------------
+# mesh half of the degeneracy + parity matrix (4-device subprocess)
+# ---------------------------------------------------------------------------
+
+MESH_SCRIPT = textwrap.dedent("""
+    import jax, jax.numpy as jnp
+    assert len(jax.devices()) == 4, jax.devices()
+    import repro
+    from repro.core.methods import MTLProblem
+    from repro.core.methods.base import STOCHASTIC_SOLVERS
+    from repro.data.synthetic import SimSpec, generate
+    from repro.runtime import task_mesh, task_data_mesh
+
+    spec = SimSpec(p=16, m=8, r=2, n=12)
+    Xs, ys, *_ = generate(jax.random.PRNGKey(0), spec)
+    prob = MTLProblem.make(Xs, ys, r=2)
+    HP = {"proxgd": {"lam": 0.02, "rounds": 3},
+          "accproxgd": {"lam": 0.02, "rounds": 3},
+          "admm": {"lam": 0.02, "rho": 0.5, "rounds": 3},
+          "dgsp": {"rounds": 3}, "dnsp": {"rounds": 3, "damping": 0.5,
+                                          "l2": 1e-3}}
+    mesh1 = task_mesh()
+    mesh2 = task_data_mesh(data_shards=2)
+
+    for method in STOCHASTIC_SOLVERS:
+        hp = HP[method]
+        # degeneracy on mesh: B=n, L=1 == full batch, bit for bit
+        full = repro.solve(prob, method=method, backend="mesh",
+                           mesh=mesh1, **hp)
+        degen = repro.solve(prob, method=method, backend="mesh",
+                            mesh=mesh1, batch_size=prob.n,
+                            local_steps=1, **hp)
+        w_eq = int(jnp.array_equal(full.W, degen.W))
+        l_eq = int(full.comm.ledger() == degen.comm.ledger())
+        c_eq = int(full.extras["collective_floats_per_chip"]
+                   == degen.extras["collective_floats_per_chip"])
+        print(f"DEGEN {method} w_eq={w_eq} ledger_eq={l_eq} coll_eq={c_eq}")
+        # sim == mesh on the SAME stochastic config (1-D layouts draw
+        # identical batches: the sampler is keyed on global task id)
+        sgd_kw = dict(batch_size=4, local_steps=2, batch_seed=0, **hp)
+        sim = repro.solve(prob, method=method, backend="sim", **sgd_kw)
+        mesh = repro.solve(prob, method=method, backend="mesh",
+                           mesh=mesh1, **sgd_kw)
+        w_eq = int(jnp.array_equal(sim.W, mesh.W))
+        l_eq = int(sim.comm.ledger() == mesh.comm.ledger())
+        print(f"PARITY {method} w_eq={w_eq} ledger_eq={l_eq}")
+        # 2-D: sim data_shards=2 == mesh2d data_shards=2 (same draws:
+        # the sampler folds the data-shard index)
+        sim2 = repro.solve(prob, method=method, backend="sim",
+                           data_shards=2, **sgd_kw)
+        mesh2d = repro.solve(prob, method=method, backend="mesh",
+                             mesh=mesh2, data_shards=2, **sgd_kw)
+        w_eq = int(jnp.array_equal(sim2.W, mesh2d.W))
+        l_eq = int(sim2.comm.ledger() == mesh2d.comm.ledger())
+        lay_eq = int(sim.comm.ledger() == sim2.comm.ledger())
+        print(f"PARITY2D {method} w_eq={w_eq} ledger_eq={l_eq} "
+              f"ledger_layout_eq={lay_eq}")
+""")
+
+
+@pytest.fixture(scope="module")
+def mesh_lines():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run([sys.executable, "-c", MESH_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=1500)
+    assert out.returncode == 0, out.stdout + out.stderr
+    lines = {}
+    for line in out.stdout.splitlines():
+        toks = line.split()
+        if toks and toks[0] in ("DEGEN", "PARITY", "PARITY2D"):
+            lines[(toks[0], toks[1])] = dict(
+                kv.split("=") for kv in toks[2:])
+    return lines
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("method", STOCHASTIC_SOLVERS)
+def test_mesh_degenerate_bitwise(mesh_lines, method):
+    row = mesh_lines[("DEGEN", method)]
+    assert row == {"w_eq": "1", "ledger_eq": "1", "coll_eq": "1"}, row
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("method", STOCHASTIC_SOLVERS)
+def test_mesh_stochastic_matches_sim(mesh_lines, method):
+    row = mesh_lines[("PARITY", method)]
+    assert row == {"w_eq": "1", "ledger_eq": "1"}, row
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("method", STOCHASTIC_SOLVERS)
+def test_mesh2d_stochastic_matches_sim2d(mesh_lines, method):
+    """Same data_shards → same draws → bitwise parity; and the LEDGER is
+    layout-invariant even though 1-D and 2-D draws differ (DESIGN §13)."""
+    row = mesh_lines[("PARITY2D", method)]
+    assert row == {"w_eq": "1", "ledger_eq": "1",
+                   "ledger_layout_eq": "1"}, row

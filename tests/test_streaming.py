@@ -1,0 +1,216 @@
+"""The closed train->serve loop (repro.train.streaming, DESIGN.md §13).
+
+Covers the full cycle — stream draw -> reservoir ingest -> warm
+re-solve -> factorize -> store publish -> live server reload — plus
+the pieces in isolation: reservoir statistics and shape stability,
+stream determinism, warm-start carry, staleness bookkeeping, and the
+background-thread wrapper's lifecycle.
+"""
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.core.methods import MTLProblem
+from repro.data.synthetic import SimSpec, generate
+from repro.serve.mtl import MTLServer
+from repro.train.streaming import (ReservoirBuffer, SampleStream,
+                                   StreamingResolver)
+
+jax.config.update("jax_platform_name", "cpu")
+
+SPEC = SimSpec(p=12, m=6, r=2, n=16)
+HP = {"lam": 0.01}
+
+
+@pytest.fixture(scope="module")
+def world():
+    Xs, ys, Wstar, Sigma = generate(jax.random.PRNGKey(0), SPEC)
+    prob = MTLProblem.make(Xs, ys, r=SPEC.r)
+    return prob, Wstar, Sigma
+
+
+# ---------------------------------------------------------------------------
+# SampleStream
+# ---------------------------------------------------------------------------
+
+def test_stream_shapes_and_determinism(world):
+    prob, Wstar, Sigma = world
+    s1 = SampleStream(Wstar, Sigma, seed=5)
+    s2 = SampleStream(Wstar, Sigma, seed=5)
+    X1, y1 = s1.draw(7)
+    X2, y2 = s2.draw(7)
+    assert X1.shape == (SPEC.m, 7, SPEC.p) and y1.shape == (SPEC.m, 7)
+    assert jnp.array_equal(X1, X2) and jnp.array_equal(y1, y2)
+    # successive draws differ; a different seed diverges from draw 0
+    X3, _ = s1.draw(7)
+    assert not jnp.array_equal(X1, X3)
+    X4, _ = SampleStream(Wstar, Sigma, seed=6).draw(7)
+    assert not jnp.array_equal(X1, X4)
+
+
+def test_stream_classification_labels(world):
+    _, Wstar, Sigma = world
+    X, y = SampleStream(Wstar, Sigma, task="classification",
+                        seed=0).draw(20)
+    assert set(np.unique(np.asarray(y))) <= {-1.0, 1.0}
+
+
+# ---------------------------------------------------------------------------
+# ReservoirBuffer
+# ---------------------------------------------------------------------------
+
+def test_reservoir_shapes_stay_fixed(world):
+    prob, Wstar, Sigma = world
+    buf = ReservoirBuffer(prob.Xs, prob.ys, seed=1)
+    stream = SampleStream(Wstar, Sigma, seed=2)
+    for _ in range(3):
+        buf.add(*stream.draw(9))
+    assert buf.Xs.shape == (prob.m, prob.n, prob.p)
+    assert buf.seen == prob.n + 27
+    prob2 = buf.problem(prob)
+    assert prob2.Xs.shape == prob.Xs.shape
+    assert prob2.loss.name == prob.loss.name
+    assert (prob2.r, prob2.A, prob2.l2) == (prob.r, prob.A, prob.l2)
+    assert (prob2.gram_A is not None) == (prob.gram_A is not None)
+
+
+def test_reservoir_absorbs_new_samples(world):
+    prob, Wstar, Sigma = world
+    buf = ReservoirBuffer(prob.Xs, prob.ys, seed=1)
+    before = buf.Xs.copy()
+    stream = SampleStream(Wstar, Sigma, seed=2)
+    kept = sum(buf.add(*stream.draw(16)) for _ in range(4))
+    assert kept > 0
+    assert not np.array_equal(before, buf.Xs)
+
+
+def test_reservoir_is_uniform_over_the_stream(world):
+    """Algorithm R: after streaming k*cap samples past a cap-slot
+    reservoir, roughly cap/(1+k) survivors come from the seed set."""
+    prob, Wstar, Sigma = world
+    cap = prob.n
+    # tag the seed rows so survivors are recognizable
+    Xs0 = np.full((prob.m, cap, prob.p), 1000.0)
+    buf = ReservoirBuffer(Xs0, np.zeros((prob.m, cap)), seed=3)
+    stream = SampleStream(Wstar, Sigma, seed=4)
+    for _ in range(3):
+        buf.add(*stream.draw(cap))
+    frac = float(np.mean(buf.Xs[:, :, 0] == 1000.0))
+    # expectation 1/4; the tolerance is loose — this guards against
+    # fill-only (frac 1.0) and replace-always (frac ~0) bugs
+    assert 0.05 < frac < 0.55, frac
+
+
+def test_reservoir_rejects_shape_mismatch(world):
+    prob, *_ = world
+    buf = ReservoirBuffer(prob.Xs, prob.ys)
+    with pytest.raises(ValueError, match="does not match"):
+        buf.add(np.zeros((prob.m + 1, 2, prob.p)),
+                np.zeros((prob.m + 1, 2)))
+
+
+# ---------------------------------------------------------------------------
+# the closed loop
+# ---------------------------------------------------------------------------
+
+def _serving_stack(prob, tmp):
+    res0 = repro.solve(prob, method="proxgd", rounds=6,
+                       keep_sv_carry=True, **HP)
+    model0 = res0.factorize(prob.r)
+    model0.save(tmp)
+    return res0, MTLServer(model0)
+
+
+def test_closed_loop_publishes_to_live_server(world, tmp_path):
+    prob, Wstar, Sigma = world
+    store = str(tmp_path)
+    res0, server = _serving_stack(prob, store)
+    v0 = server.version
+    stream = SampleStream(Wstar, Sigma, seed=3)
+    resolver = StreamingResolver(
+        prob, server, store, method="proxgd", rank=prob.r, rounds=4,
+        batch_size=8, local_steps=2, warm_from=res0, solver_hp=HP)
+    rep = resolver.step(stream, count=8)
+    # the server now serves the refreshed model, hot-swapped in place
+    assert rep["reloaded"] and rep["warm_started"]
+    assert server.version != v0
+    assert rep["served_version"] == server.version
+    assert rep["store_step"] == 1
+    # staleness: publish happened after the ingest
+    assert rep["staleness_oldest_s"] >= rep["staleness_newest_s"] >= 0.0
+    assert rep["ingests_absorbed"] == 1
+    # a second cycle warm-starts from the FIRST refresh and bumps again
+    rep2 = resolver.step(stream, count=8)
+    assert rep2["warm_started"] and rep2["store_step"] == 2
+    assert resolver.history == [rep, rep2]
+
+
+def test_warm_start_carries_previous_solution(world, tmp_path):
+    """The first refresh re-enters from warm_from; subsequent refreshes
+    from their predecessor — cold only when warm_start=False."""
+    prob, Wstar, Sigma = world
+    res0, _ = _serving_stack(prob, str(tmp_path))
+    cold = StreamingResolver(prob, None, str(tmp_path), method="proxgd",
+                             rounds=2, warm_start=False, solver_hp=HP)
+    warm = StreamingResolver(prob, None, str(tmp_path), method="proxgd",
+                             rounds=2, warm_from=res0, solver_hp=HP)
+    assert warm._prev_W is not None and cold._prev_W is None
+    stream = SampleStream(Wstar, Sigma, seed=9)
+    X, y = stream.draw(4)
+    cold.ingest(X, y)
+    warm.ingest(X, y)
+    rc, rw = cold.refresh(), warm.refresh()
+    assert not rc["warm_started"] and rw["warm_started"]
+    # the warm run's round-0 iterate IS the carried predictor matrix
+    assert jnp.array_equal(warm._last_result.iterates[0], res0.W)
+
+
+def test_resolver_rejects_full_batch_only_methods(world):
+    prob, *_ = world
+    with pytest.raises(ValueError, match="stochastic worker path"):
+        StreamingResolver(prob, None, "unused", method="dfw")
+
+
+def test_background_loop_lifecycle(world, tmp_path):
+    prob, Wstar, Sigma = world
+    store = str(tmp_path)
+    res0, server = _serving_stack(prob, store)
+    stream = SampleStream(Wstar, Sigma, seed=13)
+    resolver = StreamingResolver(
+        prob, server, store, method="proxgd", rank=prob.r, rounds=3,
+        batch_size=8, local_steps=2, warm_from=res0, solver_hp=HP)
+    resolver.start(stream, count=8, max_refreshes=2, interval_s=0.0)
+    deadline = time.monotonic() + 120
+    while len(resolver.history) < 2 and time.monotonic() < deadline:
+        time.sleep(0.05)
+    resolver.stop()
+    assert resolver.error is None
+    assert len(resolver.history) == 2
+    assert all(h["reloaded"] for h in resolver.history)
+    # double-start raises while running; restart after stop is fine
+    resolver.start(stream, count=8, max_refreshes=3)
+    with pytest.raises(RuntimeError, match="already running"):
+        resolver.start(stream, count=8)
+    resolver.stop()
+
+
+def test_server_swap_log_tracks_installs(world, tmp_path):
+    prob, Wstar, Sigma = world
+    store = str(tmp_path)
+    res0, server = _serving_stack(prob, store)
+    assert len(server.swap_log) == 1          # construction
+    stream = SampleStream(Wstar, Sigma, seed=17)
+    resolver = StreamingResolver(
+        prob, server, store, method="proxgd", rank=prob.r, rounds=3,
+        warm_from=res0, solver_hp=HP)
+    resolver.step(stream, count=4)
+    resolver.step(stream, count=4)
+    assert len(server.swap_log) == 3
+    times = [t for t, _ in server.swap_log]
+    assert times == sorted(times)
+    assert server.swap_log[-1][1] == server.version
