@@ -1,33 +1,40 @@
-"""Serving benchmark: factored vs dense scoring + few-shot onboarding.
+"""Serving benchmark: factored vs dense scoring, fused-kernel and
+quantized-table variants, few-shot onboarding — with achieved roofline
+fractions and a cross-PR regression guard.
 
 The payoff of the shared-representation model at serving time
-(``repro.serve.mtl``, DESIGN.md §10), measured:
+(``repro.serve.mtl``, DESIGN.md §10 / §14), measured:
 
 * **scoring** — requests/sec of the ``MTLServer`` O(p r) hot path
   (shared-basis gemm + code gather) vs the dense baseline (a column
   gather from the full (p, m) predictor table) across batch sizes and
   task counts, plus the parameter-memory ratio
-  ``p·m / ((p + m + 1)·r)``.  At the acceptance spec — p=2048,
-  m≥4096, r=4 — the run ASSERTS a ≥4x memory ratio and a factored
-  throughput win (the dense table is 32 MB of gather-unfriendly state;
-  the factored model is ~100 KB that stays cache-resident).
-* **onboarding** — few-shot error of a task the solver NEVER saw:
-  learn the subspace on the train-task split of a Fig-4 surrogate
-  (``data.realworld.split_tasks``), then fit each held-out task from
-  n ∈ {2, …, 32} samples inside the frozen subspace
-  (``serve.mtl.onboard_code``, an r-dimensional ridge) vs a per-task
-  full-p ridge on the same samples.  ASSERTS the subspace beats
-  per-task ridge at small n (the transfer-setting claim,
-  arXiv:1510.00633 §2.3).
+  ``p·m / ((p + m + 1)·r)`` AND the achieved fraction of the
+  ``launch/roofline`` cost-model bound for the fused scorer.  At the
+  acceptance spec — p=2048, m≥4096, r=4 — the run ASSERTS a ≥4x memory
+  ratio and a factored throughput win.
+* **kernel** — the ``kernel="pallas"`` / ``code_dtype=`` serve variants
+  at the acceptance point: throughput, roofline fraction, and max
+  deviation from the f32-XLA reference predictions.  Pallas rows are
+  labeled ``pallas_mode`` ("interpret" on CPU — correctness-path
+  timing, never gated).
+* **quantization** — int8/fp8 code tables on the SCHOOL surrogate:
+  relative RMSE of quantized vs f32 scores on real held-out data.
+  ASSERTS the int8 bound (``INT8_REL_RMSE_MAX``).
+* **onboarding** — few-shot error of a task the solver NEVER saw
+  (frozen-subspace r-dim ridge vs per-task full-p ridge).  ASSERTS the
+  subspace wins at small n (arXiv:1510.00633 §2.3).
 
-Writes ``BENCH_serve.json`` at the repo root (next to
-``BENCH_solvers.json``) so the serving trajectory is tracked across
-PRs:
+Writes ``BENCH_serve.json`` (schema 2: seeded, machine-readable,
+roofline-fraction fields) at the repo root so the serving trajectory
+diffs meaningfully across PRs.  A prior schema-2 file from the SAME
+backend gates a no-regression guard: the acceptance-point roofline
+fraction must stay within ``GUARD_FACTOR`` of the stored value.
 
-    PYTHONPATH=src python -m benchmarks.serve_bench [--tiny]
+    PYTHONPATH=src python -m benchmarks.serve_bench [--tiny] [--seed N]
 
 ``--tiny`` trims the sweep for CI smoke runs but KEEPS the acceptance
-spec point and both assertions (same code paths).
+spec point and every assertion (same code paths).
 """
 from __future__ import annotations
 
@@ -44,11 +51,14 @@ from repro.core.methods import MTLProblem
 from repro.core.linear_model import solve_ridge
 from repro.data.realworld import (REAL_SPECS, generate_surrogate,
                                   split_tasks, take_tasks)
+from repro.launch.roofline import mtl_score_terms
 from repro.serve.mtl import FactoredModel, MTLServer, onboard_code
 
 from .common import emit
 
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+SCHEMA = 2
 
 # The acceptance spec (ISSUE 5): factored-vs-dense scoring at p=2048,
 # m>=4096, r=4 must show a >=4x parameter-memory ratio and a factored
@@ -56,6 +66,22 @@ ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 # included).
 ACCEPT = dict(p=2048, m=4096, r=4)
 MEM_RATIO_MIN = 4.0
+
+# Quantized-table accuracy bounds on the school surrogate (DESIGN.md
+# §14): relative RMSE of quantized vs f32 scores on held-out data.
+# int8 (7.97 effective bits per weight after the per-code scale) is
+# asserted; fp8 e4m3 (3 mantissa bits) is recorded against its looser
+# documented bound but only warned on — its niche is tables too big
+# for int8's accumulation-friendly layout, not accuracy.
+INT8_REL_RMSE_MAX = 5e-2
+FP8_REL_RMSE_MAX = 1.5e-1
+
+# Cross-PR no-regression guard: the acceptance-point roofline fraction
+# may not fall below GUARD_FACTOR x the stored BENCH_serve.json value
+# (generous — CI runners are noisy; the guard catches structural
+# regressions like losing the fused path, not jitter).
+GUARD_FACTOR = 0.25
+GUARD_POINT = dict(m=4096, batch=64)   # present in tiny AND full sweeps
 
 FULL = dict(batch_sizes=(16, 64, 256, 1024), task_counts=(1024, 4096, 16384),
             shots=(2, 4, 8, 16, 32), holdout=8, repeats=100)
@@ -83,9 +109,10 @@ def _score_dense(W: jnp.ndarray, ids: jnp.ndarray, X: jnp.ndarray
     return jnp.einsum("bp,bp->b", X, jnp.take(W, ids, axis=1).T)
 
 
-def _synthetic_model(p: int, m: int, r: int) -> FactoredModel:
+def _synthetic_model(p: int, m: int, r: int, seed: int = 0
+                     ) -> FactoredModel:
     """A well-conditioned factored model (scoring cost is shape-only)."""
-    ku, kv = jax.random.split(jax.random.PRNGKey(0))
+    ku, kv = jax.random.split(jax.random.PRNGKey(seed))
     U = jnp.linalg.qr(jax.random.normal(ku, (p, r)))[0]
     V = jax.random.normal(kv, (m, r)) / jnp.sqrt(r)
     s = jnp.linspace(2.0, 1.0, r)
@@ -102,34 +129,46 @@ def _throughput(fn, reps: int) -> float:
     return (time.perf_counter() - t0) / reps
 
 
-def bench_scoring(spec: dict) -> dict:
+def _requests(seed: int, B: int, m: int, p: int):
+    kid, kx = jax.random.split(jax.random.PRNGKey(seed + 1))
+    ids = jax.random.randint(kid, (B,), 0, m)
+    X = jax.random.normal(kx, (B, p))
+    return ids, X
+
+
+def bench_scoring(spec: dict, seed: int) -> dict:
     """requests/sec vs batch size and m, factored (MTLServer end to
-    end) vs dense (jitted table-gather kernel)."""
+    end) vs dense (jitted table-gather kernel), with the fused-scorer
+    roofline fraction per point."""
     p, r = ACCEPT["p"], ACCEPT["r"]
     out = {"p": p, "r": r, "points": []}
     for m in sorted(set(spec["task_counts"]) | {ACCEPT["m"]}):
-        model = _synthetic_model(p, m, r)
+        model = _synthetic_model(p, m, r, seed)
         W = model.dense()
         mem_ratio = (p * m) / ((p + m + 1) * r)
         for B in spec["batch_sizes"]:
             server = MTLServer(model, batch_size=B)
-            ids = jax.random.randint(jax.random.PRNGKey(1), (B,), 0, m)
-            X = jax.random.normal(jax.random.PRNGKey(2), (B, p))
+            ids, X = _requests(seed, B, m, p)
             t_fact = _throughput(lambda: server.score(ids, X)[0],
                                  spec["repeats"])
             t_dense = _throughput(lambda: _score_dense(W, ids, X),
                                   spec["repeats"])
+            terms = mtl_score_terms(B, p, r, m)
             point = {
                 "m": m, "batch": B,
                 "mem_ratio_dense_over_factored": round(mem_ratio, 1),
                 "factored_req_per_s": round(B / t_fact, 1),
                 "dense_req_per_s": round(B / t_dense, 1),
                 "speedup_factored_vs_dense": round(t_dense / t_fact, 2),
+                "factored_s": t_fact,
+                "roofline_s": terms.t_roofline,
+                "roofline_frac": terms.achieved_fraction(t_fact),
             }
             out["points"].append(point)
             emit(f"serve/score_m{m}_B{B}", t_fact,
                  {"req_per_s": B / t_fact,
-                  "speedup_vs_dense": t_dense / t_fact})
+                  "speedup_vs_dense": t_dense / t_fact,
+                  "roofline_frac": point["roofline_frac"]})
     # Asserted at batch >= 64 (the batched-serving regime this
     # subsystem exists for): the B=16 points are recorded but carry
     # sub-2x margins dominated by per-call dispatch overhead, which a
@@ -150,11 +189,95 @@ def bench_scoring(spec: dict) -> dict:
     return out
 
 
-def bench_onboarding(spec: dict) -> dict:
+def bench_kernel(spec: dict, seed: int) -> dict:
+    """The serve-path variants at the acceptance point: XLA vs the
+    fused Pallas kernel, f32 vs quantized code tables.  Each row:
+    throughput, roofline fraction (against the table's stored width),
+    and max |pred - f32-XLA pred| over one batch."""
+    p, r, m = ACCEPT["p"], ACCEPT["r"], ACCEPT["m"]
+    B = GUARD_POINT["batch"]
+    pallas_mode = ("interpret" if jax.default_backend() == "cpu"
+                   else "compiled")
+    model = _synthetic_model(p, m, r, seed)
+    ids, X = _requests(seed, B, m, p)
+    base = MTLServer(model, batch_size=B)
+    ref_preds = base.score(ids, X)[0]
+    rows = []
+    for kern in ("xla", "pallas"):
+        for dt, code_bytes in (("f32", 4), ("int8", 1), ("fp8", 1)):
+            server = MTLServer(model, batch_size=B, kernel=kern,
+                               code_dtype=dt)
+            preds = server.score(ids, X)[0]
+            t = _throughput(lambda: server.score(ids, X)[0],
+                            spec["repeats"])
+            terms = mtl_score_terms(B, p, r, m, code_bytes=code_bytes)
+            row = {
+                "kernel": kern, "code_dtype": dt,
+                "pallas_mode": pallas_mode if kern == "pallas" else "n/a",
+                "req_per_s": round(B / t, 1),
+                "seconds": t,
+                "roofline_s": terms.t_roofline,
+                "roofline_frac": terms.achieved_fraction(t),
+                "max_abs_dev_vs_f32_xla": float(
+                    jnp.max(jnp.abs(preds - ref_preds))),
+            }
+            rows.append(row)
+            emit(f"serve/kernel_{kern}_{dt}", t,
+                 {"req_per_s": B / t, "roofline_frac": row["roofline_frac"],
+                  "max_dev": row["max_abs_dev_vs_f32_xla"]})
+    # the fused f32 path must agree with the XLA reference to float
+    # tolerance on the same batch (the bit-compatibility criterion;
+    # exhaustive configuration coverage lives in tests/test_mtl_score.py)
+    f32_pallas = next(r_ for r_ in rows
+                      if r_["kernel"] == "pallas" and
+                      r_["code_dtype"] == "f32")
+    scale = float(jnp.max(jnp.abs(ref_preds))) + 1e-30
+    assert f32_pallas["max_abs_dev_vs_f32_xla"] <= 1e-4 * scale, \
+        f"fused f32 scorer deviates from XLA reference: {f32_pallas}"
+    return {"point": dict(ACCEPT, batch=B), "pallas_mode": pallas_mode,
+            "rows": rows}
+
+
+def bench_quantization(seed: int) -> dict:
+    """Quantized-table accuracy on REAL data: the school surrogate's
+    tasks scored on held-out samples, int8/fp8 vs f32 codes.  The
+    int8 relative-RMSE bound is asserted (fp8's is recorded)."""
+    rs = REAL_SPECS[ONBOARD_SURROGATE]
+    Xs, ys, Xt, yt = generate_surrogate(jax.random.PRNGKey(seed + 300), rs)
+    prob = MTLProblem.make(Xs, ys, "squared", A=3.0, r=rs.r)
+    res = repro.solve(prob, method="altmin", rounds=10)
+    model = res.factorize(rank=rs.r)
+    # every task's held-out rows, as one mixed-task request stream
+    ids = jnp.repeat(jnp.arange(rs.m), Xt.shape[1])
+    X = jnp.reshape(Xt, (-1, rs.p))
+    base = MTLServer(model, batch_size=256)
+    ref = base.score(ids, X)[0]
+    scale = float(jnp.sqrt(jnp.mean(ref ** 2))) + 1e-30
+    out = {"surrogate": ONBOARD_SURROGATE, "m": rs.m, "p": rs.p,
+           "rank": rs.r, "n_scored": int(ids.shape[0]),
+           "bounds": {"int8": INT8_REL_RMSE_MAX, "fp8": FP8_REL_RMSE_MAX},
+           "rel_rmse": {}}
+    for dt in ("int8", "fp8"):
+        server = MTLServer(model, batch_size=256, code_dtype=dt)
+        preds = server.score(ids, X)[0]
+        rel = float(jnp.sqrt(jnp.mean((preds - ref) ** 2))) / scale
+        out["rel_rmse"][dt] = rel
+        emit(f"serve/quant_{dt}", 0.0, {"rel_rmse": rel})
+    assert out["rel_rmse"]["int8"] <= INT8_REL_RMSE_MAX, \
+        (f"int8 code table misses its accuracy bound on "
+         f"{ONBOARD_SURROGATE}: {out['rel_rmse']}")
+    if out["rel_rmse"]["fp8"] > FP8_REL_RMSE_MAX:
+        print(f"serve_bench: WARNING fp8 rel RMSE "
+              f"{out['rel_rmse']['fp8']:.3g} over its documented "
+              f"{FP8_REL_RMSE_MAX} bound", flush=True)
+    return out
+
+
+def bench_onboarding(spec: dict, seed: int) -> dict:
     """Few-shot new-task error: frozen-subspace code fit vs per-task
     full-p ridge, on tasks held out of the solve entirely."""
     rs = REAL_SPECS[ONBOARD_SURROGATE]
-    Xs, ys, Xt, yt = generate_surrogate(jax.random.PRNGKey(300), rs)
+    Xs, ys, Xt, yt = generate_surrogate(jax.random.PRNGKey(seed + 300), rs)
     train_ids, held_ids = split_tasks(rs.m, spec["holdout"], seed=0)
     Xtr, ytr = take_tasks(train_ids, Xs, ys)
     prob = MTLProblem.make(Xtr, ytr, "squared", A=3.0, r=rs.r)
@@ -191,24 +314,81 @@ def bench_onboarding(spec: dict) -> dict:
     return out
 
 
-def main(tiny: bool = False, out_json: str | None = None) -> dict:
+def _guard_fraction(report: dict) -> float | None:
+    """The guarded metric: the plain-XLA factored roofline fraction at
+    the guard point (present in every sweep)."""
+    for pt in report.get("scoring", {}).get("points", []):
+        if (pt.get("m") == GUARD_POINT["m"]
+                and pt.get("batch") == GUARD_POINT["batch"]):
+            return pt.get("roofline_frac")
+    return None
+
+
+def check_regression(report: dict, prior_path: str) -> dict:
+    """Gate the new report against a stored BENCH_serve.json.
+
+    Applies only when the prior file exists, speaks this schema, and
+    was measured on the SAME jax backend (an interpret-mode CPU number
+    must never gate a TPU run or vice versa); otherwise records why it
+    was skipped.  Inside those conditions the acceptance-point roofline
+    fraction must stay >= GUARD_FACTOR x the prior — assert, so the CI
+    bench job fails loudly.
+    """
+    guard = {"point": GUARD_POINT, "factor": GUARD_FACTOR,
+             "checked": False}
+    if not os.path.exists(prior_path):
+        guard["skipped"] = "no prior BENCH_serve.json"
+        return guard
+    try:
+        with open(prior_path) as f:
+            prior = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        guard["skipped"] = f"unreadable prior: {e}"
+        return guard
+    if prior.get("schema") != SCHEMA:
+        guard["skipped"] = f"prior schema {prior.get('schema')} != {SCHEMA}"
+        return guard
+    if (prior.get("meta", {}).get("jax_backend")
+            != report["meta"]["jax_backend"]):
+        guard["skipped"] = "prior measured on a different backend"
+        return guard
+    prev, now = _guard_fraction(prior), _guard_fraction(report)
+    if prev is None or now is None:
+        guard["skipped"] = "guard point missing from prior or current run"
+        return guard
+    guard.update(checked=True, prior_frac=prev, current_frac=now)
+    assert now >= GUARD_FACTOR * prev, \
+        (f"serve roofline fraction regressed: {now:.4g} < "
+         f"{GUARD_FACTOR} x prior {prev:.4g} at {GUARD_POINT}")
+    return guard
+
+
+def main(tiny: bool = False, out_json: str | None = None,
+         seed: int = 0) -> dict:
     spec = TINY if tiny else FULL
     report = {
+        "schema": SCHEMA,
         "spec": dict(spec, tiny=tiny),
         "meta": {"jax_backend": jax.default_backend(),
-                 "devices": len(jax.devices())},
-        "scoring": bench_scoring(spec),
-        "onboarding": bench_onboarding(spec),
+                 "devices": len(jax.devices()), "seed": seed,
+                 "accept": ACCEPT},
+        "scoring": bench_scoring(spec, seed),
+        "kernel": bench_kernel(spec, seed),
+        "quantization": bench_quantization(seed),
+        "onboarding": bench_onboarding(spec, seed),
     }
     path = out_json or os.path.join(ROOT, "BENCH_serve.json")
+    report["regression_guard"] = check_regression(report, path)
     with open(path, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)
         f.write("\n")
     acc = report["scoring"]["accept"]
+    frac = _guard_fraction(report)
     print(f"serve_bench: wrote {path} (mem ratio {acc['mem_ratio']}x, "
           f"factored-vs-dense >= "
-          f"{acc['min_speedup_factored_vs_dense']}x at "
-          f"p={ACCEPT['p']} m={ACCEPT['m']} r={ACCEPT['r']})", flush=True)
+          f"{acc['min_speedup_factored_vs_dense']}x, roofline frac "
+          f"{frac:.3g} at p={ACCEPT['p']} m={ACCEPT['m']} "
+          f"r={ACCEPT['r']} B={GUARD_POINT['batch']})", flush=True)
     return report
 
 
@@ -218,5 +398,7 @@ if __name__ == "__main__":
                     help="CI smoke spec (trimmed sweep, same assertions)")
     ap.add_argument("--json", default=None,
                     help="output path (default: <repo>/BENCH_serve.json)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="PRNG seed for synthetic models and requests")
     args = ap.parse_args()
-    main(tiny=args.tiny, out_json=args.json)
+    main(tiny=args.tiny, out_json=args.json, seed=args.seed)

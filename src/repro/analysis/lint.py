@@ -22,6 +22,12 @@ the stdlib ``ast`` so the in-repo verifier needs nothing installed:
   dataclass enforces attribute assignment, but ``object.__setattr__``
   (outside ``__post_init__``) and accumulating into a snapshot's
   arrays would still tear a concurrent read.
+* LINT104 — raw ``pallas_call`` outside ``src/repro/kernels/``.  Every
+  kernel lives in a package with a BlockSpec'd kernel.py, a jit'd
+  ops.py wrapper that defaults to interpret mode on CPU, and a ref.py
+  oracle its tests compare against (DESIGN.md §14); a ``pallas_call``
+  inlined elsewhere ships untested, unbenchmarked device code with no
+  CPU fallback.
 
 ``lint_repo()`` walks the repo source and returns findings in the same
 :class:`~repro.analysis.report.Finding` currency as the jaxpr checks.
@@ -39,6 +45,9 @@ SVD_ALLOWED = ("src/repro/core/spectral.py", "src/repro/core/svd_ops.py")
 # hot-path files: no host callbacks, no .item()
 HOT_PATHS = ("src/repro/core/worker_ops.py", "src/repro/serve/mtl.py")
 SERVE_FILE = "src/repro/serve/mtl.py"
+# the one directory allowed to invoke pallas_call (kernel packages:
+# kernel.py + ops.py wrapper + ref.py oracle)
+KERNEL_DIR = "src/repro/kernels/"
 
 _CALLBACKS = {"callback", "io_callback", "pure_callback", "device_get"}
 
@@ -70,6 +79,7 @@ class _FileLint(ast.NodeVisitor):
         self.hot = rel in HOT_PATHS
         self.serve = rel == SERVE_FILE
         self.svd_ok = rel in SVD_ALLOWED
+        self.kernels_ok = rel.startswith(KERNEL_DIR)
         self._func_stack: List[str] = []
         # names bound to a fresh _ServeState(...) in the current scope
         self._snapshots: List[set] = [set()]
@@ -112,6 +122,14 @@ class _FileLint(ast.NodeVisitor):
                     ".item() in a hot path blocks on the device queue — "
                     "return arrays and convert at the edge",
                     self._where(node)))
+        if (not self.kernels_ok
+                and name.rsplit(".", 1)[-1] == "pallas_call"):
+            self.findings.append(Finding(
+                "LINT104",
+                f"raw pallas_call outside {KERNEL_DIR} — package the "
+                f"kernel there (kernel.py + ops.py CPU-interpret wrapper "
+                f"+ ref.py oracle) and call through its ops wrapper",
+                self._where(node)))
         if self.serve and name == "object.__setattr__" \
                 and "__post_init__" not in self._func_stack:
             self.findings.append(Finding(

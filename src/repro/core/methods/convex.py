@@ -158,10 +158,13 @@ def proxgd(prob: MTLProblem, lam: float = 1e-3, rounds: int = 200,
             # — statically provable communication-freeness.
             Wl = rt.local_slice(state["W"])
             for i in range(L):
-                G = worker_ops.minibatch_grad_columns(
+                # fused gradient + descent step (worker_ops dispatch:
+                # Pallas kernel on TPU, the historical two-dispatch XLA
+                # update elsewhere — bit-identical on CPU)
+                Wl = worker_ops.minibatch_prox_step_columns(
                     prob.loss, Wl, data, prob.l2, rt=rt, seed=batch_seed,
-                    round_k=k, local_step=i, batch_size=B) / m
-                Wl = Wl - eta * m * G
+                    round_k=k, local_step=i, batch_size=B, eta=eta * m,
+                    m=m)
             W_new = rt.gather_columns(Wl, "locally stepped columns")
             W_new, _, svc = sv.shrink(W_new, eta * m * lam, state["sv"])
             return {"W": rt.broadcast(W_new, "updated predictor"),
@@ -222,10 +225,10 @@ def accproxgd(prob: MTLProblem, lam: float = 1e-3, rounds: int = 200,
             W, Z, t = state["W"], state["Z"], state["t"]
             Zl = rt.local_slice(Z)
             for i in range(L):
-                G = worker_ops.minibatch_grad_columns(
+                Zl = worker_ops.minibatch_prox_step_columns(
                     prob.loss, Zl, data, prob.l2, rt=rt, seed=batch_seed,
-                    round_k=k, local_step=i, batch_size=B) / m
-                Zl = Zl - eta * m * G
+                    round_k=k, local_step=i, batch_size=B, eta=eta * m,
+                    m=m)
             Z_stepped = rt.gather_columns(Zl, "locally stepped Z columns")
             W_new, _, svc = sv.shrink(Z_stepped, eta * m * lam,
                                       state["sv"])
@@ -305,10 +308,13 @@ def admm(prob: MTLProblem, lam: float = 1e-3, rho: float = 1.0,
             z_loc, q_loc = rt.local_slice(Z), rt.local_slice(Q)
             Wl = W_local
             for i in range(L):
-                g = worker_ops.minibatch_grad_columns(
+                # fused inexact-ADMM worker step on the augmented
+                # Lagrangian (gradient + step + residual in one kernel
+                # on TPU; the historical XLA ops, same order, on CPU)
+                Wl = worker_ops.minibatch_prox_step_columns(
                     loss, Wl, data, prob.l2, rt=rt, seed=batch_seed,
-                    round_k=k, local_step=i, batch_size=B)
-                Wl = Wl - eta_w * (g / m + q_loc + rho * (Wl - z_loc))
+                    round_k=k, local_step=i, batch_size=B, eta=eta_w,
+                    m=m, Z_cols=z_loc, Q_cols=q_loc, rho=rho)
             W_full = rt.gather_columns(Wl, "local w")
             Z_new, _, svc = sv.shrink(W_full + Q / rho, lam / rho,
                                       state["sv"])

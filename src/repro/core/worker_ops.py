@@ -239,6 +239,69 @@ def minibatch_grad_columns(loss: Loss, W_cols: jnp.ndarray,
     return G
 
 
+def _resolve_step_impl(loss: Loss, impl: Optional[str]) -> str:
+    """The fused prox step has no Gram path (it runs on sampled rows),
+    so the choice is Pallas-on-TPU vs the XLA reference."""
+    if impl is not None:
+        return impl
+    if jax.default_backend() == "tpu" and loss.name in ("squared",
+                                                        "logistic"):
+        return "pallas"
+    return "xla"
+
+
+def minibatch_prox_step_columns(loss: Loss, W_cols: jnp.ndarray,
+                                data: Dict[str, jnp.ndarray],
+                                l2: float = 0.0, rt=None, *, seed: int,
+                                round_k, local_step, batch_size: int,
+                                eta, m: int, Z_cols=None, Q_cols=None,
+                                rho=0.0, impl: Optional[str] = None
+                                ) -> jnp.ndarray:
+    """One fused prox-family local step on a seeded mini-batch:
+
+        W <- W - eta (G/m + Q + rho (W - Z)),   G the mini-batch
+                                                 gradient (+ l2 W)
+
+    — the inner update of the stochastic ProxGD / AccProxGD / ADMM
+    round bodies.  ``Q_cols=None`` is the plain-descent special case
+    (ProxGD/AccProxGD pass ``eta * m`` so the 1/m cancels; the rho/Z
+    terms are skipped STRUCTURALLY, not multiplied by zero, keeping the
+    XLA path bit-identical to the historical two-dispatch update).
+
+    * ``xla``    — ``minibatch_grad_columns`` followed by the step:
+                   exactly the ops the solver bodies used to inline,
+                   in the same order (the CPU/verification path).
+    * ``pallas`` — :mod:`repro.kernels.prox_step`: gradient and step in
+                   one kernel, the (L, p) gradient never leaves VMEM.
+
+    Under 2-D sharding the Pallas path pmean-reduces the STEPPED
+    columns instead of the gradient — the update is affine in G with
+    W/Z/Q replicated across the data axis, so the average commutes,
+    the payload shape (p, L) is unchanged, and the CommLog ledger
+    entry is identical to the XLA path's (DESIGN.md §14).
+    """
+    impl = _resolve_step_impl(loss, impl)
+    if impl == "xla":
+        G = minibatch_grad_columns(loss, W_cols, data, l2, rt=rt,
+                                   seed=seed, round_k=round_k,
+                                   local_step=local_step,
+                                   batch_size=batch_size)
+        if Q_cols is None:
+            return W_cols - eta * (G / m)
+        return W_cols - eta * (G / m + Q_cols + rho * (W_cols - Z_cols))
+    if impl != "pallas":
+        raise ValueError(f"unknown prox step impl {impl!r}; "
+                         "have 'pallas', 'xla'")
+    from ..kernels.prox_step import prox_step as fused_prox
+    Xb, yb = _sample_batch(data, rt, seed, round_k, local_step, batch_size)
+    Z = W_cols if Z_cols is None else Z_cols
+    Q = jnp.zeros_like(W_cols) if Q_cols is None else Q_cols
+    W_new = fused_prox(Xb, yb, W_cols.T, Z.T, Q.T, eta=eta, rho=rho,
+                       inv_m=1.0 / m, l2=l2,
+                       loss=loss.name).T.astype(W_cols.dtype)
+    return _pmean(rt, W_new, "minibatch gradient shards")
+
+
 def minibatch_newton_columns(loss: Loss, W_cols: jnp.ndarray,
                              data: Dict[str, jnp.ndarray], l2: float = 0.0,
                              damping: float = 1e-6, rt=None, *, seed: int,

@@ -1,7 +1,26 @@
-# Pallas TPU kernels (validated in interpret mode on CPU):
-#   flash_attention — q-block x kv-block streaming, online softmax
-#   ssm_scan        — mamba-1 selective scan, VMEM-resident state
-#   mtl_grad        — fused per-task X^T l'(Xw, y) (paper worker hot spot)
-# Each package: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
-# wrapper), ref.py (pure-jnp oracle for assert_allclose tests).
-from . import flash_attention, mtl_grad, ssm_scan  # noqa: F401
+"""Pallas TPU kernels (validated in interpret mode on CPU):
+
+  flash_attention — q-block x kv-block streaming, online softmax
+  ssm_scan        — mamba-1 selective scan, VMEM-resident state
+  mtl_grad        — fused per-task X^T l'(Xw, y) (paper worker hot spot)
+  mtl_score       — fused serving score with quantized code tables
+  prox_step       — fused prox-family worker update (grad + step)
+
+Each package: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper), ref.py (pure-jnp oracle for assert_allclose tests).
+
+Lazy re-exports: importing ``repro.kernels`` on a CPU-only host (the
+serving path does, for ``mtl_score``) must not pull the
+flash_attention / ssm_scan stacks along — each subpackage loads on
+first attribute access.
+"""
+import importlib
+
+__all__ = ["flash_attention", "ssm_scan", "mtl_grad", "mtl_score",
+           "prox_step"]
+
+
+def __getattr__(name):
+    if name in __all__:
+        return importlib.import_module("." + name, __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,24 @@
+"""jit'd wrapper for the fused scoring kernel (CPU -> interpret)."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import mtl_score_fused
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def mtl_score(U, C, S, ids, X, *, bb: int = 128, interpret=None):
+    """Fused serving scores: U (p, r); C (m, r) f32/int8/fp8;
+    S (m, 1) f32 per-code scales; ids (B,) int; X (B, p) -> (B,) f32.
+
+    The kernel holds the whole code table in VMEM (tiny by design —
+    the factored model's point) and reads X exactly once; out-of-range
+    ids clamp like ``jnp.take``, so callers that need rejection check
+    validity separately (``MTLServer._score_with`` fuses that check
+    into its own dispatch).
+    """
+    interpret = _on_cpu() if interpret is None else interpret
+    return mtl_score_fused(U, C, S, ids, X, bb=bb, interpret=interpret)

@@ -1,0 +1,66 @@
+"""XLA reference + quantized-code-table helpers for the fused scorer.
+
+The reference is the oracle the interpret-mode kernel is tested
+against AND the CPU fallback ``MTLServer`` dispatches to when
+``kernel="xla"`` — it is numerically the existing
+``repro.serve.mtl._score_batch`` path with the dequantize multiply
+spliced between gather and reduce.
+
+Quantization scheme (DESIGN.md §14): per-code symmetric scaling.  Each
+task's code row ``C[j] (r,)`` gets one f32 scale
+
+    s_j = max|C[j]| / qmax        (qmax: 127 for int8, 448 for fp8 e4m3)
+
+and is stored as ``q_j = cast(C[j] / s_j)``; dequantize is the single
+multiply ``q_j * s_j``.  Per-code (not per-table) scaling matters
+because code norms vary with task difficulty — one hard task must not
+flatten everyone else's resolution.  Zero rows get scale 1.0 so
+quantize→dequantize is exact on them.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+CODE_DTYPES = ("f32", "int8", "fp8")
+_QMAX = {"int8": 127.0, "fp8": 448.0}      # float8_e4m3fn max normal
+
+
+def quantize_codes(C, code_dtype: str = "f32"):
+    """(m, r) float codes -> (Cq, S): the stored table + (m, 1) f32
+    per-code scales with ``C ≈ Cq.astype(f32) * S``.
+
+    ``code_dtype``: "f32" (identity, scales exactly 1.0 so the fused
+    kernel's dequantize multiply is bitwise neutral), "int8", or "fp8"
+    (float8_e4m3fn).
+    """
+    C = jnp.asarray(C, jnp.float32)
+    if code_dtype == "f32":
+        return C, jnp.ones((C.shape[0], 1), jnp.float32)
+    if code_dtype not in _QMAX:
+        raise ValueError(f"code_dtype must be one of {CODE_DTYPES}, "
+                         f"got {code_dtype!r}")
+    amax = jnp.max(jnp.abs(C), axis=1, keepdims=True)
+    S = jnp.where(amax > 0, amax / _QMAX[code_dtype], 1.0)
+    scaled = C / S
+    if code_dtype == "int8":
+        q = jnp.clip(jnp.round(scaled), -127.0, 127.0).astype(jnp.int8)
+    else:
+        q = scaled.astype(jnp.float8_e4m3fn)
+    return q, S.astype(jnp.float32)
+
+
+def dequantize_codes(Cq, S):
+    """Invert :func:`quantize_codes`: (m, r) f32 approximation."""
+    return Cq.astype(jnp.float32) * jnp.asarray(S, jnp.float32)
+
+
+def mtl_score_ref(U, C, S, ids, X):
+    """Unfused oracle: gemm → gather → dequantize → reduce, all XLA.
+
+    Matches ``repro.serve.mtl._score_batch`` exactly when S == 1.0
+    (the f32 table).  Returns (B,) f32 scores.
+    """
+    z = jnp.asarray(X, jnp.float32) @ jnp.asarray(U, jnp.float32)
+    codes = (jnp.take(C, ids, axis=0).astype(jnp.float32)
+             * jnp.take(jnp.asarray(S, jnp.float32), ids, axis=0))
+    return jnp.einsum("br,br->b", z, codes)

@@ -1,0 +1,5 @@
+"""Fused prox-family worker update kernel."""
+from .ops import prox_step
+from .ref import prox_step_ref
+
+__all__ = ["prox_step", "prox_step_ref"]

@@ -1,0 +1,98 @@
+"""Fused prox-family worker update — gradient + step in one kernel.
+
+Every stochastic round of ProxGD / AccProxGD / ADMM has each worker
+compute a minibatch gradient over its local task columns and then take
+the proximal / augmented-Lagrangian step
+
+    g_j  = (1/n) X_j^T l'(X_j w_j, y_j) + l2 w_j
+    w_j <- w_j - eta (g_j / m + q_j + rho (w_j - z_j))
+
+as two separate dispatches, round-tripping the (L, p) gradient through
+HBM between them.  Fused here: the ``mtl_grad`` streaming accumulator
+(X row blocks through VMEM, residual @ block into a (p,) scratch)
+finishes by applying the step in-register — the gradient never leaves
+VMEM.  ProxGD/AccProxGD are the q = 0, rho = 0 special case (the
+driver passes ``eta * m`` so the 1/m cancels, matching the unfused
+update bit-for-bit in exact arithmetic).
+
+eta / rho / 1/m / l2 arrive as a (1, 4) f32 SMEM operand — they are
+traced scalars inside the solver round body, so they cannot be baked
+into the kernel as Python statics.
+
+Grid: (L local tasks, n_row_blocks); loss derivative is the same
+static switch as ``mtl_grad``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, y_ref, w_ref, z_ref, q_ref, par_ref, out_ref, acc_scr,
+            *, loss: str, br: int, n_blocks: int, n_rows: int):
+    bi = pl.program_id(1)
+
+    @pl.when(bi == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    x = x_ref[0].astype(jnp.float32)                   # (br, p)
+    y = y_ref[0].astype(jnp.float32)                   # (br,)
+    w = w_ref[0].astype(jnp.float32)                   # (p,)
+    pred = x @ w
+    if loss == "squared":
+        r = pred - y
+    elif loss == "logistic":
+        r = -y * jax.nn.sigmoid(-y * pred)
+    else:
+        raise ValueError(loss)
+    row = bi * br + jax.lax.broadcasted_iota(jnp.int32, (br,), 0)
+    r = jnp.where(row < n_rows, r, 0.0)                # zero padded rows
+    acc_scr[...] += r @ x
+
+    @pl.when(bi == n_blocks - 1)
+    def _fin():
+        eta, rho, inv_m, l2 = (par_ref[0, 0], par_ref[0, 1],
+                               par_ref[0, 2], par_ref[0, 3])
+        g = acc_scr[...] / n_rows + l2 * w
+        z = z_ref[0].astype(jnp.float32)
+        q = q_ref[0].astype(jnp.float32)
+        step = g * inv_m + q + rho * (w - z)
+        out_ref[0] = (w - eta * step).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("loss", "br", "interpret"))
+def prox_step_lnp(X, y, W, Z, Q, params, *, loss: str = "squared",
+                  br: int = 256, interpret: bool = False):
+    """X: (L, n, p); y: (L, n); W/Z/Q: (L, p); params: (1, 4) f32
+    [eta, rho, 1/m, l2] -> updated W (L, p) f32."""
+    L, n, p = X.shape
+    nb = -(-n // br)
+    npad = nb * br - n
+    if npad:
+        X = jnp.pad(X, ((0, 0), (0, npad), (0, 0)))
+        y = jnp.pad(y, ((0, 0), (0, npad)))
+
+    kern = functools.partial(_kernel, loss=loss, br=br, n_blocks=nb,
+                             n_rows=n)
+    return pl.pallas_call(
+        kern,
+        grid=(L, nb),
+        in_specs=[
+            pl.BlockSpec((1, br, p), lambda t, b: (t, b, 0)),
+            pl.BlockSpec((1, br), lambda t, b: (t, b)),
+            pl.BlockSpec((1, p), lambda t, b: (t, 0)),
+            pl.BlockSpec((1, p), lambda t, b: (t, 0)),
+            pl.BlockSpec((1, p), lambda t, b: (t, 0)),
+            pl.BlockSpec((1, 4), lambda t, b: (0, 0),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, p), lambda t, b: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((L, p), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((p,), jnp.float32)],
+        interpret=interpret,
+    )(X, y, W, Z, Q, params)

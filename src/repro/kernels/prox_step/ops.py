@@ -1,0 +1,33 @@
+"""jit'd wrapper for the fused prox worker step (CPU -> interpret)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import prox_step_lnp
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def prox_step(X, y, W, Z, Q, *, eta, rho, inv_m, l2,
+              loss: str = "squared", br: int = 256, interpret=None):
+    """Fused prox-family worker update over local task columns.
+
+    X: (L, n, p) — n may be a data shard or a minibatch; the kernel
+    normalizes by the rows it sees, so the 2-D mesh runtime pmean-
+    reduces per-shard results exactly as with ``mtl_grad`` (the
+    collective stays OUTSIDE the kernel, which is why the CommLog
+    ledger is unchanged — DESIGN.md §14).
+
+    eta/rho/inv_m/l2 may be traced scalars (they are, inside solver
+    round bodies): they ride in through a (1, 4) SMEM operand.
+    """
+    interpret = _on_cpu() if interpret is None else interpret
+    params = jnp.stack([jnp.asarray(eta, jnp.float32),
+                        jnp.asarray(rho, jnp.float32),
+                        jnp.asarray(inv_m, jnp.float32),
+                        jnp.asarray(l2, jnp.float32)])[None, :]
+    return prox_step_lnp(X, y, W, Z, Q, params, loss=loss, br=br,
+                         interpret=interpret)

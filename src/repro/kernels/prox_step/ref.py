@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the fused prox worker step."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def prox_step_ref(X, y, W, Z, Q, eta, rho, inv_m, l2,
+                  loss: str = "squared"):
+    """Unfused reference: full-data gradient then prox step.
+
+    X (L, n, p); y (L, n); W/Z/Q (L, p).  Matches the kernel's exact
+    op order: ``acc/n + l2*w`` then ``w - eta*(g*inv_m + q +
+    rho*(w - z))``.
+    """
+    X = jnp.asarray(X, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    W = jnp.asarray(W, jnp.float32)
+    pred = jnp.einsum("lnp,lp->ln", X, W)
+    if loss == "squared":
+        r = pred - y
+    elif loss == "logistic":
+        r = -y * jax.nn.sigmoid(-y * pred)
+    else:
+        raise ValueError(loss)
+    g = jnp.einsum("lnp,ln->lp", X, r) / X.shape[1] + l2 * W
+    step = g * inv_m + jnp.asarray(Q, jnp.float32) + rho * (
+        W - jnp.asarray(Z, jnp.float32))
+    return W - eta * step

@@ -151,12 +151,33 @@ class RooflineTerms:
                  "collective": self.t_collective}
         return max(terms, key=terms.get)
 
+    @property
+    def t_roofline(self) -> float:
+        """The roofline lower bound: the slowest of the three terms
+        (they overlap on real hardware, so max — not sum — is the
+        standard first-order model)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def achieved_fraction(self, measured_s: float) -> float:
+        """Fraction of the roofline bound a measured time achieves
+        (1.0 = running at the model's limit).  Benches report THIS
+        rather than raw speedups so a result is comparable across
+        machines: a fast baseline and a fast kernel both score near
+        their own bound.  Measured on a non-TPU host against the TPU
+        constants the fraction is honestly tiny — callers label such
+        rows (``pallas_mode="interpret"``) and never gate on them.
+        """
+        if measured_s <= 0.0:
+            return 0.0
+        return self.t_roofline / measured_s
+
     def as_dict(self) -> Dict:
         return {
             "flops": self.flops, "hbm_bytes": self.hbm_bytes,
             "collective_bytes": self.collective_bytes,
             "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
-            "t_collective_s": self.t_collective, "dominant": self.dominant,
+            "t_collective_s": self.t_collective,
+            "t_roofline_s": self.t_roofline, "dominant": self.dominant,
             "collectives": self.collectives,
         }
 
@@ -174,6 +195,44 @@ def terms_from_compiled(compiled, hlo_text: Optional[str] = None
                  if k in COLLECTIVE_OPS)
     return RooflineTerms(flops=flops, hbm_bytes=hbm,
                          collective_bytes=float(cbytes), collectives=coll)
+
+
+# ---------------------------------------------------------------------------
+# analytic cost-model entries for the repo's fused MTL kernels
+# (benches divide these bounds by measured times -> achieved fractions)
+# ---------------------------------------------------------------------------
+def mtl_score_terms(B: int, p: int, r: int, m: int, x_bytes: int = 4,
+                    code_bytes: int = 4) -> RooflineTerms:
+    """Cost model of :mod:`repro.kernels.mtl_score` for one batch.
+
+    One (B, p) x (p, r) gemm plus the gather/dequantize/reduce epilogue;
+    HBM traffic is each operand exactly once — X, U, the (m, r) code
+    table at its STORED width (``code_bytes``: 4 f32, 1 int8/fp8), the
+    (m, 1) f32 scale column, ids, and the (B,) output.  No collectives:
+    the kernel is single-device by design (DESIGN.md §14).
+    """
+    flops = 2.0 * B * p * r + 3.0 * B * r
+    hbm = (B * p * x_bytes + p * r * 4 + m * r * code_bytes + m * 4
+           + B * 4 + B * 4)
+    return RooflineTerms(flops=flops, hbm_bytes=float(hbm),
+                         collective_bytes=0.0, collectives={"count": 0})
+
+
+def prox_step_terms(L: int, n: int, p: int, x_bytes: int = 4
+                    ) -> RooflineTerms:
+    """Cost model of :mod:`repro.kernels.prox_step` for one fused
+    worker update over L local tasks with n rows each.
+
+    Two (n, p) passes per task on the MXU (predictions + residual
+    accumulation) and an O(p) step epilogue; HBM traffic is X and y
+    once plus the four (L, p) vectors (W, Z, Q in, W out).  The
+    data-axis pmean happens OUTSIDE the kernel (that is the point —
+    the CommLog is unchanged), so collective bytes are zero here.
+    """
+    flops = 4.0 * L * n * p + 8.0 * L * p
+    hbm = L * n * p * x_bytes + L * n * 4 + 4 * L * p * 4 + 16
+    return RooflineTerms(flops=flops, hbm_bytes=float(hbm),
+                         collective_bytes=0.0, collectives={"count": 0})
 
 
 def model_flops(cfg, shape, n_tokens: Optional[int] = None) -> float:

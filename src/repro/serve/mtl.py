@@ -288,6 +288,41 @@ def _score_batch(U: jnp.ndarray, C: jnp.ndarray, ids: jnp.ndarray,
     return jnp.einsum("br,br->b", X @ U, jnp.take(C, ids, axis=0)), ok
 
 
+@jax.jit
+def _score_batch_quant(U: jnp.ndarray, C: jnp.ndarray, S: jnp.ndarray,
+                       ids: jnp.ndarray, X: jnp.ndarray, m
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """The quantized-table hot path: gather the int8/fp8 code rows AND
+    their per-code scales, dequantize with one multiply, reduce.  Same
+    contract as :func:`_score_batch` (validity flag in the same
+    dispatch; works unchanged on a sharded table — both gathers lower
+    to collectives under GSPMD)."""
+    ok = jnp.all((ids >= 0) & (ids < m))
+    z = X @ U
+    codes = (jnp.take(C, ids, axis=0).astype(jnp.float32)
+             * jnp.take(S, ids, axis=0))
+    return jnp.einsum("br,br->b", z, codes), ok
+
+
+_FUSED_SCORE = None
+
+
+def _fused_score():
+    """Lazy jit'd fused-kernel dispatch (imports the Pallas stack only
+    when a server actually asks for ``kernel="pallas"``)."""
+    global _FUSED_SCORE
+    if _FUSED_SCORE is None:
+        from ..kernels.mtl_score import mtl_score
+
+        @jax.jit
+        def fused(U, C, S, ids, X, m):
+            ok = jnp.all((ids >= 0) & (ids < m))
+            return mtl_score(U, C, S, ids, X), ok
+
+        _FUSED_SCORE = fused
+    return _FUSED_SCORE
+
+
 @dataclasses.dataclass(frozen=True)
 class _ServeState:
     """One immutable served version — swapped as a unit, never mutated,
@@ -295,8 +330,12 @@ class _ServeState:
     model: FactoredModel
     U: jnp.ndarray                     # device copy of the basis
     C: jnp.ndarray                     # device copy of the code table
-                                       # (padded to the mesh multiple)
-    version: str
+                                       # (padded to the mesh multiple;
+                                       # int8/fp8 when quantized)
+    Cs: Optional[jnp.ndarray] = None   # (m_pad, 1) f32 per-code scales
+                                       # (None on the plain f32 XLA
+                                       # path — exact 1.0 under pallas)
+    version: str = ""
     step: Optional[int] = None         # store step, when loaded/saved
     key_index: Optional[Dict[str, int]] = None   # task_key -> id (O(1)
                                        # resolve on the serving path)
@@ -321,10 +360,33 @@ class MTLServer:
     immutable snapshot under a lock); every ``score`` call reads that
     reference exactly once, so a call is served entirely by one model
     version — never a torn mix — and reports the version id it used.
+
+    ``kernel="pallas"`` scores through the fused
+    :mod:`repro.kernels.mtl_score` kernel (interpret mode on CPU) —
+    one streaming pass, no (B, r) HBM round-trip.  It is single-device
+    by design: combined with ``mesh=`` the server warns and serves the
+    XLA path (the sharded gather is already a collective; DESIGN.md
+    §14).  ``code_dtype="int8"|"fp8"`` stores the code table quantized
+    with per-code scales (``kernels.mtl_score.quantize_codes``);
+    onboarding requantizes the appended row on install.
     """
 
     def __init__(self, model: FactoredModel, *, batch_size: int = 64,
-                 mesh=None, axis: str = "tasks"):
+                 mesh=None, axis: str = "tasks", kernel: str = "xla",
+                 code_dtype: str = "f32"):
+        from ..kernels.mtl_score import CODE_DTYPES
+        if kernel not in ("xla", "pallas"):
+            raise ValueError(f"kernel must be 'xla' or 'pallas', "
+                             f"got {kernel!r}")
+        if code_dtype not in CODE_DTYPES:
+            raise ValueError(f"code_dtype must be one of {CODE_DTYPES}, "
+                             f"got {code_dtype!r}")
+        if kernel == "pallas" and mesh is not None:
+            warnings.warn(
+                "kernel='pallas' is single-device; a sharded code table "
+                "serves through the XLA collective-gather path instead")
+            kernel = "xla"
+        self.kernel, self.code_dtype = kernel, code_dtype
         self.B = int(batch_size)
         self.mesh, self.axis = mesh, axis
         self._lock = threading.Lock()
@@ -340,18 +402,32 @@ class MTLServer:
                  step: Optional[int] = None) -> _ServeState:
         C = jnp.asarray(model.codes)       # device-resident even when the
         U = jnp.asarray(model.U)           # model holds numpy factors
+        Cs = None
+        if self.code_dtype != "f32" or self.kernel == "pallas":
+            # quantize (or, f32-under-pallas, scale by an exact 1.0)
+            # from the model's float codes — onboarding reinstalls
+            # through here, so an appended row is requantized with the
+            # same per-code scheme as the original table
+            from ..kernels.mtl_score import quantize_codes
+            C, Cs = quantize_codes(C, self.code_dtype)
         if self.mesh is not None:
             ndev = self.mesh.shape[self.axis]
             pad = (-C.shape[0]) % ndev
             if pad:                    # zero rows no valid id reaches
                 C = jnp.concatenate(
                     [C, jnp.zeros((pad, C.shape[1]), C.dtype)])
+                if Cs is not None:     # scale 1.0: pad rows stay exact
+                    Cs = jnp.concatenate(
+                        [Cs, jnp.ones((pad, 1), Cs.dtype)])
             C = jax.device_put(
                 C, NamedSharding(self.mesh, P(self.axis, None)))
+            if Cs is not None:
+                Cs = jax.device_put(
+                    Cs, NamedSharding(self.mesh, P(self.axis, None)))
             U = jax.device_put(U, NamedSharding(self.mesh, P(None, None)))
         keys = model.task_keys
-        return _ServeState(model=model, U=U, C=C, version=model.version,
-                           step=step,
+        return _ServeState(model=model, U=U, C=C, Cs=Cs,
+                           version=model.version, step=step,
                            key_index=None if keys is None else
                            {k: i for i, k in enumerate(keys)})
 
@@ -482,6 +558,17 @@ class MTLServer:
             raise ValueError(f"unknown task key {e.args[0]!r}") from None
         return self._score_with(st, ids, X), st.version
 
+    def _score_dispatch(self, st: _ServeState, wid, wX):
+        """Route one padded wave to the configured hot path.  All three
+        return (preds, ok) from a single dispatch; f32-XLA stays the
+        historical :func:`_score_batch` bit-for-bit."""
+        if self.kernel == "pallas":
+            return _fused_score()(st.U, st.C, st.Cs, wid, wX, st.model.m)
+        if st.Cs is not None:
+            return _score_batch_quant(st.U, st.C, st.Cs, wid, wX,
+                                      st.model.m)
+        return _score_batch(st.U, st.C, wid, wX, st.model.m)
+
     def _score_with(self, st: _ServeState, task_ids, X) -> jnp.ndarray:
         """Score a batch against ONE state snapshot (hot-swap safe)."""
         ids = jnp.asarray(task_ids, jnp.int32)
@@ -506,7 +593,7 @@ class MTLServer:
                 wid = jnp.concatenate([wid, jnp.zeros((fill,), wid.dtype)])
                 wX = jnp.concatenate(
                     [wX, jnp.zeros((fill, wX.shape[1]), wX.dtype)])
-            preds, ok = _score_batch(st.U, st.C, wid, wX, st.model.m)
+            preds, ok = self._score_dispatch(st, wid, wX)
             outs.append(preds[:B - fill] if fill else preds)
             oks.append(ok)
         # ONE host round-trip validates every wave of the call

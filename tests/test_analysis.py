@@ -336,6 +336,18 @@ def test_lint_serve_state_mutation(tmp_path):
     assert _lint_src(tmp_path, "src/repro/serve/mtl.py", ok) == []
 
 
+def test_lint_pallas_call_confined_to_kernels(tmp_path):
+    src = """
+        from jax.experimental import pallas as pl
+        def f(x):
+            return pl.pallas_call(kern, grid=(1,))(x)
+    """
+    hits = _lint_src(tmp_path, "src/repro/serve/mtl.py", src)
+    assert "LINT104" in [f.code for f in hits]
+    assert _lint_src(
+        tmp_path, "src/repro/kernels/mtl_score/kernel.py", src) == []
+
+
 def test_repo_lints_clean():
     from repro.analysis import lint_repo
     assert lint_repo(REPO) == []

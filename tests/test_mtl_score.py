@@ -1,0 +1,243 @@
+"""Fused scoring kernel + quantized code tables: interpret-mode parity
+vs the serve hot path across dtypes, padded batch slots, sharded
+tables and onboarding; quantize→dequantize round-trip bounds (property
+tested under hypothesis when installed)."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.kernels.mtl_score import (dequantize_codes, mtl_score,
+                                     mtl_score_ref, quantize_codes)
+from repro.serve.mtl import FactoredModel, MTLServer, _score_batch
+
+_QMAX = {"int8": 127.0, "fp8": 448.0}
+
+
+def _model(p=40, m=16, r=3, seed=0, keys=False):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    U = jnp.linalg.qr(jax.random.normal(ks[0], (p, r)))[0]
+    V = jax.random.normal(ks[1], (m, r))
+    s = jnp.linspace(2.0, 1.0, r)
+    task_keys = tuple(f"task-{j}" for j in range(m)) if keys else None
+    return FactoredModel(U=U, s=s, V=V, task_keys=task_keys)
+
+
+def _requests(B, m, p, seed=1):
+    kid, kx = jax.random.split(jax.random.PRNGKey(seed))
+    ids = jax.random.randint(kid, (B,), 0, m)
+    X = jax.random.normal(kx, (B, p))
+    return ids, X
+
+
+# =============================================================================
+# kernel vs ref.py oracle
+# =============================================================================
+
+@pytest.mark.parametrize("B,p,r,m,bb", [
+    (64, 32, 4, 20, 32),       # block-aligned
+    (50, 64, 4, 37, 16),       # ragged batch (padding path)
+    (7, 16, 2, 5, 8),          # single padded block
+    (128, 128, 8, 200, 128),   # one full block
+])
+@pytest.mark.parametrize("code_dtype", ["f32", "int8", "fp8"])
+def test_mtl_score_kernel_matches_ref(B, p, r, m, bb, code_dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    U = jax.random.normal(ks[0], (p, r))
+    C, S = quantize_codes(jax.random.normal(ks[1], (m, r)), code_dtype)
+    ids = jax.random.randint(ks[2], (B,), 0, m)
+    X = jax.random.normal(ks[3], (B, p))
+    out = mtl_score(U, C, S, ids, X, bb=bb)
+    ref = mtl_score_ref(U, C, S, ids, X)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_mtl_score_kernel_input_dtypes(dt):
+    """X/U in bf16 still accumulate in f32 inside the kernel."""
+    B, p, r, m = 48, 64, 4, 30
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    U = jax.random.normal(ks[0], (p, r), dt)
+    C, S = quantize_codes(jax.random.normal(ks[1], (m, r)), "f32")
+    ids = jax.random.randint(ks[2], (B,), 0, m)
+    X = jax.random.normal(ks[3], (B, p), dt)
+    out = mtl_score(U, C, S, ids, X, bb=16)
+    ref = mtl_score_ref(U, C, S, ids, X)
+    tol = 3e-2 if dt == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_mtl_score_matches_serve_score_batch():
+    """f32 kernel == the XLA `_score_batch` hot path to float tolerance
+    (the bit-compatibility acceptance criterion)."""
+    B, p, r, m = 96, 128, 4, 64
+    model = _model(p=p, m=m, r=r)
+    ids, X = _requests(B, m, p)
+    preds_ref, ok = _score_batch(model.U, model.codes, ids, X, m)
+    assert bool(ok)
+    C, S = quantize_codes(model.codes, "f32")
+    preds = mtl_score(model.U, C, S, ids, X)
+    np.testing.assert_allclose(preds, preds_ref, atol=1e-4, rtol=1e-5)
+
+
+def test_mtl_score_clamps_out_of_range_like_take():
+    """Out-of-range ids clamp to [0, m-1] inside the kernel — never an
+    OOB read (the server's validity flag rejects them before scoring,
+    so this is a safety net, not an output contract)."""
+    B, p, r, m = 16, 32, 3, 10
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    U = jax.random.normal(ks[0], (p, r))
+    C, S = quantize_codes(jax.random.normal(ks[1], (m, r)), "f32")
+    X = jax.random.normal(ks[2], (B, p))
+    ids = jnp.asarray([-3, 0, m - 1, m + 5] * 4, jnp.int32)
+    out = mtl_score(U, C, S, ids, X, bb=8)
+    ref = jnp.einsum("br,br->b", X @ U,
+                     jnp.take(C, ids, axis=0, mode="clip"))
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+# =============================================================================
+# quantization round-trip bounds
+# =============================================================================
+
+@pytest.mark.parametrize("code_dtype", ["int8", "fp8"])
+def test_quantize_roundtrip_error_bound(code_dtype):
+    C = jax.random.normal(jax.random.PRNGKey(3), (100, 4)) * 5.0
+    Cq, S = quantize_codes(C, code_dtype)
+    err = jnp.abs(dequantize_codes(Cq, S) - C)
+    if code_dtype == "int8":
+        # symmetric rounding: half a quantization step per element
+        bound = 0.5 * S + 1e-6
+    else:
+        # e4m3: 3 mantissa bits -> rel err 2^-4 of the element, plus
+        # the subnormal floor at 2^-9 of the scale
+        bound = jnp.abs(C) * 2.0 ** -4 + S * 2.0 ** -9 + 1e-6
+    assert bool(jnp.all(err <= bound)), float(jnp.max(err - bound))
+
+
+def test_quantize_f32_identity_and_zero_rows():
+    C = jnp.concatenate([jnp.zeros((3, 4)),
+                         jax.random.normal(jax.random.PRNGKey(4), (5, 4))])
+    Cq, S = quantize_codes(C, "f32")
+    assert Cq.dtype == jnp.float32 and bool(jnp.all(S == 1.0))
+    np.testing.assert_array_equal(Cq, C)
+    for dt in ("int8", "fp8"):
+        Cq, S = quantize_codes(C, dt)
+        # zero rows quantize exactly (scale pinned to 1.0)
+        np.testing.assert_array_equal(
+            np.asarray(dequantize_codes(Cq, S)[:3]), np.zeros((3, 4)))
+
+
+def test_quantize_rejects_unknown_dtype():
+    with pytest.raises(ValueError, match="code_dtype"):
+        quantize_codes(jnp.ones((2, 2)), "int4")
+
+
+def test_quantize_roundtrip_property():
+    """Hypothesis sweep of the int8 bound over adversarial tables."""
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import strategies as st
+
+    @hyp.given(st.lists(st.lists(
+        st.floats(-1e4, 1e4, allow_nan=False, width=32),
+        min_size=2, max_size=6), min_size=1, max_size=20))
+    @hyp.settings(deadline=None, max_examples=50)
+    def check(rows):
+        width = min(len(r) for r in rows)
+        C = jnp.asarray([r[:width] for r in rows], jnp.float32)
+        Cq, S = quantize_codes(C, "int8")
+        err = jnp.abs(dequantize_codes(Cq, S) - C)
+        assert bool(jnp.all(err <= 0.5 * S + 1e-4 * S))
+
+    check()
+
+
+# =============================================================================
+# MTLServer: pallas == xla on every serve configuration
+# =============================================================================
+
+def test_server_pallas_matches_xla_fixed_slots():
+    """Multiple padded waves (B=8 over 23 requests) agree."""
+    model = _model()
+    ids, X = _requests(23, model.m, model.p)
+    ref, v1 = MTLServer(model, batch_size=8).score(ids, X)
+    out, v2 = MTLServer(model, batch_size=8, kernel="pallas").score(ids, X)
+    assert v1 == v2
+    np.testing.assert_allclose(out, ref, atol=1e-4, rtol=1e-5)
+
+
+def test_server_pallas_matches_xla_keyed():
+    model = _model(keys=True)
+    keys = [f"task-{j}" for j in (0, 3, 15, 7, 2, 9, 11)]
+    _, X = _requests(len(keys), model.m, model.p)
+    ref, _ = MTLServer(model, batch_size=4).score_keyed(keys, X)
+    out, _ = MTLServer(model, batch_size=4,
+                       kernel="pallas").score_keyed(keys, X)
+    np.testing.assert_allclose(out, ref, atol=1e-4, rtol=1e-5)
+
+
+def test_server_pallas_matches_xla_post_onboarding():
+    """Onboarding requantizes/reinstalls; the fused path serves the
+    appended task identically to XLA."""
+    model = _model()
+    p = model.p
+    kf = jax.random.split(jax.random.PRNGKey(5), 2)
+    Xf = jax.random.normal(kf[0], (12, p))
+    yf = jax.random.normal(kf[1], (12,))
+    servers = [MTLServer(model, batch_size=8, kernel=k)
+               for k in ("xla", "pallas")]
+    nid = [s.onboard(None, Xf, yf) for s in servers]
+    assert nid[0] == nid[1] == model.m
+    ids = jnp.asarray([nid[0]] * 5 + [0, 3], jnp.int32)
+    _, X = _requests(7, model.m, p, seed=6)
+    ref, _ = servers[0].score(ids, X)
+    out, _ = servers[1].score(ids, X)
+    np.testing.assert_allclose(out, ref, atol=1e-4, rtol=1e-5)
+
+
+def test_server_sharded_table_quantized_matches_dense():
+    """A mesh-sharded quantized table scores like the unsharded one;
+    kernel='pallas' degrades to XLA with a warning (single-device
+    kernel by design)."""
+    mesh = Mesh(np.array(jax.devices()[:1]), ("tasks",))
+    model = _model(m=15)                   # forces zero-row padding
+    ids, X = _requests(23, model.m, model.p)
+    for dt in ("f32", "int8"):
+        ref, _ = MTLServer(model, batch_size=8, code_dtype=dt).score(ids, X)
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            server = MTLServer(model, batch_size=8, mesh=mesh,
+                               kernel="pallas", code_dtype=dt)
+        assert server.kernel == "xla"
+        assert any("single-device" in str(x.message) for x in w)
+        out, _ = server.score(ids, X)
+        np.testing.assert_allclose(out, ref, atol=1e-5, rtol=1e-5)
+
+
+def test_server_quantized_accuracy_and_validation():
+    model = _model(p=64, m=32, r=4)
+    ids, X = _requests(64, model.m, model.p)
+    ref, _ = MTLServer(model, batch_size=32).score(ids, X)
+    scale = float(jnp.sqrt(jnp.mean(ref ** 2)))
+    for kern in ("xla", "pallas"):
+        out, _ = MTLServer(model, batch_size=32, kernel=kern,
+                           code_dtype="int8").score(ids, X)
+        rel = float(jnp.sqrt(jnp.mean((out - ref) ** 2))) / scale
+        assert rel < 5e-2, (kern, rel)    # the documented int8 bound
+    with pytest.raises(ValueError, match="kernel"):
+        MTLServer(model, kernel="cuda")
+    with pytest.raises(ValueError, match="code_dtype"):
+        MTLServer(model, code_dtype="int2")
+
+
+def test_server_pallas_rejects_bad_ids():
+    model = _model()
+    server = MTLServer(model, batch_size=8, kernel="pallas")
+    _, X = _requests(8, model.m, model.p)
+    with pytest.raises(ValueError, match="task ids outside"):
+        server.score(jnp.full((8,), model.m + 3, jnp.int32), X)
