@@ -78,6 +78,14 @@ FULLCK = dict(p=800, m=32, n=200, rounds=100, every_probe=5)
 TINYCK = dict(p=48, m=8, n=64, rounds=12, every_probe=2)
 CKPT_OVERHEAD_MAX = 0.10    # segmented-solve per-round overhead ceiling
 
+# The round-metrics overhead spec (DESIGN.md §15): heavier rounds than
+# the headline spec so the metric ops' relative cost is measured
+# against real per-round work, with enough rounds that the timed scan
+# execution dwarfs dispatch jitter on shared runners.
+FULLOBS = dict(p=400, m=32, n=400, rounds=240)
+TINYOBS = dict(p=48, m=8, n=64, rounds=12)
+OBS_OVERHEAD_MAX = 0.05     # instrumented-vs-bare per-round ceiling
+
 
 def _solve_timed(prob, **kw):
     t0 = time.perf_counter()
@@ -326,6 +334,90 @@ def bench_checkpoint(spec: dict, guard: bool) -> dict:
     return out
 
 
+def bench_obs(spec: dict, guard: bool) -> dict:
+    """Round-metrics overhead (DESIGN.md §15): what does
+    ``repro.solve(..., metrics=True)`` cost per round?
+
+    Every ``repro.solve`` call builds and compiles a fresh scan
+    program, and compile time is both noisy and R-dependent, so
+    end-to-end wall-clock differencing cannot resolve a 5%% per-round
+    effect.  Instead the bench captures each variant's COMPILED scan
+    program (hooking ``SimRuntime._compile_scan`` during the solve)
+    and times warm re-executions of it — pure device steady state, min
+    over ``reps`` interleaved runs.  Always asserts the §15 invariant —
+    instrumented W and ledger bit-identical to bare — and with
+    ``guard`` the ``OBS_OVERHEAD_MAX`` per-round ceiling.
+    """
+    from repro.runtime.sim import SimRuntime
+
+    sim = SimSpec(p=spec["p"], m=spec["m"], r=5, n=spec["n"])
+    Xs, ys, _, _ = generate(jax.random.PRNGKey(11), sim)
+    prob = MTLProblem.make(Xs, ys, "squared", A=2.0, r=5)
+    rounds = spec["rounds"]
+    reps = 5
+    base_kw = dict(method="proxgd", backend="sim", lam=0.01, scan=True,
+                   rounds=rounds, record_every=rounds)
+
+    progs: dict = {}
+    orig = SimRuntime._compile_scan
+
+    def capturing(self, body, state, sharded, r, records):
+        fn = orig(self, body, state, sharded, r, records)
+        progs[progs["label"]] = (fn, state)
+        return fn
+
+    SimRuntime._compile_scan = capturing
+    try:
+        progs["label"] = "bare"
+        bare, bare_solve_s = _solve_timed(prob, **base_kw)
+        progs["label"] = "inst"
+        inst, inst_solve_s = _solve_timed(prob, metrics=True, **base_kw)
+    finally:
+        SimRuntime._compile_scan = orig
+
+    def timed(label):
+        fn, state = progs[label]
+        t0 = time.perf_counter()
+        out = fn(state)             # warm: compiled during the solve
+        jax.block_until_ready(out)
+        return time.perf_counter() - t0
+
+    timed("bare"), timed("inst")                 # rebind warm-up
+    bare_s = inst_s = float("inf")
+    for _ in range(reps):                        # interleaved: shared drift
+        bare_s = min(bare_s, timed("bare"))
+        inst_s = min(inst_s, timed("inst"))
+    bare_round = max(bare_s, 1e-9) / rounds
+    inst_round = max(inst_s, 1e-9) / rounds
+    overhead = inst_round / bare_round - 1.0
+    bit_identical = bool(
+        jnp.array_equal(bare.W, inst.W) and _ledger(bare) == _ledger(inst)
+        and bare.extras["collective_floats_per_chip"]
+        == inst.extras["collective_floats_per_chip"])
+    mtr = inst.extras["metrics"]
+    out = {"rounds": rounds, "reps": reps,
+           "bare_s": round(bare_s, 4), "instrumented_s": round(inst_s, 4),
+           "bare_solve_s": round(bare_solve_s, 4),
+           "instrumented_solve_s": round(inst_solve_s, 4),
+           "bare_round_s": round(bare_round, 5),
+           "instrumented_round_s": round(inst_round, 5),
+           "overhead_frac": round(overhead, 4),
+           "overhead_guard": OBS_OVERHEAD_MAX if guard else None,
+           "bit_identical": bit_identical,
+           "metric_rounds": int(mtr["round"].shape[0]),
+           "charged_floats_per_round": mtr["charged_floats_per_round"]}
+    emit("solvers/proxgd_metrics", inst_s, {"overhead_frac": overhead})
+    assert bit_identical, \
+        "metrics=True drifted the solve from the bare run"
+    assert out["metric_rounds"] == rounds, \
+        f"expected {rounds} metric rounds, got {out['metric_rounds']}"
+    if guard:
+        assert overhead <= OBS_OVERHEAD_MAX, \
+            (f"round metrics cost {overhead:.1%} per round, over the "
+             f"{OBS_OVERHEAD_MAX:.0%} ceiling")
+    return out
+
+
 def ledger_parity(spec: dict, backend: str, mesh=None) -> dict:
     """scanned-vs-eager ledger + traffic parity for EVERY solver."""
     sim = SimSpec(p=spec["p"], m=spec["m"], r=3, n=min(spec["n"], 100))
@@ -384,6 +476,7 @@ def main(out_dir: str = "results/bench", tiny: bool = False,
                                    guard=full_sp),
         "checkpoint": bench_checkpoint(TINYCK if tiny else FULLCK,
                                        guard=not tiny),
+        "obs": bench_obs(TINYOBS if tiny else FULLOBS, guard=not tiny),
         "ledger_parity": {"sim": ledger_parity(spec, "sim"),
                           "mesh": ledger_parity(spec, "mesh", mesh=mesh)},
     }
@@ -397,10 +490,12 @@ def main(out_dir: str = "results/bench", tiny: bool = False,
     speed = report["proxgd"]["sim"]["speedup_scan_gram_vs_eager_raw"]
     sp = report["spectral"]["speedup_lazy_vs_exact"]
     ck = report["checkpoint"]["overhead_frac"]
+    ob = report["obs"]["overhead_frac"]
     print(f"solver_bench: wrote {path} "
           f"(sim proxgd scan+gram vs eager+raw: {speed}x; "
           f"spectral lazy vs exact: {sp}x; "
-          f"checkpoint overhead: {ck:+.1%}/round)", flush=True)
+          f"checkpoint overhead: {ck:+.1%}/round; "
+          f"metrics overhead: {ob:+.1%}/round)", flush=True)
     if not report["ledger_parity"]["all_solvers_bit_identical"]:
         raise AssertionError(
             "scanned-vs-eager ledger parity violated — see "

@@ -29,7 +29,8 @@ def solve(prob, method: str = "dgsp", backend: str = "sim", *,
           verify: Optional[str] = None,
           checkpoint_every: Optional[int] = None,
           ckpt_dir: Optional[str] = None,
-          ckpt_keep: Optional[int] = 3, **hp):
+          ckpt_keep: Optional[int] = 3,
+          metrics: bool = False, **hp):
     """Run one registered solver on one backend.
 
     Parameters
@@ -120,6 +121,14 @@ def solve(prob, method: str = "dgsp", backend: str = "sim", *,
         ``result.extras["static_verify"] == "ok"``.  Requires the
         declarative backend/mesh arguments (not ``runtime=`` — the
         verifier needs to build a twin runtime for the trace).
+    metrics: ``True`` collects device-resident per-round metrics
+        (``repro.obs``, DESIGN.md §15) into
+        ``result.extras["metrics"]`` — objective term, gradient /
+        step norms, spectral fallback count, per-round arrays stacked
+        over rounds, plus the ledger's per-round charged floats.  The
+        metric channel rides the scan carry (no host callbacks, no new
+        collectives), so ``W`` and the ledger stay bit-identical to a
+        ``metrics=False`` run on every backend, driver and layout.
     **hp: solver hyper-parameters (lam, eta, damping, ...).
 
     Returns the solver's MTLResult; ``result.comm`` is the protocol
@@ -153,6 +162,12 @@ def solve(prob, method: str = "dgsp", backend: str = "sim", *,
         hp["batch_size"] = batch_size
         hp["local_steps"] = local_steps
         hp["batch_seed"] = batch_seed
+
+    if metrics:
+        # set before the verify / checkpoint blocks so the static
+        # verifier traces the instrumented program and a resumed solve
+        # replays the same configuration
+        hp["metrics"] = True
 
     if verify is not None:
         if verify != "static":
@@ -196,7 +211,11 @@ def solve(prob, method: str = "dgsp", backend: str = "sim", *,
         ckpt = SolveCheckpointer(ckpt_dir, every=every, keep=ckpt_keep)
         ckpt.load_resume()      # no-op on a fresh store
         runtime._ckpt = ckpt
-    res = get_solver(method)(prob, runtime=runtime, **hp)
+    from .obs.tracing import trace_span
+    with trace_span("solve", method=method, backend=runtime.name,
+                    data_shards=runtime.data_shards,
+                    metrics=bool(metrics)):
+        res = get_solver(method)(prob, runtime=runtime, **hp)
     # stamp the trained loss so res.factorize() builds the serving
     # artifact with the right prediction/onboarding math by default
     res.extras.setdefault("loss", prob.loss.name)

@@ -213,6 +213,32 @@ def iterate_recorder(res: "MTLResult", record_every: int, key: str = "W"):
     return RecordSpec(sink=res, every=record_every, key=key)
 
 
+def metrics_channel(metrics: bool):
+    """The device-resident round-metrics channel (repro.obs, DESIGN.md
+    §15): ``(initial obs entry, RecordSpec, sink)`` when ``metrics`` is
+    on, else ``None``.
+
+    The solver adds the entry to its round-loop state (replicated — it
+    must never enter ``sharded``), updates it in the body via
+    ``obs_round`` from master-visible quantities only (no new
+    collectives, so the ledger and the static-verification matrix are
+    untouched), passes the RecordSpec next to its iterate recorder, and
+    stamps ``sink.finalize(rt)`` into ``extras["metrics"]``.
+    """
+    if not metrics:
+        return None
+    from ...obs.device import OBS_KEY, RoundMetricsSink, obs_init
+    from ...runtime.base import RecordSpec
+    sink = RoundMetricsSink()
+    return obs_init(), RecordSpec(sink=sink, every=1, key=OBS_KEY), sink
+
+
+def compose_records(base, channel):
+    """``run_rounds(record=...)`` argument from the iterate recorder
+    plus an optional metrics channel."""
+    return base if channel is None else (base, channel[1])
+
+
 def default_runtime(prob: MTLProblem, runtime=None):
     """The runtime a solver executes on; defaults to the simulated cluster.
 

@@ -31,9 +31,10 @@ import jax.numpy as jnp
 
 from .. import spectral, worker_ops
 from ..spectral import leading_sv
-from .base import (MTLProblem, MTLResult, default_runtime, gram_round_leaves,
-                   iterate_recorder, register, stochastic_config,
-                   stochastic_round_leaves)
+from ...obs.device import obs_round
+from .base import (MTLProblem, MTLResult, compose_records, default_runtime,
+                   gram_round_leaves, iterate_recorder, metrics_channel,
+                   register, stochastic_config, stochastic_round_leaves)
 
 
 def data_smoothness(prob: MTLProblem) -> float:
@@ -128,23 +129,30 @@ def proxgd(prob: MTLProblem, lam: float = 1e-3, rounds: int = 200,
            runtime=None, scan: bool = True, sv_engine: str = "lazy",
            sv_rank: int = None, batch_size: int = None,
            local_steps: int = None, batch_seed: int = 0, init_W=None,
-           sv_carry=None, keep_sv_carry: bool = False, **_) -> MTLResult:
+           sv_carry=None, keep_sv_carry: bool = False,
+           metrics: bool = False, **_) -> MTLResult:
     rt = default_runtime(prob, runtime)
     if eta is None:
         eta = 1.0 / data_smoothness(prob)
     m = prob.m
     sv = spectral.shrink_engine(prob, sv_engine, rank=sv_rank)
     sgd = stochastic_config(prob, batch_size, local_steps, rt.data_shards)
+    mc = metrics_channel(metrics)
 
     if sgd is None:
         def body(k, state, data):
             G = _grad_columns(rt, prob, state["W"], data, "gradient column")
             # master prox step (3.3); grad of (1/m)sum L_nj carries 1/m,
             # the per-task smoothness is H/m so the per-W step uses eta*m
-            W_new, _, svc = sv.shrink(state["W"] - eta * m * G,
-                                      eta * m * lam, state["sv"])
-            return {"W": rt.broadcast(W_new, "updated predictor"),
-                    "sv": svc}
+            W_new, nn, svc = sv.shrink(state["W"] - eta * m * G,
+                                       eta * m * lam, state["sv"])
+            out = {"W": rt.broadcast(W_new, "updated predictor"),
+                   "sv": svc}
+            if metrics:
+                out["obs"] = obs_round(state["W"], W_new, grad=G,
+                                       objective=lam * nn,
+                                       sv_stats=sv.device_stats(svc))
+            return out
     else:
         B, L = sgd
 
@@ -165,24 +173,35 @@ def proxgd(prob: MTLProblem, lam: float = 1e-3, rounds: int = 200,
                     prob.loss, Wl, data, prob.l2, rt=rt, seed=batch_seed,
                     round_k=k, local_step=i, batch_size=B, eta=eta * m,
                     m=m)
-            W_new = rt.gather_columns(Wl, "locally stepped columns")
-            W_new, _, svc = sv.shrink(W_new, eta * m * lam, state["sv"])
-            return {"W": rt.broadcast(W_new, "updated predictor"),
-                    "sv": svc}
+            W_gath = rt.gather_columns(Wl, "locally stepped columns")
+            W_new, nn, svc = sv.shrink(W_gath, eta * m * lam, state["sv"])
+            out = {"W": rt.broadcast(W_new, "updated predictor"),
+                   "sv": svc}
+            if metrics:
+                # no full-batch gradient in a stochastic round
+                out["obs"] = obs_round(state["W"], W_new,
+                                       objective=lam * nn,
+                                       sv_stats=sv.device_stats(svc))
+            return out
 
     state = {"W": _init_W(prob, init, init_W),
              "sv": _sv_carry0(sv, sv_carry)}
+    if mc is not None:
+        state["obs"] = mc[0]
     res = MTLResult("proxgd", state["W"], rt.comm,
                     extras={"lam": lam, "eta": eta, "sv_engine": sv.mode})
     if sgd is not None:
         res.extras.update(batch_size=sgd[0], local_steps=sgd[1])
     res.record(0, state["W"])
     state = rt.run_rounds(rounds, body, state, scan=scan,
-                          record=iterate_recorder(res, record_every),
+                          record=compose_records(
+                              iterate_recorder(res, record_every), mc),
                           data_leaves=gram_round_leaves(prob) if sgd is None
                           else stochastic_round_leaves(prob))
     res.W = state["W"]
     res.extras.update(sv.stats(state["sv"]))
+    if mc is not None:
+        res.extras["metrics"] = mc[2].finalize(rt)
     if keep_sv_carry:
         res.extras["sv_carry"] = state["sv"]
     return res
@@ -194,25 +213,32 @@ def accproxgd(prob: MTLProblem, lam: float = 1e-3, rounds: int = 200,
               runtime=None, scan: bool = True, sv_engine: str = "lazy",
               sv_rank: int = None, batch_size: int = None,
               local_steps: int = None, batch_seed: int = 0, init_W=None,
-              sv_carry=None, keep_sv_carry: bool = False, **_) -> MTLResult:
+              sv_carry=None, keep_sv_carry: bool = False,
+              metrics: bool = False, **_) -> MTLResult:
     rt = default_runtime(prob, runtime)
     if eta is None:
         eta = 1.0 / data_smoothness(prob)
     m = prob.m
     sv = spectral.shrink_engine(prob, sv_engine, rank=sv_rank)
     sgd = stochastic_config(prob, batch_size, local_steps, rt.data_shards)
+    mc = metrics_channel(metrics)
 
     if sgd is None:
         def body(k, state, data):
             W, Z, t = state["W"], state["Z"], state["t"]
             G = _grad_columns(rt, prob, Z, data, "gradient at Z")
-            W_new, _, svc = sv.shrink(Z - eta * m * G, eta * m * lam,
-                                      state["sv"])              # (3.4)
+            W_new, nn, svc = sv.shrink(Z - eta * m * G, eta * m * lam,
+                                       state["sv"])             # (3.4)
             t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
             Z_new = W_new + ((t - 1.0) / t_new) * (W_new - W)   # (3.5)
-            return {"W": W_new,
-                    "Z": rt.broadcast(Z_new, "updated Z column"),
-                    "t": t_new, "sv": svc}
+            out = {"W": W_new,
+                   "Z": rt.broadcast(Z_new, "updated Z column"),
+                   "t": t_new, "sv": svc}
+            if metrics:
+                out["obs"] = obs_round(W, W_new, grad=G,
+                                       objective=lam * nn,
+                                       sv_stats=sv.device_stats(svc))
+            return out
     else:
         B, L = sgd
 
@@ -230,28 +256,37 @@ def accproxgd(prob: MTLProblem, lam: float = 1e-3, rounds: int = 200,
                     round_k=k, local_step=i, batch_size=B, eta=eta * m,
                     m=m)
             Z_stepped = rt.gather_columns(Zl, "locally stepped Z columns")
-            W_new, _, svc = sv.shrink(Z_stepped, eta * m * lam,
-                                      state["sv"])
+            W_new, nn, svc = sv.shrink(Z_stepped, eta * m * lam,
+                                       state["sv"])
             t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
             Z_new = W_new + ((t - 1.0) / t_new) * (W_new - W)
-            return {"W": W_new,
-                    "Z": rt.broadcast(Z_new, "updated Z column"),
-                    "t": t_new, "sv": svc}
+            out = {"W": W_new,
+                   "Z": rt.broadcast(Z_new, "updated Z column"),
+                   "t": t_new, "sv": svc}
+            if metrics:
+                out["obs"] = obs_round(W, W_new, objective=lam * nn,
+                                       sv_stats=sv.device_stats(svc))
+            return out
 
     W0 = _init_W(prob, init, init_W)
     sv0 = _sv_carry0(sv, sv_carry)
     state = {"W": W0, "Z": W0, "t": jnp.array(1.0, W0.dtype), "sv": sv0}
+    if mc is not None:
+        state["obs"] = mc[0]
     res = MTLResult("accproxgd", state["W"], rt.comm,
                     extras={"lam": lam, "eta": eta, "sv_engine": sv.mode})
     if sgd is not None:
         res.extras.update(batch_size=sgd[0], local_steps=sgd[1])
     res.record(0, state["W"])
     state = rt.run_rounds(rounds, body, state, scan=scan,
-                          record=iterate_recorder(res, record_every),
+                          record=compose_records(
+                              iterate_recorder(res, record_every), mc),
                           data_leaves=gram_round_leaves(prob) if sgd is None
                           else stochastic_round_leaves(prob))
     res.W = state["W"]
     res.extras.update(sv.stats(state["sv"]))
+    if mc is not None:
+        res.extras["metrics"] = mc[2].finalize(rt)
     if keep_sv_carry:
         res.extras["sv_carry"] = state["sv"]
     return res
@@ -263,7 +298,8 @@ def admm(prob: MTLProblem, lam: float = 1e-3, rho: float = 1.0,
          runtime=None, scan: bool = True, sv_engine: str = "lazy",
          sv_rank: int = None, batch_size: int = None,
          local_steps: int = None, batch_seed: int = 0,
-         sv_carry=None, keep_sv_carry: bool = False, **_) -> MTLResult:
+         sv_carry=None, keep_sv_carry: bool = False,
+         metrics: bool = False, **_) -> MTLResult:
     """Appendix A. Worker step (A.1) is a regularized ERM:
         w_j+ = argmin_w L_nj(w)/m + <w - z_j, q_j> + rho/2 ||w - z_j||^2.
     Squared loss: closed form (from the Gram cache when present —
@@ -282,6 +318,7 @@ def admm(prob: MTLProblem, lam: float = 1e-3, rho: float = 1.0,
     loss, m, p = prob.loss, prob.m, prob.p
     sv = spectral.shrink_engine(prob, sv_engine, rank=sv_rank)
     sgd = stochastic_config(prob, batch_size, local_steps, rt.data_shards)
+    mc = metrics_channel(metrics)
 
     if sgd is None:
         def body(k, state, data):
@@ -291,12 +328,19 @@ def admm(prob: MTLProblem, lam: float = 1e-3, rho: float = 1.0,
                                               W_local, rho, m, prob.l2,
                                               iters=newton_iters, rt=rt)
             W_full = rt.gather_columns(W_local, "local w")
-            Z_new, _, svc = sv.shrink(W_full + Q / rho, lam / rho,
-                                      state["sv"])                # (A.2)
+            Z_new, nn, svc = sv.shrink(W_full + Q / rho, lam / rho,
+                                       state["sv"])               # (A.2)
             Q_new = Q + rho * (W_full - Z_new)                    # (A.3)
-            return {"W": W_local,
-                    "Z": rt.broadcast(Z_new, "z columns"),
-                    "Q": rt.broadcast(Q_new, "q columns"), "sv": svc}
+            out = {"W": W_local,
+                   "Z": rt.broadcast(Z_new, "z columns"),
+                   "Q": rt.broadcast(Q_new, "q columns"), "sv": svc}
+            if metrics:
+                # grad slot reports the primal residual W - Z (the
+                # gathered W_full is master-visible; local W is sharded)
+                out["obs"] = obs_round(Z, Z_new, grad=W_full - Z_new,
+                                       objective=lam * nn,
+                                       sv_stats=sv.device_stats(svc))
+            return out
     else:
         B, L = sgd
         # the augmented Lagrangian's per-column smoothness is the data
@@ -316,15 +360,22 @@ def admm(prob: MTLProblem, lam: float = 1e-3, rho: float = 1.0,
                     round_k=k, local_step=i, batch_size=B, eta=eta_w,
                     m=m, Z_cols=z_loc, Q_cols=q_loc, rho=rho)
             W_full = rt.gather_columns(Wl, "local w")
-            Z_new, _, svc = sv.shrink(W_full + Q / rho, lam / rho,
-                                      state["sv"])
+            Z_new, nn, svc = sv.shrink(W_full + Q / rho, lam / rho,
+                                       state["sv"])
             Q_new = Q + rho * (W_full - Z_new)
-            return {"W": Wl,
-                    "Z": rt.broadcast(Z_new, "z columns"),
-                    "Q": rt.broadcast(Q_new, "q columns"), "sv": svc}
+            out = {"W": Wl,
+                   "Z": rt.broadcast(Z_new, "z columns"),
+                   "Q": rt.broadcast(Q_new, "q columns"), "sv": svc}
+            if metrics:
+                out["obs"] = obs_round(Z, Z_new, grad=W_full - Z_new,
+                                       objective=lam * nn,
+                                       sv_stats=sv.device_stats(svc))
+            return out
 
     W0 = jnp.zeros((p, m), prob.Xs.dtype)
     state = {"W": W0, "Z": W0, "Q": W0, "sv": _sv_carry0(sv, sv_carry)}
+    if mc is not None:
+        state["obs"] = mc[0]
     res = MTLResult("admm", state["W"], rt.comm,
                     extras={"lam": lam, "rho": rho, "sv_engine": sv.mode})
     if sgd is not None:
@@ -332,12 +383,15 @@ def admm(prob: MTLProblem, lam: float = 1e-3, rho: float = 1.0,
     res.record(0, state["W"])
     # consensus variable Z is the estimator
     state = rt.run_rounds(rounds, body, state, sharded=("W",), scan=scan,
-                          record=iterate_recorder(res, record_every,
-                                                  key="Z"),
+                          record=compose_records(
+                              iterate_recorder(res, record_every, key="Z"),
+                              mc),
                           data_leaves=gram_round_leaves(prob) if sgd is None
                           else stochastic_round_leaves(prob))
     res.W = state["Z"]
     res.extras.update(sv.stats(state["sv"]))
+    if mc is not None:
+        res.extras["metrics"] = mc[2].finalize(rt)
     if keep_sv_carry:
         res.extras["sv_carry"] = state["sv"]
     return res
@@ -346,7 +400,7 @@ def admm(prob: MTLProblem, lam: float = 1e-3, rho: float = 1.0,
 @register("dfw")
 def dfw(prob: MTLProblem, radius: float = None, rounds: int = 200,
         record_every: int = 1, sv_iters: int = 60, runtime=None,
-        scan: bool = True, **_) -> MTLResult:
+        scan: bool = True, metrics: bool = False, **_) -> MTLResult:
     """Appendix B: Frank-Wolfe over {||W||_* <= R}; master only needs the
     leading singular pair of the gradient — the K = 1 case of the
     spectral engine (power iteration, residual-based early exit with
@@ -354,6 +408,7 @@ def dfw(prob: MTLProblem, radius: float = None, rounds: int = 200,
     rt = default_runtime(prob, runtime)
     if radius is None:
         radius = prob.nuclear_radius
+    mc = metrics_channel(metrics)
 
     def body(k, state, data):
         W = state["W"]
@@ -362,13 +417,22 @@ def dfw(prob: MTLProblem, radius: float = None, rounds: int = 200,
         gamma = 2.0 / (k.astype(W.dtype) + 2.0)
         # w_j <- (1-gamma) w_j - gamma R v_j u  (B.1)
         W_new = (1.0 - gamma) * W - gamma * radius * jnp.outer(u, v)
-        return {"W": rt.broadcast(W_new, "v_j * u direction")}
+        out = {"W": rt.broadcast(W_new, "v_j * u direction")}
+        if metrics:
+            # constraint form: no regularizer term, no shrink engine
+            out["obs"] = obs_round(W, W_new, grad=G)
+        return out
 
     state = {"W": jnp.zeros((prob.p, prob.m), prob.Xs.dtype)}
+    if mc is not None:
+        state["obs"] = mc[0]
     res = MTLResult("dfw", state["W"], rt.comm, extras={"radius": radius})
     res.record(0, state["W"])
     state = rt.run_rounds(rounds, body, state, scan=scan,
-                          record=iterate_recorder(res, record_every),
+                          record=compose_records(
+                              iterate_recorder(res, record_every), mc),
                           data_leaves=gram_round_leaves(prob))
     res.W = state["W"]
+    if mc is not None:
+        res.extras["metrics"] = mc[2].finalize(rt)
     return res

@@ -30,25 +30,27 @@ import jax
 import jax.numpy as jnp
 
 from .. import worker_ops
+from ...obs.device import obs_round
 from ..spectral import leading_sv
 from ..svd_ops import gram_schmidt_append
-from .base import (MTLProblem, MTLResult, default_runtime, gram_round_leaves,
-                   iterate_recorder, register, stochastic_config,
-                   stochastic_round_leaves)
+from .base import (MTLProblem, MTLResult, compose_records, default_runtime,
+                   gram_round_leaves, iterate_recorder, metrics_channel,
+                   register, stochastic_config, stochastic_round_leaves)
 
 
 def _subspace_pursuit(prob: MTLProblem, rounds: int, direction: str,
                       record_every: int, sv_iters: int, l2: float,
                       newton_damping: float = 1e-6, runtime=None,
                       scan: bool = True, batch_size: int = None,
-                      local_steps: int = None,
-                      batch_seed: int = 0) -> MTLResult:
+                      local_steps: int = None, batch_seed: int = 0,
+                      metrics: bool = False) -> MTLResult:
     rt = default_runtime(prob, runtime)
     m, p = prob.m, prob.p
     loss = prob.loss
     max_k = rounds
     name = "dgsp" if direction == "gradient" else "dnsp"
     sgd = stochastic_config(prob, batch_size, local_steps, rt.data_shards)
+    mc = metrics_channel(metrics)
 
     def messages(W_local, data, k):
         if sgd is not None:
@@ -111,6 +113,12 @@ def _subspace_pursuit(prob: MTLProblem, rounds: int, direction: str,
         out = {"U": U, "mask": mask, "W": W_local}
         if sgd is not None:
             out["V"] = V
+        if metrics:
+            # W is worker-sharded state here; the replicated master
+            # quantities are the gathered message matrix and the masked
+            # basis — step_norm reports the appended column's growth
+            out["obs"] = obs_round(state["U"] * state["mask"][None, :],
+                                   Um, grad=G)
         return out
 
     state = {"U": jnp.zeros((p, max_k), prob.Xs.dtype),
@@ -121,15 +129,20 @@ def _subspace_pursuit(prob: MTLProblem, rounds: int, direction: str,
         # the codes are worker state like W: (max_k, m) task columns
         state["V"] = jnp.zeros((max_k, m), prob.Xs.dtype)
         sharded = ("W", "V")
+    if mc is not None:
+        state["obs"] = mc[0]
     res = MTLResult(name, state["W"], rt.comm)
     if sgd is not None:
         res.extras.update(batch_size=sgd[0], local_steps=sgd[1])
     res.record(0, state["W"])
     state = rt.run_rounds(rounds, body, state, sharded=sharded, scan=scan,
-                          record=iterate_recorder(res, record_every),
+                          record=compose_records(
+                              iterate_recorder(res, record_every), mc),
                           data_leaves=gram_round_leaves(prob) if sgd is None
                           else stochastic_round_leaves(prob))
     res.W = state["W"]
+    if mc is not None:
+        res.extras["metrics"] = mc[2].finalize(rt)
     res.extras["U"] = state["U"]
     res.extras["mask"] = state["mask"]
     return res
@@ -139,30 +152,33 @@ def _subspace_pursuit(prob: MTLProblem, rounds: int, direction: str,
 def dgsp(prob: MTLProblem, rounds: int = 20, record_every: int = 1,
          sv_iters: int = 60, l2: float = 0.0, runtime=None,
          scan: bool = True, batch_size: int = None, local_steps: int = None,
-         batch_seed: int = 0, **_) -> MTLResult:
+         batch_seed: int = 0, metrics: bool = False, **_) -> MTLResult:
     return _subspace_pursuit(prob, rounds, "gradient", record_every,
                              sv_iters, l2 if l2 else prob.l2,
                              runtime=runtime, scan=scan,
                              batch_size=batch_size, local_steps=local_steps,
-                             batch_seed=batch_seed)
+                             batch_seed=batch_seed, metrics=metrics)
 
 
 @register("dnsp")
 def dnsp(prob: MTLProblem, rounds: int = 20, record_every: int = 1,
          sv_iters: int = 60, l2: float = 0.0, damping: float = 1e-4,
          runtime=None, scan: bool = True, batch_size: int = None,
-         local_steps: int = None, batch_seed: int = 0, **_) -> MTLResult:
+         local_steps: int = None, batch_seed: int = 0,
+         metrics: bool = False, **_) -> MTLResult:
     return _subspace_pursuit(prob, rounds, "newton", record_every,
                              sv_iters, l2 if l2 else prob.l2,
                              newton_damping=damping, runtime=runtime,
                              scan=scan, batch_size=batch_size,
-                             local_steps=local_steps, batch_seed=batch_seed)
+                             local_steps=local_steps, batch_seed=batch_seed,
+                             metrics=metrics)
 
 
 @register("altmin")
 def altmin(prob: MTLProblem, rank: int = None, rounds: int = 30,
            record_every: int = 1, l2: float = 1e-6, u_grad_steps: int = 20,
-           runtime=None, scan: bool = True, **_) -> MTLResult:
+           runtime=None, scan: bool = True, metrics: bool = False,
+           **_) -> MTLResult:
     """Alternating minimization over W = U V^T (Jain et al.; App-H baseline).
 
     V-step is an exact per-task projected ERM (local). U-step minimizes the
@@ -227,14 +243,25 @@ def altmin(prob: MTLProblem, rank: int = None, rounds: int = 30,
                 U_new = U_new - (G @ V_full.T) / m
         U_new = rt.broadcast(U_new, "updated U", vectors=r, dim=p)
         V2 = v_of(U_new, data)
-        return {"U": U_new, "W": U_new @ V2}
+        out = {"U": U_new, "W": U_new @ V2}
+        if metrics:
+            # W is worker-sharded; the replicated factor U is the
+            # master-visible iterate
+            out["obs"] = obs_round(U, U_new)
+        return out
 
+    mc = metrics_channel(metrics)
     state = {"U": U0, "W": jnp.zeros((p, m), prob.Xs.dtype)}
+    if mc is not None:
+        state["obs"] = mc[0]
     res = MTLResult("altmin", state["W"], rt.comm)
     res.record(0, state["W"])
     state = rt.run_rounds(rounds, body, state, sharded=("W",), scan=scan,
-                          record=iterate_recorder(res, record_every),
+                          record=compose_records(
+                              iterate_recorder(res, record_every), mc),
                           data_leaves=gram_round_leaves(prob))
     res.W = state["W"]
     res.extras["U"] = state["U"]
+    if mc is not None:
+        res.extras["metrics"] = mc[2].finalize(rt)
     return res

@@ -262,6 +262,15 @@ class ShrinkEngine:
             return {}
         return {"sv_exact_rounds": int(carry["exact_rounds"])}
 
+    def device_stats(self, carry: Carry) -> Dict[str, jnp.ndarray]:
+        """Device-side counters for the round-metrics channel
+        (repro.obs): cumulative exact-SVD fallback rounds as a traced
+        i32 scalar — usable INSIDE a round body, unlike :meth:`stats`
+        which needs a concrete carry."""
+        if not self.lazy:
+            return {"sv_exact": jnp.zeros((), jnp.int32)}
+        return {"sv_exact": jnp.asarray(carry["exact_rounds"], jnp.int32)}
+
     # -- the master step ----------------------------------------------
     def _exact_shrink(self, M, tau):
         U, S, Vt = jnp.linalg.svd(M, full_matrices=False)

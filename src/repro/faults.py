@@ -236,12 +236,17 @@ def run_case(kind: str, backend: str = "sim", scan: bool = True,
     rc = _spawn(common + ["--ckpt-dir", ckpt_dir],
                 _child_env(devices, plan))
     killed = rc != 0
+    from .obs.tracing import emit_event
+    emit_event("faults.injected", kind=kind, backend=backend,
+               after=after, exit_code=rc, ckpt_dir=ckpt_dir)
 
     # 3. post-mortem store damage for the byte-level kinds
     if kind == "corrupt":
         corrupt_npz(_newest_step(ckpt_dir), seed=plan.seed)
+        emit_event("faults.store_damaged", kind=kind, ckpt_dir=ckpt_dir)
     elif kind == "stale_manifest":
         os.remove(_newest_step(ckpt_dir))
+        emit_event("faults.store_damaged", kind=kind, ckpt_dir=ckpt_dir)
 
     # 4. one resume must finish the solve
     _spawn(common + ["--ckpt-dir", ckpt_dir, "--resume",
@@ -256,6 +261,7 @@ def run_case(kind: str, backend: str = "sim", scan: bool = True,
               "data_shards": data_shards, "devices": devices,
               "killed": killed, "bit_identical": identical,
               "recovered": bool(killed and identical)}
+    emit_event("faults.case_done", **report)
     return report
 
 
@@ -298,10 +304,12 @@ def _mp_ranks(nprocs: int, extra: List[str],
             procs.append(subprocess.Popen(args, env=env,
                                           stdout=subprocess.PIPE,
                                           stderr=subprocess.STDOUT))
-        deadline = time.time() + timeout
+        # monotonic deadline: a wall-clock (time.time) step — NTP slew,
+        # suspend/resume — must not shrink or stretch the reap window
+        deadline = time.monotonic() + timeout
         codes: List[Optional[int]] = [None] * nprocs
         outs = [b""] * nprocs
-        while time.time() < deadline and any(c is None for c in codes):
+        while time.monotonic() < deadline and any(c is None for c in codes):
             for i, p in enumerate(procs):
                 if codes[i] is None and p.poll() is not None:
                     outs[i] = p.stdout.read()
@@ -406,8 +414,11 @@ def _cmd_mp_child(args) -> None:
 
 
 def _cmd_report(args) -> None:
-    cases = [run_case(kind, backend=args.backend, scan=True)
-             for kind in KINDS]
+    from .obs.tracing import trace_span
+    cases = []
+    for kind in KINDS:
+        with trace_span("faults.case", kind=kind, backend=args.backend):
+            cases.append(run_case(kind, backend=args.backend, scan=True))
     ok = all(c["recovered"] for c in cases)
     report = {"ok": ok, "cases": cases}
     with open(args.out, "w") as f:

@@ -1,0 +1,125 @@
+"""Device-resident round metrics: the ``"obs"`` state entry.
+
+A solver called with ``metrics=True`` adds one replicated entry to its
+round-loop state — a dict of scalars updated by the round body and
+recorded every round through the same RecordSpec machinery that
+snapshots ``W`` (stacked ``lax.scan`` outputs; host-side reads under
+the eager driver).  The rules that keep this free of observable side
+effects (DESIGN.md §15):
+
+* **No host callbacks.**  The metrics ride the scan carry and come out
+  as stacked arrays after the solve — LINT102 and the §11 static
+  verifier hold on instrumented programs unchanged.
+* **No new collectives.**  Every field is computed from quantities the
+  replicated master already holds (the gathered gradient matrix, the
+  replicated iterate, the spectral engine's carry).  A "true"
+  data-fit objective would need an extra per-round gather and would
+  change the CommLog template; the ledger is the artifact under test,
+  so the objective field reports the master-visible regularizer term
+  ``lam * ||W||_*`` (free: the shrink already returns the nuclear norm
+  of its output) and solvers without a shrink report 0.
+* **No W dataflow changes.**  The metric ops consume round outputs and
+  feed only the obs entry, so ``metrics=True`` leaves ``W`` and the
+  ledger bit-identical to ``metrics=False`` (tested on both drivers ×
+  all three layouts).
+
+Fields of the per-round pytree (all replicated scalars):
+
+====================  =====================================================
+``objective``         master-visible objective term (``lam * ||W||_*``
+                      where the solver shrinks; 0.0 otherwise)
+``grad_norm``         Frobenius norm of the gathered gradient/message
+                      matrix entering the master step (0.0 when the
+                      round has no full-batch gradient)
+``step_norm``         Frobenius norm of the master-iterate change this
+                      round
+``sv_exact``          cumulative exact-SVD fallback rounds of the
+                      spectral engine (0 for exact mode / no engine)
+====================  =====================================================
+
+Per-round charged communication is NOT a device value — the ledger
+template is host state — so the sink stamps ``charged_floats_per_round``
+onto the finalized dict from the runtime's recorded template.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["OBS_KEY", "obs_init", "obs_round", "RoundMetricsSink"]
+
+OBS_KEY = "obs"
+
+FIELDS = ("objective", "grad_norm", "step_norm", "sv_exact")
+
+
+def _f32(x) -> jnp.ndarray:
+    return jnp.asarray(x, jnp.float32)
+
+
+def _fro(a) -> jnp.ndarray:
+    a = jnp.asarray(a)
+    return jnp.sqrt(jnp.sum(jnp.square(a.astype(jnp.float32))))
+
+
+def obs_init() -> Dict[str, jnp.ndarray]:
+    """The round-0 obs entry (all-zero scalars; fixed field set so the
+    scan carry structure is static)."""
+    return {"objective": jnp.zeros((), jnp.float32),
+            "grad_norm": jnp.zeros((), jnp.float32),
+            "step_norm": jnp.zeros((), jnp.float32),
+            "sv_exact": jnp.zeros((), jnp.int32)}
+
+
+def obs_round(prev, new, *, grad=None, objective=None,
+              sv_stats: Optional[Dict[str, jnp.ndarray]] = None
+              ) -> Dict[str, jnp.ndarray]:
+    """One round's metrics from master-visible quantities only.
+
+    ``prev``/``new`` are the replicated master iterate before/after the
+    round; ``grad`` the gathered gradient/message matrix (None when the
+    round has none); ``objective`` the master-visible objective term;
+    ``sv_stats`` the spectral engine's device counters
+    (:meth:`ShrinkEngine.device_stats`).
+    """
+    zero = jnp.zeros((), jnp.float32)
+    return {
+        "objective": zero if objective is None else _f32(objective),
+        "grad_norm": zero if grad is None else _fro(grad),
+        "step_norm": _fro(jnp.asarray(new) - jnp.asarray(prev)),
+        "sv_exact": (jnp.zeros((), jnp.int32) if sv_stats is None
+                     else jnp.asarray(sv_stats["sv_exact"], jnp.int32)),
+    }
+
+
+class RoundMetricsSink:
+    """Collects the per-round obs snapshots a RecordSpec delivers and
+    finalizes them into ``MTLResult.extras["metrics"]``."""
+
+    def __init__(self):
+        self._rounds: List[int] = []
+        self._values: List[Dict[str, Any]] = []
+
+    def record(self, rnd: int, value: Dict[str, Any]) -> None:
+        self._rounds.append(int(rnd))
+        self._values.append(value)
+
+    def finalize(self, rt=None) -> Dict[str, Any]:
+        """Host arrays keyed by field, stacked over recorded rounds,
+        plus the ledger's per-round charged floats from the runtime's
+        communication template."""
+        out: Dict[str, Any] = {
+            "round": np.asarray(self._rounds, np.int64)}
+        if self._values:
+            for k in self._values[0]:
+                out[k] = np.stack(
+                    [np.asarray(v[k]) for v in self._values])
+        else:
+            for k in FIELDS:
+                out[k] = np.zeros((0,), np.float32)
+        if rt is not None:
+            out["charged_floats_per_round"] = int(sum(
+                ev.vectors * ev.dim for ev in rt._template))
+        return out

@@ -84,13 +84,19 @@ SAMPLE_AXIS_LEAVES = frozenset({"Xs", "ys"})
 
 @dataclasses.dataclass
 class RecordSpec:
-    """Snapshot cadence for one state leaf, driver-mode agnostic.
+    """Snapshot cadence for one state entry, driver-mode agnostic.
 
     ``sink.record(round, value)`` receives ``state[key]`` after every
     ``every``-th round (and always after the final round) — host-side
     per round under the eager driver, from the stacked scan outputs
     under the scanned driver.  Replaces the old ``on_round`` callback,
     which could not exist inside a fused ``lax.scan`` round loop.
+
+    The recorded entry may be a PYTREE of arrays (e.g. the ``"obs"``
+    round-metrics dict, repro.obs): the scan driver carries one stacked
+    buffer per leaf.  ``run_rounds(record=...)`` accepts a single spec
+    or a sequence of them, so an iterate history and a metrics channel
+    ride the same scan without interfering.
     """
     sink: object          # anything with .record(rnd: int, value)
     every: int = 1
@@ -482,63 +488,109 @@ class ProtocolRuntime:
         """Return step(t:int, state) -> state with data bound as args."""
         raise NotImplementedError
 
+    @staticmethod
+    def _as_records(record) -> Tuple[RecordSpec, ...]:
+        """Normalize ``run_rounds``'s ``record=`` argument: None, one
+        RecordSpec, or a sequence of them -> a tuple of specs."""
+        if record is None:
+            return ()
+        if isinstance(record, RecordSpec):
+            return (record,)
+        return tuple(record)
+
     def _compile_scan(self, body: RoundBody, state, sharded, rounds: int,
-                      record: Optional[RecordSpec]):
+                      records: Tuple[RecordSpec, ...]):
         """Return fn(state) -> (state, snaps) running ALL rounds in one
-        device-resident ``lax.scan`` (snaps stacked over snapshot index;
-        () when ``record`` is None)."""
+        device-resident ``lax.scan``.  ``snaps`` is one entry per record
+        spec, each a pytree matching ``state[spec.key]`` with a leading
+        snapshot axis; () when ``records`` is empty."""
         raise NotImplementedError
 
+    @staticmethod
+    def _snap_write(bufs, value, slot):
+        """Write one snapshot ``value`` (a pytree) into its stacked
+        per-leaf buffers at ``slot`` (no-op when slot < 0)."""
+        return jax.lax.cond(
+            slot >= 0,
+            lambda b: jax.tree.map(
+                lambda buf, leaf: jax.lax.dynamic_update_index_in_dim(
+                    buf, leaf, slot, 0), b, value),
+            lambda b: b, bufs)
+
+    @staticmethod
+    def _snap_zeros(n_snaps: int, value):
+        """Preallocated (n_snaps, ...) snapshot buffers for one
+        recorded state entry (a pytree: one buffer per leaf)."""
+        return jax.tree.map(
+            lambda leaf: jnp.zeros((n_snaps,) + jnp.shape(leaf),
+                                   jnp.asarray(leaf).dtype), value)
+
     def _scan_program(self, body: RoundBody, rounds: int,
-                      record: Optional[RecordSpec]):
+                      records: Tuple[RecordSpec, ...]):
         """The backend-shared scan core: program(state, data) ->
         (state, snaps).
 
-        Snapshots are written into a preallocated (n_snaps, ...) buffer
-        carried through the scan — stacked scan outputs replace the
-        eager driver's host-side record callback, so ``record_every``
-        histories survive the fusion without materializing every round.
-        The per-round write slots are derived from the SAME
-        ``snap_rounds`` list the driver uses to size the buffer and map
-        snapshots back to round numbers — one source of truth for the
-        cadence.
+        Snapshots are written into preallocated (n_snaps, ...) buffers
+        (one per recorded leaf) carried through the scan — stacked scan
+        outputs replace the eager driver's host-side record callback,
+        so ``record_every`` histories survive the fusion without
+        materializing every round.  The per-round write slots are
+        derived from the SAME ``snap_rounds`` lists the driver uses to
+        size the buffers and map snapshots back to round numbers — one
+        source of truth for the cadence.
+
+        A spec that snapshots EVERY round (the obs metrics channel)
+        skips the buffer machinery entirely and streams through the
+        scan's stacked ``ys`` output instead: same (rounds, ...) result,
+        but no preallocated carry buffers, no per-round ``cond``, and no
+        slot table — the conditional-write path roughly doubled the
+        compiled program for what is an unconditional copy.
         """
-        if record is not None:
-            snap_at = record.snap_rounds(rounds)
-            slots = [-1] * rounds            # slots[t] = snapshot index
-            for i, t in enumerate(snap_at):
-                slots[t] = i
+        snap_lists = [r.snap_rounds(rounds) for r in records]
+        dense = [snap_at == list(range(rounds)) for snap_at in snap_lists]
+        buf_idx = [i for i in range(len(records)) if not dense[i]]
+        slot_rows = []                  # slot_rows[j][t] = snapshot index
+        for i in buf_idx:
+            row = [-1] * rounds
+            for s, t in enumerate(snap_lists[i]):
+                row[t] = s
+            slot_rows.append(row)
 
         def program(state, data):
             ks = jnp.arange(rounds, dtype=jnp.int32)
-            if record is None:
+            if not records:
                 def step(st, k):
                     return body(k, st, data), None
                 state, _ = jax.lax.scan(step, state, ks)
                 return state, ()
 
-            leaf = state[record.key]
-            snaps0 = jnp.zeros((len(snap_at),) + leaf.shape, leaf.dtype)
-            slot_of = jnp.asarray(slots, jnp.int32)
+            snaps0 = tuple(
+                self._snap_zeros(len(snap_lists[i]), state[records[i].key])
+                for i in buf_idx)
+            slot_of = (jnp.asarray(slot_rows, jnp.int32)  # (n_buf, rounds)
+                       if buf_idx else None)
 
             def step(carry, k):
                 st, snaps = carry
                 st = body(k, st, data)
-                slot = slot_of[k]
-                snaps = jax.lax.cond(
-                    slot >= 0,
-                    lambda s: jax.lax.dynamic_update_index_in_dim(
-                        s, st[record.key], slot, 0),
-                    lambda s: s, snaps)
-                return (st, snaps), None
+                snaps = tuple(
+                    self._snap_write(snaps[j], st[records[i].key],
+                                     slot_of[j, k])
+                    for j, i in enumerate(buf_idx))
+                ys = tuple(st[r.key]
+                           for i, r in enumerate(records) if dense[i])
+                return (st, snaps), ys
 
-            (state, snaps), _ = jax.lax.scan(step, (state, snaps0), ks)
-            return state, snaps
+            (state, snaps), ys = jax.lax.scan(step, (state, snaps0), ks)
+            out, bi, yi = [], iter(snaps), iter(ys)
+            for i in range(len(records)):
+                out.append(next(yi) if dense[i] else next(bi))
+            return state, tuple(out)
 
         return program
 
     def _scan_segment_program(self, body: RoundBody, seg_len: int,
-                              record_key: Optional[str], n_snaps: int):
+                              seg_records: Tuple[Tuple[str, int], ...]):
         """The segment core of a RESUMABLE scanned solve: program(state,
         data, start, slot_of) -> (state, snaps), running ``seg_len``
         rounds from GLOBAL round index ``start``.
@@ -548,44 +600,50 @@ class ProtocolRuntime:
         per-round W dataflow is the identical HLO, so a segmented solve
         agrees bit-for-bit with the fused single-scan run (the
         acceptance invariant of DESIGN.md §12).  ``start`` and the
-        per-round snapshot-slot map ``slot_of`` (slot index or -1,
-        length ``seg_len``) enter as ARGUMENTS, not trace constants, so
-        every equal-length segment of a solve shares one compile.
+        per-round snapshot-slot map ``slot_of`` (a (n_specs, seg_len)
+        array of slot indices or -1) enter as ARGUMENTS, not trace
+        constants, so every segment with equal length and per-spec
+        snapshot counts shares one compile.  ``seg_records`` is one
+        ``(state key, snapshots in this segment)`` pair per record
+        spec; specs with zero snapshots here contribute a () snaps
+        placeholder (a dynamic_update into a zero-length buffer would
+        not even compile).
         """
+        any_snaps = any(n > 0 for _, n in seg_records)
+
         def program(state, data, start, slot_of):
             ks = start + jnp.arange(seg_len, dtype=jnp.int32)
-            if record_key is None or n_snaps == 0:
+            if not any_snaps:
                 # no snapshot falls inside this segment: skip the snap
-                # write machinery entirely (a dynamic_update into a
-                # zero-length buffer would not even compile)
+                # write machinery entirely
                 def step(st, k):
                     return body(k, st, data), None
                 state, _ = jax.lax.scan(step, state, ks)
-                return state, ()
+                return state, tuple(() for _ in seg_records)
 
-            leaf = state[record_key]
-            snaps0 = jnp.zeros((n_snaps,) + leaf.shape, leaf.dtype)
+            snaps0 = tuple(
+                () if n == 0 else self._snap_zeros(n, state[key])
+                for key, n in seg_records)
 
-            def step(carry, k_slot):
-                k, slot = k_slot
+            def step(carry, k_slots):
+                k, slot_col = k_slots
                 st, snaps = carry
                 st = body(k, st, data)
-                snaps = jax.lax.cond(
-                    slot >= 0,
-                    lambda s: jax.lax.dynamic_update_index_in_dim(
-                        s, st[record_key], slot, 0),
-                    lambda s: s, snaps)
+                snaps = tuple(
+                    snaps[i] if n == 0 else
+                    self._snap_write(snaps[i], st[key], slot_col[i])
+                    for i, (key, n) in enumerate(seg_records))
                 return (st, snaps), None
 
-            (state, snaps), _ = jax.lax.scan(step, (state, snaps0),
-                                             (ks, slot_of))
+            (state, snaps), _ = jax.lax.scan(
+                step, (state, snaps0), (ks, jnp.transpose(slot_of)))
             return state, snaps
 
         return program
 
     def _compile_segment(self, body: RoundBody, state, sharded,
-                         seg_len: int, record_key: Optional[str],
-                         n_snaps: int):
+                         seg_len: int,
+                         seg_records: Tuple[Tuple[str, int], ...]):
         """Return fn(state, start, slot_of) -> (state, snaps) running one
         ``seg_len``-round segment device-resident (backend-specific)."""
         raise NotImplementedError
@@ -619,7 +677,7 @@ class ProtocolRuntime:
     def run_rounds(self, rounds: int, body: RoundBody,
                    state: Dict[str, jnp.ndarray],
                    sharded: Sequence[str] = (),
-                   record: Optional[RecordSpec] = None,
+                   record=None,        # RecordSpec | sequence of them
                    count_rounds: bool = True, scan: bool = False,
                    data_leaves: Optional[Sequence[str]] = None
                    ) -> Dict[str, jnp.ndarray]:
@@ -645,8 +703,10 @@ class ProtocolRuntime:
         — valid because every round of one solver runs the same
         collectives (the static round structure of all Table-1
         protocols, DESIGN.md §5), so the ledger is bit-identical across
-        drivers by construction.  ``record`` snapshots one state leaf on
-        a ``record_every`` cadence in either mode.
+        drivers by construction.  ``record`` snapshots state entries on
+        their ``record_every`` cadences in either mode (one RecordSpec
+        or a sequence — e.g. the W iterate history next to the obs
+        round-metrics channel).
 
         Both drivers work unchanged under 2-D sharding
         (``data_shards > 1``): the scanned loop sits inside the 2-D
@@ -660,41 +720,44 @@ class ProtocolRuntime:
         self._data_template = []
         self._data_leaves = None if data_leaves is None else \
             tuple(data_leaves)
+        records = self._as_records(record)
         if self._ckpt is not None and self._capture is None:
             # segmented resumable driver (repro.runtime.recovery): same
             # per-round program + accounting, with the carry persisted
             # between checkpoint_every-round segments
             return self._ckpt.drive(self, rounds, body, state,
-                                    tuple(sharded), record, count_rounds,
+                                    tuple(sharded), records, count_rounds,
                                     scan)
         self._recording = True
         if self._capture is not None:
             return self._capture_rounds(rounds, body, state, tuple(sharded),
-                                        record, count_rounds, scan)
+                                        records, count_rounds, scan)
         if scan:
             fn = self._compile_scan(body, state, tuple(sharded), rounds,
-                                    record)
+                                    records)
             state, snaps = fn(state)    # traces once: records the template
             self._recording = False
             for _ in range(rounds):
                 self._replay_round(count_rounds)
-            if record is not None:
-                for i, t in enumerate(record.snap_rounds(rounds)):
-                    record.sink.record(t + 1, snaps[i])
+            for i, r in enumerate(records):
+                for si, t in enumerate(r.snap_rounds(rounds)):
+                    r.sink.record(
+                        t + 1, jax.tree.map(lambda b: b[si], snaps[i]))
             return state
 
         step = self._compile(body, state, tuple(sharded))
-        snap_at = set(record.snap_rounds(rounds)) if record else ()
+        snap_sets = [set(r.snap_rounds(rounds)) for r in records]
         for t in range(rounds):
             state = step(t, state)   # first call traces + records
             self._recording = False
             self._replay_round(count_rounds)
-            if record is not None and t in snap_at:
-                record.sink.record(t + 1, state[record.key])
+            for r, sset in zip(records, snap_sets):
+                if t in sset:
+                    r.sink.record(t + 1, state[r.key])
         return state
 
     def _capture_rounds(self, rounds: int, body: RoundBody, state,
-                        sharded, record, count_rounds: bool, scan: bool):
+                        sharded, records, count_rounds: bool, scan: bool):
         """The static-analysis driver (``repro.analysis``): trace the
         EXACT program the real driver would execute — same jit / vmap /
         shard_map wrapping, same donation decision — but never run it.
@@ -710,7 +773,7 @@ class ProtocolRuntime:
         post-processing stays oblivious.
         """
         if scan:
-            fn = self._compile_scan(body, state, sharded, rounds, record)
+            fn = self._compile_scan(body, state, sharded, rounds, records)
         else:
             step = self._compile(body, state, sharded)
             fn = lambda s: step(0, s)                         # noqa: E731
@@ -718,9 +781,9 @@ class ProtocolRuntime:
         self._recording = False                  # template recorded above
         for _ in range(rounds):
             self._replay_round(count_rounds)
-        if record is not None:
-            for t in record.snap_rounds(rounds):
-                record.sink.record(t + 1, state[record.key])
+        for r in records:
+            for t in r.snap_rounds(rounds):
+                r.sink.record(t + 1, state[r.key])
         self._capture.absorb(self, closed, state,
                              out_shapes[0] if scan else out_shapes,
                              rounds=rounds, scan=scan)

@@ -296,15 +296,20 @@ class MeshRuntime(ProtocolRuntime):
         return lambda t, s: step(self._bind_scalar(t),
                                  self._bind_state(s, sharded), data)
 
-    def _compile_scan(self, body, state, sharded, rounds, record):
+    @staticmethod
+    def _snaps_spec(entry_spec):
+        """PartitionSpecs of one recorded entry's stacked snapshot
+        buffers: the entry's own per-leaf specs behind a leading
+        (replicated) snapshot axis."""
+        return jax.tree.map(lambda ls: P(None, *ls), entry_spec,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    def _compile_scan(self, body, state, sharded, rounds, records):
         state_specs, data, data_specs = self._specs(state, sharded)
         data = self._bind_data(data, data_specs)
-        program = self._scan_program(body, rounds, record)
-        if record is None:
-            snaps_spec = ()
-        else:
-            leaf_spec = state_specs[record.key]
-            snaps_spec = P(None, *leaf_spec)   # leading snapshot axis
+        program = self._scan_program(body, rounds, records)
+        snaps_spec = tuple(self._snaps_spec(state_specs[r.key])
+                           for r in records)
         fn = shard_map(program,
                        mesh=self.mesh,
                        in_specs=(state_specs, data_specs),
@@ -316,20 +321,19 @@ class MeshRuntime(ProtocolRuntime):
             self._shield_donated(self._bind_state(s, sharded), donate),
             data)
 
-    def _compile_segment(self, body, state, sharded, seg_len, record_key,
-                         n_snaps):
+    def _compile_segment(self, body, state, sharded, seg_len, seg_records):
         state_specs, data, data_specs = self._specs(state, sharded)
         data = self._bind_data(data, data_specs)
-        program = self._scan_segment_program(body, seg_len, record_key,
-                                             n_snaps)
-        if record_key is None or n_snaps == 0:
-            snaps_spec = ()
-        else:
-            leaf_spec = state_specs[record_key]
-            snaps_spec = P(None, *leaf_spec)   # leading snapshot axis
+        program = self._scan_segment_program(body, seg_len, seg_records)
+        any_snaps = any(n > 0 for _, n in seg_records)
+        snaps_spec = tuple(
+            () if not any_snaps or n == 0
+            else self._snaps_spec(state_specs[key])
+            for key, n in seg_records)
         fn = shard_map(program,
                        mesh=self.mesh,
-                       in_specs=(state_specs, data_specs, P(), P(None)),
+                       in_specs=(state_specs, data_specs, P(),
+                                 P(None, None)),
                        out_specs=(state_specs, snaps_spec),
                        **_NO_REP_CHECK)
         donate = self._state_donation()
@@ -337,4 +341,4 @@ class MeshRuntime(ProtocolRuntime):
         return lambda s, start, slots: step(
             self._shield_donated(self._bind_state(s, sharded), donate),
             data, self._bind_scalar(start),
-            self._bind_scalar(np.asarray(slots), P(None)))
+            self._bind_scalar(np.asarray(slots), P(None, None)))

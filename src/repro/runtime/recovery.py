@@ -52,6 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs.tracing import emit_event as obs_event, trace_span
 from ..train import checkpoint as ckpt_store
 from ..train.checkpoint import CheckpointError
 from .base import _DataEvent, _WireEvent
@@ -295,61 +296,79 @@ class SolveCheckpointer:
                     f"newest INTACT checkpoint is step {step} — rolling "
                     f"back (stale manifest after a partial failure)")
                 self.info["rolled_back_from"] = latest
+                obs_event("recovery.rollback", ckpt_dir=self.ckpt_dir,
+                          manifest_step=int(latest), restored_step=int(step))
         meta = json.loads(bytes(np.asarray(tree["meta_json"])))
         self._resume = {"step": step, "meta": meta,
                         "carry": tree.get("carry", []),
-                        "snaps": tree.get("snaps_hist"),
-                        "snap_rounds": tree.get("snap_rounds")}
+                        "tree": tree}
         self.info["resumed_from"] = meta["rounds_done"]
+        obs_event("recovery.segment_restored", ckpt_dir=self.ckpt_dir,
+                  step=int(step), rounds_done=int(meta["rounds_done"]),
+                  skipped_corrupt=list(skipped))
         return True
 
     # -- persistence ----------------------------------------------------
     def _persist(self, rt, end: int, rounds: int, state, snaps_hist,
-                 record, count_rounds: bool, scan: bool,
+                 records, count_rounds: bool, scan: bool,
                  tmpl_hash: str) -> None:
         final = end == rounds
         if is_primary():
-            leaves = jax.tree.flatten(state)[0]
-            tree: Dict[str, Any] = {
-                "carry": [_host_leaf(rt, x) for x in leaves]}
-            if record is not None and snaps_hist:
-                tree["snaps_hist"] = np.stack(
-                    [_host_leaf(rt, v) for _, v in snaps_hist])
-                tree["snap_rounds"] = np.asarray(
-                    [t for t, _ in snaps_hist], np.int64)
-            meta = {
-                "version": 1,
-                "rounds": int(rounds),
-                "rounds_done": int(end),
-                "count_rounds": bool(count_rounds),
-                "scan": bool(scan),
-                "record": None if record is None else
-                          {"every": record.every, "key": record.key},
-                "template": [dataclasses.asdict(e) for e in rt._template],
-                "data_template": [dataclasses.asdict(e)
-                                  for e in rt._data_template],
-                "template_hash": tmpl_hash,
-            }
-            tree["meta_json"] = np.frombuffer(
-                json.dumps(meta, sort_keys=True).encode(), np.uint8).copy()
-            ckpt_store.save_checkpoint(self.ckpt_dir, end, tree,
-                                       keep=self.keep)
-            _touch_manifest_latest(self.ckpt_dir, end)
+            with trace_span("ckpt.save", step=int(end), final=bool(final),
+                            ckpt_dir=self.ckpt_dir):
+                leaves = jax.tree.flatten(state)[0]
+                tree: Dict[str, Any] = {
+                    "carry": [_host_leaf(rt, x) for x in leaves]}
+                # per-spec snapshot histories: the recorded value may be
+                # a pytree, so each spec stores its snap rounds plus one
+                # stacked array per flattened leaf
+                for i, _ in enumerate(records):
+                    hist = snaps_hist[i]
+                    if not hist:
+                        continue
+                    tree[f"snap_rounds_{i}"] = np.asarray(
+                        [t for t, _ in hist], np.int64)
+                    flat = [jax.tree.flatten(v)[0] for _, v in hist]
+                    for j in range(len(flat[0])):
+                        tree[f"snaps_{i}_{j}"] = np.stack(
+                            [_host_leaf(rt, fs[j]) for fs in flat])
+                meta = {
+                    "version": 1,
+                    "rounds": int(rounds),
+                    "rounds_done": int(end),
+                    "count_rounds": bool(count_rounds),
+                    "scan": bool(scan),
+                    "record": [{"every": r.every, "key": r.key}
+                               for r in records] or None,
+                    "template": [dataclasses.asdict(e)
+                                 for e in rt._template],
+                    "data_template": [dataclasses.asdict(e)
+                                      for e in rt._data_template],
+                    "template_hash": tmpl_hash,
+                }
+                tree["meta_json"] = np.frombuffer(
+                    json.dumps(meta, sort_keys=True).encode(),
+                    np.uint8).copy()
+                ckpt_store.save_checkpoint(self.ckpt_dir, end, tree,
+                                           keep=self.keep)
+                _touch_manifest_latest(self.ckpt_dir, end)
         # the fault hook fires on EVERY process (a preemption does not
         # politely pick the writer), after the store write is durable
         ckpt_store._fire("segment_saved", step=end, ckpt_dir=self.ckpt_dir,
                          final=final)
 
     # -- the drive ------------------------------------------------------
-    def drive(self, rt, rounds: int, body, state, sharded, record,
+    def drive(self, rt, rounds: int, body, state, sharded, records,
               count_rounds: bool, scan: bool):
         # data build first: its one-per-solve Gram-cache accounting must
         # not depend on how many segments execute (a resume with zero
         # rounds left still charges setup, like any solve)
         rt._round_data()
 
-        snap_at = record.snap_rounds(rounds) if record is not None else []
-        snaps_hist: List[Tuple[int, Any]] = []   # (round t, value)
+        records = tuple(records)
+        snap_lists = [r.snap_rounds(rounds) for r in records]
+        # per-spec snapshot histories: snaps_hist[i] = [(round t, value)]
+        snaps_hist: List[List[Tuple[int, Any]]] = [[] for _ in records]
         start = 0
         stored_hash = None
 
@@ -360,9 +379,12 @@ class SolveCheckpointer:
                     f"checkpoint in {self.ckpt_dir} was written by a "
                     f"{meta['rounds']}-round solve; this solve runs "
                     f"{rounds} rounds — config drift, refusing to resume")
-            want_rec = None if record is None else \
-                {"every": record.every, "key": record.key}
-            if meta["record"] != want_rec:
+            want_rec = [{"every": r.every, "key": r.key}
+                        for r in records] or None
+            got_rec = meta["record"]
+            if isinstance(got_rec, dict):     # pre-multi-spec store
+                got_rec = [got_rec]
+            if got_rec != want_rec:
                 raise CheckpointError(
                     f"checkpoint snapshot cadence {meta['record']} does "
                     f"not match this solve's {want_rec} — config drift")
@@ -386,11 +408,18 @@ class SolveCheckpointer:
                         f"{jnp.shape(a)}/{jnp.asarray(a).dtype}")
                 news.append(b)
             state = jax.tree.unflatten(treedef, news)
-            # snapshot history up to the resume point
-            if self._resume.get("snaps") is not None:
-                for t, v in zip(np.asarray(self._resume["snap_rounds"]),
-                                self._resume["snaps"]):
-                    snaps_hist.append((int(t), jnp.asarray(v)))
+            # snapshot histories up to the resume point
+            stored_tree = self._resume.get("tree") or {}
+            for i, r in enumerate(records):
+                ts = stored_tree.get(f"snap_rounds_{i}")
+                if ts is None:
+                    continue
+                vals0, vdef = jax.tree.flatten(state[r.key])
+                bufs = [jnp.asarray(stored_tree[f"snaps_{i}_{j}"])
+                        for j in range(len(vals0))]
+                for si, t in enumerate(np.asarray(ts)):
+                    snaps_hist[i].append((int(t), jax.tree.unflatten(
+                        vdef, [b[si] for b in bufs])))
             # ledger catch-up: replay the completed rounds from the
             # STORED template so the CommLog continuation is event-for-
             # event identical to the uninterrupted run
@@ -424,49 +453,55 @@ class SolveCheckpointer:
             rt._recording = True
 
         if scan:
-            seg_fns: Dict[Tuple[int, int], Any] = {}
+            seg_fns: Dict[Tuple[int, Tuple[int, ...]], Any] = {}
             for s, e in segs:
                 s = max(s, start)
                 seg_len = e - s
-                local = [t for t in snap_at if s <= t < e]
-                slots = np.full(seg_len, -1, np.int32)
-                for i, t in enumerate(local):
-                    slots[t - s] = i
-                key = (seg_len, len(local))
+                local = [[t for t in snap_lists[i] if s <= t < e]
+                         for i in range(len(records))]
+                slots = np.full((len(records), seg_len), -1, np.int32)
+                for i, loc in enumerate(local):
+                    for si, t in enumerate(loc):
+                        slots[i, t - s] = si
+                key = (seg_len, tuple(len(loc) for loc in local))
                 if key not in seg_fns:
                     seg_fns[key] = rt._compile_segment(
                         body, state, sharded, seg_len,
-                        None if record is None else record.key, len(local))
+                        tuple((r.key, len(loc))
+                              for r, loc in zip(records, local)))
                 state, snaps = seg_fns[key](state, s, slots)
                 if not traced:
                     after_first_trace()
                 for _ in range(seg_len):
                     rt._replay_round(count_rounds)
-                for i, t in enumerate(local):
-                    snaps_hist.append((t, snaps[i]))
-                self._persist(rt, e, rounds, state, snaps_hist, record,
+                for i, loc in enumerate(local):
+                    for si, t in enumerate(loc):
+                        snaps_hist[i].append(
+                            (t, jax.tree.map(lambda b: b[si], snaps[i])))
+                self._persist(rt, e, rounds, state, snaps_hist, records,
                               count_rounds, scan, fresh_hash)
                 self.info["segments_run"] += 1
         else:
             step = rt._compile(body, state, sharded) if segs else None
             bset = {e for _, e in segs}
-            snapset = set(snap_at)
+            snapsets = [set(sl) for sl in snap_lists]
             for t in range(start, rounds):
                 state = step(t, state)
                 if not traced:
                     after_first_trace()
                 rt._replay_round(count_rounds)
-                if t in snapset:
-                    snaps_hist.append((t, state[record.key]))
+                for i, r in enumerate(records):
+                    if t in snapsets[i]:
+                        snaps_hist[i].append((t, state[r.key]))
                 if t + 1 in bset:
                     self._persist(rt, t + 1, rounds, state, snaps_hist,
-                                  record, count_rounds, scan, fresh_hash)
+                                  records, count_rounds, scan, fresh_hash)
                     self.info["segments_run"] += 1
 
         rt._recording = False
-        if record is not None:
-            for t, v in sorted(snaps_hist, key=lambda kv: kv[0]):
-                record.sink.record(t + 1, v)
+        for i, r in enumerate(records):
+            for t, v in sorted(snaps_hist[i], key=lambda kv: kv[0]):
+                r.sink.record(t + 1, v)
         return state
 
 

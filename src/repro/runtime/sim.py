@@ -139,8 +139,8 @@ class SimRuntime(ProtocolRuntime):
 
         return lambda t, s: step(jnp.int32(t), s, data)
 
-    def _compile_scan(self, body, state, sharded, rounds, record):
-        program = self._scan_program(body, rounds, record)
+    def _compile_scan(self, body, state, sharded, rounds, records):
+        program = self._scan_program(body, rounds, records)
         data = self._round_data()
         if self.data_shards == 1:
             donate = self._state_donation()
@@ -156,10 +156,8 @@ class SimRuntime(ProtocolRuntime):
         step = jax.jit(lambda s, d: self._unreplicate(vprog(s, d)))
         return lambda s: step(s, data)
 
-    def _compile_segment(self, body, state, sharded, seg_len, record_key,
-                         n_snaps):
-        program = self._scan_segment_program(body, seg_len, record_key,
-                                             n_snaps)
+    def _compile_segment(self, body, state, sharded, seg_len, seg_records):
+        program = self._scan_segment_program(body, seg_len, seg_records)
         data = self._round_data()
         if self.data_shards == 1:
             donate = self._state_donation()

@@ -51,6 +51,8 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..core.losses import get_loss
+from ..obs.metrics import default_registry
+from ..obs.tracing import emit_event, trace_span
 from ..train import checkpoint
 
 _MANIFEST_VERSION = 1
@@ -369,11 +371,23 @@ class MTLServer:
     §14).  ``code_dtype="int8"|"fp8"`` stores the code table quantized
     with per-code scales (``kernels.mtl_score.quantize_codes``);
     onboarding requantizes the appended row on install.
+
+    SLO telemetry (DESIGN.md §15): every scoring call reports into
+    ``registry`` (default: the process-wide
+    ``repro.obs.default_registry()``) — a ``serve_latency_seconds``
+    histogram (p50/p99 via its snapshot), ``serve_requests_total`` /
+    ``serve_waves_total`` / ``serve_swaps_total`` counters — measured
+    AROUND the jit'd dispatch on the host, never inside it (LINT102:
+    no callbacks on the hot path).  ``swap_log`` is bounded at
+    ``swap_log_limit`` installs; evicted entries leave as
+    ``serve.swap_evicted`` obs events, so a long-lived server's
+    install history stays inspectable without unbounded host memory.
     """
 
     def __init__(self, model: FactoredModel, *, batch_size: int = 64,
                  mesh=None, axis: str = "tasks", kernel: str = "xla",
-                 code_dtype: str = "f32"):
+                 code_dtype: str = "f32", registry=None,
+                 swap_log_limit: int = 256):
         from ..kernels.mtl_score import CODE_DTYPES
         if kernel not in ("xla", "pallas"):
             raise ValueError(f"kernel must be 'xla' or 'pallas', "
@@ -386,16 +400,27 @@ class MTLServer:
                 "kernel='pallas' is single-device; a sharded code table "
                 "serves through the XLA collective-gather path instead")
             kernel = "xla"
+        if swap_log_limit < 1:
+            raise ValueError(f"swap_log_limit must be >= 1, got "
+                             f"{swap_log_limit}")
         self.kernel, self.code_dtype = kernel, code_dtype
         self.B = int(batch_size)
         self.mesh, self.axis = mesh, axis
         self._lock = threading.Lock()
+        self.registry = default_registry() if registry is None else registry
+        self._lat = self.registry.histogram("serve_latency_seconds")
+        self._req = self.registry.counter("serve_requests_total")
+        self._wav = self.registry.counter("serve_waves_total")
+        self._swp = self.registry.counter("serve_swaps_total")
+        self._bad = self.registry.counter("serve_invalid_batches_total")
         # (monotonic install time, version id) per install — the
         # streaming loop's staleness probe (sample arrival -> the swap
-        # that first serves a model trained on it, DESIGN.md §13)
+        # that first serves a model trained on it, DESIGN.md §13);
+        # bounded: the oldest entries are evicted as obs events
         self.swap_log: list = []
+        self.swap_log_limit = int(swap_log_limit)
         self._state: _ServeState = self._prepare(model)
-        self.swap_log.append((time.monotonic(), self._state.version))
+        self._log_swap(self._state.version)
 
     # -- state building / swapping -------------------------------------
     def _prepare(self, model: FactoredModel,
@@ -431,18 +456,30 @@ class MTLServer:
                            key_index=None if keys is None else
                            {k: i for i, k in enumerate(keys)})
 
+    def _log_swap(self, version: str) -> None:
+        """Append an install record, evicting the oldest past the ring
+        limit (each eviction leaves as an obs event, so the probe
+        history survives in the run's JSONL timeline)."""
+        self.swap_log.append((time.monotonic(), version))
+        self._swp.inc()
+        while len(self.swap_log) > self.swap_log_limit:
+            t_inst, v_old = self.swap_log.pop(0)
+            emit_event("serve.swap_evicted", version=v_old,
+                       t_install_monotonic_s=t_inst)
+
     def _install(self, state: _ServeState) -> None:
         """Rebind the served state (CALL UNDER self._lock): every
         install bumps the generation token."""
         self._state = dataclasses.replace(state, gen=self._state.gen + 1)
-        self.swap_log.append((time.monotonic(), self._state.version))
+        self._log_swap(self._state.version)
 
     def swap(self, model: FactoredModel, step: Optional[int] = None) -> str:
         """Install a new model version; in-flight waves finish on the
         old one.  Returns the new version id."""
-        state = self._prepare(model, step)
-        with self._lock:
-            self._install(state)
+        with trace_span("serve.swap", version=model.version, step=step):
+            state = self._prepare(model, step)
+            with self._lock:
+                self._install(state)
         return state.version
 
     @property
@@ -479,48 +516,52 @@ class MTLServer:
         verifies, the server pins the version it is already serving and
         returns False.
         """
-        start = self._state
-        steps = checkpoint.available_steps(store_dir)
-        newer = [s for s in steps
-                 if start.step is None or s > start.step]
-        if not newer:
-            return False
-        step = model = None
-        for cand in reversed(newer):       # newest first, degrade older
-            err = None
-            for attempt in range(retries + 1):
-                try:
-                    step, model = FactoredModel.load(store_dir, cand)
-                    err = None
+        with trace_span("serve.maybe_reload", store=store_dir) as span:
+            span["swapped"] = False
+            start = self._state
+            steps = checkpoint.available_steps(store_dir)
+            newer = [s for s in steps
+                     if start.step is None or s > start.step]
+            if not newer:
+                return False
+            step = model = None
+            for cand in reversed(newer):   # newest first, degrade older
+                err = None
+                for attempt in range(retries + 1):
+                    try:
+                        step, model = FactoredModel.load(store_dir, cand)
+                        err = None
+                        break
+                    except (checkpoint.CheckpointError, ValueError,
+                            KeyError, OSError, json.JSONDecodeError) as e:
+                        err = e
+                        if attempt < retries:
+                            time.sleep(backoff_s * (2 ** attempt))
+                if err is None:
                     break
-                except (checkpoint.CheckpointError, ValueError, KeyError,
-                        OSError, json.JSONDecodeError) as e:
-                    err = e
-                    if attempt < retries:
-                        time.sleep(backoff_s * (2 ** attempt))
-            if err is None:
-                break
-            warnings.warn(
-                f"serve store {store_dir} step {cand} failed to load "
-                f"after {retries + 1} attempts ({type(err).__name__}: "
-                f"{err}) — skipping it (pinning the served version if "
-                f"nothing older verifies)")
-        if model is None:
-            return False                  # every newer step is damaged
-        if model.version == start.version:
-            # already serving this exact artifact (e.g. from memory,
-            # before its save): adopt the store step, report no swap
+                warnings.warn(
+                    f"serve store {store_dir} step {cand} failed to load "
+                    f"after {retries + 1} attempts ({type(err).__name__}: "
+                    f"{err}) — skipping it (pinning the served version if "
+                    f"nothing older verifies)")
+            if model is None:
+                return False              # every newer step is damaged
+            if model.version == start.version:
+                # already serving this exact artifact (e.g. from memory,
+                # before its save): adopt the store step, report no swap
+                with self._lock:
+                    if self._state.gen == start.gen:
+                        self._install(dataclasses.replace(self._state,
+                                                          step=step))
+                return False
+            state = self._prepare(model, step)
             with self._lock:
-                if self._state.gen == start.gen:
-                    self._install(dataclasses.replace(self._state,
-                                                      step=step))
-            return False
-        state = self._prepare(model, step)
-        with self._lock:
-            if self._state.gen != start.gen:
-                return False              # lost the race to another install
-            self._install(state)
-        return True
+                if self._state.gen != start.gen:
+                    return False          # lost the race to another install
+                self._install(state)
+            span["swapped"] = True
+            span["version"] = state.version
+            return True
 
     # -- scoring -------------------------------------------------------
     def resolve(self, task_key: str) -> int:
@@ -582,6 +623,10 @@ class MTLServer:
         n, B = ids.shape[0], self.B
         if n == 0:
             return jnp.zeros((0,), X.dtype)
+        # SLO latency window: the jit'd dispatch loop + the one host
+        # validity sync — perf_counter (monotonic, high-res) measured
+        # on the host AROUND the device work, not inside it
+        t0 = time.perf_counter()
         outs: List[jnp.ndarray] = []
         oks: List[jnp.ndarray] = []
         one_wave = n == B                      # the common serving case:
@@ -599,8 +644,12 @@ class MTLServer:
         # ONE host round-trip validates every wave of the call
         ok_all = oks[0] if len(oks) == 1 else jnp.all(jnp.stack(oks))
         if not bool(ok_all):
+            self._bad.inc()
             raise ValueError(f"task ids outside [0, {st.model.m}) in "
                              "this model version")
+        self._lat.observe(time.perf_counter() - t0)
+        self._req.inc(n)
+        self._wav.inc(len(outs))
         return outs[0] if len(outs) == 1 else jnp.concatenate(outs)
 
     def score(self, task_ids, X) -> Tuple[jnp.ndarray, str]:
@@ -634,8 +683,9 @@ class MTLServer:
         the new task's id.  Concurrent onboards serialize on the
         server lock so none is lost.
         """
-        with self._lock:
-            model = self._state.model.onboard(task_key, X, y, l2=l2,
-                                              iters=iters)
-            self._install(self._prepare(model, self._state.step))
+        with trace_span("serve.onboard", task_key=task_key):
+            with self._lock:
+                model = self._state.model.onboard(task_key, X, y, l2=l2,
+                                                  iters=iters)
+                self._install(self._prepare(model, self._state.step))
         return model.m - 1

@@ -45,6 +45,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.methods.base import MTLProblem, STOCHASTIC_SOLVERS
+from ..obs.metrics import default_registry
+from ..obs.tracing import trace_span
 
 # solvers whose signatures accept a predictor warm start (init_W) /
 # a spectral-engine carry (sv_carry): the prox family re-enters from
@@ -165,7 +167,7 @@ class StreamingResolver:
                  local_steps: Optional[int] = None, batch_seed: int = 0,
                  warm_start: bool = True, warm_from=None,
                  backend: str = "sim", buffer_seed: int = 0,
-                 solver_hp: Optional[Dict] = None):
+                 solver_hp: Optional[Dict] = None, registry=None):
         if method not in STOCHASTIC_SOLVERS:
             raise ValueError(
                 f"streaming re-solves run the stochastic worker path; "
@@ -197,6 +199,16 @@ class StreamingResolver:
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self.error: Optional[BaseException] = None
+        # SLO gauges/counters (DESIGN.md §15) land in the same registry
+        # the server reports its latency into, so one snapshot carries
+        # the whole closed loop
+        self.registry = default_registry() if registry is None else registry
+        self._g_stale_old = self.registry.gauge(
+            "streaming_staleness_oldest_seconds")
+        self._g_stale_new = self.registry.gauge(
+            "streaming_staleness_newest_seconds")
+        self._g_solve = self.registry.gauge("streaming_solve_seconds")
+        self._c_refresh = self.registry.counter("streaming_refreshes_total")
 
     # -- the loop body -------------------------------------------------
     def ingest(self, Xs_new, ys_new,
@@ -235,15 +247,26 @@ class StreamingResolver:
                 warmed = True
         if self.method in WARM_SV_SOLVERS:
             hp["keep_sv_carry"] = True
-        t0 = time.monotonic()
-        res = api.solve(prob, method=self.method, backend=self.backend, **hp)
-        self._prev_W = res.W
-        self._prev_sv = res.extras.get("sv_carry")
-        model = res.factorize(self.rank)
-        step = model.save(self.store_dir)
-        reloaded = self.server.maybe_reload(self.store_dir) \
-            if self.server is not None else False
+        # durations from perf_counter (never the wall clock); staleness
+        # stays on time.monotonic for comparability with the arrival
+        # stamps taken at ingest
+        t0_perf = time.perf_counter()
+        with trace_span("streaming.refresh", refresh=self._refresh_idx,
+                        method=self.method):
+            with trace_span("streaming.solve", method=self.method,
+                            rounds=self.rounds, warm=warmed):
+                res = api.solve(prob, method=self.method,
+                                backend=self.backend, **hp)
+            self._prev_W = res.W
+            self._prev_sv = res.extras.get("sv_carry")
+            with trace_span("streaming.factorize", rank=self.rank):
+                model = res.factorize(self.rank)
+            with trace_span("streaming.publish", store=self.store_dir):
+                step = model.save(self.store_dir)
+                reloaded = self.server.maybe_reload(self.store_dir) \
+                    if self.server is not None else False
         t_pub = time.monotonic()
+        solve_s = time.perf_counter() - t0_perf
         arrivals, self._pending_arrivals = self._pending_arrivals, []
         report = {
             "refresh": self._refresh_idx,
@@ -254,13 +277,17 @@ class StreamingResolver:
             "store_step": int(step),
             "reloaded": bool(reloaded),
             "served_version": getattr(self.server, "version", None),
-            "solve_s": t_pub - t0,
+            "solve_s": solve_s,
             "staleness_oldest_s":
                 (t_pub - min(arrivals)) if arrivals else 0.0,
             "staleness_newest_s":
                 (t_pub - max(arrivals)) if arrivals else 0.0,
             "ingests_absorbed": len(arrivals),
         }
+        self._g_stale_old.set(report["staleness_oldest_s"])
+        self._g_stale_new.set(report["staleness_newest_s"])
+        self._g_solve.set(solve_s)
+        self._c_refresh.inc()
         self._refresh_idx += 1
         self.history.append(report)
         self._last_result = res

@@ -1,0 +1,325 @@
+"""The unified telemetry layer (repro.obs, DESIGN.md §15).
+
+Three pillars, each with its invariant:
+
+* device round metrics — ``metrics=True`` must leave W and the
+  CommLog bit-identical on both drivers and backends while delivering
+  per-round arrays;
+* host span tracing — the JSONL schema round-trips and the Chrome
+  export is valid trace-event JSON;
+* SLO metrics — histogram percentiles agree with ``np.quantile`` to a
+  bucket ratio, the registry snapshots/Prometheus text render, and
+  the server/streaming instruments land in a shared registry.
+"""
+import json
+import os
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+import repro
+from repro.core.methods import MTLProblem
+from repro.data.synthetic import SimSpec, generate
+from repro.obs import (LatencyHistogram, MetricsRegistry, Tracer,
+                       bucket_edges, device_bucket_counts,
+                       export_chrome_trace, read_events_jsonl)
+from repro.obs.device import FIELDS
+
+jax.config.update("jax_platform_name", "cpu")
+
+# m divisible by 1/2/4/8 so the in-process mesh backend works at any
+# forced host device count the suite runs under
+SPEC = SimSpec(p=10, m=8, r=2, n=24)
+
+
+@pytest.fixture(scope="module")
+def prob():
+    Xs, ys, _, _ = generate(jax.random.PRNGKey(0), SPEC)
+    return MTLProblem.make(Xs, ys, "squared", A=2.0, r=SPEC.r)
+
+
+def _ledger(res):
+    return [(e.round, e.direction, e.vectors, e.dim, e.note)
+            for e in res.comm.events]
+
+
+# ---------------------------------------------------------------------------
+# pillar 1: device round metrics
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["sim", "mesh"])
+@pytest.mark.parametrize("scan", [True, False])
+def test_metrics_bit_identity(prob, backend, scan):
+    """metrics=True must change NOTHING observable about the solve."""
+    if backend == "mesh" and prob.m % len(jax.devices()):
+        pytest.skip("m not divisible by device count")
+    kw = dict(method="proxgd", backend=backend, rounds=5, lam=0.05,
+              scan=scan)
+    bare = repro.solve(prob, **kw)
+    inst = repro.solve(prob, metrics=True, **kw)
+    assert np.array_equal(np.asarray(bare.W), np.asarray(inst.W))
+    assert _ledger(bare) == _ledger(inst)
+    assert bare.extras["collective_floats_per_chip"] \
+        == inst.extras["collective_floats_per_chip"]
+    assert "metrics" not in bare.extras
+
+
+@pytest.mark.parametrize("method", ["proxgd", "accproxgd", "admm", "dfw",
+                                    "dgsp", "dnsp", "altmin"])
+def test_metrics_per_round_arrays(prob, method):
+    rounds = 4
+    res = repro.solve(prob, method=method, rounds=rounds, metrics=True)
+    mtr = res.extras["metrics"]
+    assert mtr["round"].tolist() == list(range(1, rounds + 1))
+    for f in FIELDS:
+        assert mtr[f].shape == (rounds,), (method, f)
+        assert np.all(np.isfinite(mtr[f])), (method, f)
+    assert mtr["charged_floats_per_round"] > 0
+    assert np.all(mtr["step_norm"] >= 0)
+
+
+def test_metrics_shrink_fields():
+    """Shrink-family solvers report the nuclear-norm objective term and
+    the spectral engine's fallback counter (cumulative, so
+    non-decreasing, and matching the engine's host-side stats).  Needs
+    a problem big enough that the lazy engine doesn't degenerate to
+    exact mode."""
+    Xs, ys, _, _ = generate(jax.random.PRNGKey(1),
+                            SimSpec(p=24, m=16, r=3, n=30))
+    big = MTLProblem.make(Xs, ys, "squared", A=2.0, r=3)
+    res = repro.solve(big, method="proxgd", rounds=6, lam=0.05,
+                      metrics=True, sv_engine="lazy")
+    mtr = res.extras["metrics"]
+    assert np.all(mtr["objective"] > 0)
+    assert np.all(np.diff(mtr["sv_exact"]) >= 0)
+    assert int(mtr["sv_exact"][-1]) == res.extras["sv_exact_rounds"]
+
+
+def test_metrics_objective_matches_recompute(prob):
+    """objective = lam * ||W_k||_* against a direct recompute from the
+    recorded iterates."""
+    lam = 0.05
+    res = repro.solve(prob, method="proxgd", rounds=4, lam=lam,
+                      record_every=1, metrics=True, sv_engine="exact")
+    mtr = res.extras["metrics"]
+    checked = 0
+    for k, W in zip(res.rounds_axis, res.iterates):
+        if k == 0:
+            continue
+        nn = float(np.linalg.svd(np.asarray(W), compute_uv=False).sum())
+        np.testing.assert_allclose(mtr["objective"][k - 1], lam * nn,
+                                   rtol=1e-3)
+        checked += 1
+    assert checked == 4
+
+
+def test_metrics_2d_layout(prob):
+    """The sim-emulated 2-D data-sharded layout carries the obs
+    channel too."""
+    kw = dict(method="proxgd", rounds=3, lam=0.05, data_shards=2)
+    bare = repro.solve(prob, **kw)
+    inst = repro.solve(prob, metrics=True, **kw)
+    assert np.array_equal(np.asarray(bare.W), np.asarray(inst.W))
+    assert _ledger(bare) == _ledger(inst)
+    assert inst.extras["metrics"]["round"].shape == (3,)
+
+
+def test_metrics_static_verify(prob):
+    """The §11 static verifier stays green on the instrumented program
+    (metrics add no collectives by construction)."""
+    res = repro.solve(prob, method="proxgd", rounds=3, lam=0.05,
+                      metrics=True, verify="static")
+    assert res.extras["static_verify"] == "ok"
+    assert res.extras["metrics"]["round"].shape == (3,)
+
+
+def test_metrics_checkpointed_solve(prob):
+    """A segmented (preemption-safe) solve delivers the same W and the
+    same metrics as the uninterrupted instrumented run."""
+    plain = repro.solve(prob, method="proxgd", rounds=5, lam=0.05,
+                        metrics=True)
+    with tempfile.TemporaryDirectory() as d:
+        seg = repro.solve(prob, method="proxgd", rounds=5, lam=0.05,
+                          metrics=True, checkpoint_every=2, ckpt_dir=d)
+    assert np.array_equal(np.asarray(plain.W), np.asarray(seg.W))
+    for f in FIELDS:
+        np.testing.assert_array_equal(plain.extras["metrics"][f],
+                                      seg.extras["metrics"][f])
+
+
+# ---------------------------------------------------------------------------
+# pillar 2: span tracing
+# ---------------------------------------------------------------------------
+def test_span_jsonl_roundtrip(tmp_path):
+    tr = Tracer()
+    tr.configure(str(tmp_path))
+    with tr.span("unit.work", step=3):
+        pass
+    tr.emit("unit.marker", kind="x")
+    events = read_events_jsonl(tr.jsonl_path)
+    assert [e["name"] for e in events] == ["unit.work", "unit.marker"]
+    span, inst = events
+    assert span["ph"] == "X" and span["dur_s"] >= 0
+    assert span["attrs"] == {"step": 3}
+    assert inst["ph"] == "i" and inst["dur_s"] is None
+    for e in events:
+        assert set(e) == {"name", "ph", "t_wall_s", "dur_s", "pid",
+                          "tid", "attrs"}
+    # ring and file agree
+    assert [e["name"] for e in tr.events()] \
+        == [e["name"] for e in events]
+
+
+def test_span_records_on_exception():
+    tr = Tracer()
+    with pytest.raises(RuntimeError):
+        with tr.span("unit.fail"):
+            raise RuntimeError("boom")
+    (ev,) = tr.events()
+    assert ev["attrs"]["error"] == "RuntimeError"
+
+
+def test_chrome_trace_export(tmp_path):
+    tr = Tracer()
+    with tr.span("unit.work"):
+        pass
+    tr.emit("unit.marker")
+    path = os.path.join(str(tmp_path), "trace.json")
+    export_chrome_trace(tr.events(), path)
+    with open(path) as f:
+        doc = json.load(f)
+    evs = doc["traceEvents"]
+    assert {e["ph"] for e in evs} == {"X", "i"}
+    x = next(e for e in evs if e["ph"] == "X")
+    assert x["dur"] >= 0 and x["ts"] > 0
+
+
+def test_tracer_ring_bounded():
+    tr = Tracer(capacity=8)
+    for i in range(20):
+        tr.emit("tick", i=i)
+    evs = tr.events()
+    assert len(evs) == 8
+    assert evs[-1]["attrs"]["i"] == 19
+
+
+def test_tracer_jsonable_handles_arrays():
+    tr = Tracer()
+    ev = tr.emit("unit.np", scalar=np.float32(1.5),
+                 vec=[np.int64(2), 3], nested={"k": np.bool_(True)})
+    assert ev["attrs"] == {"scalar": 1.5, "vec": [2, 3],
+                           "nested": {"k": True}}
+    json.dumps(ev)                      # fully serializable
+
+
+# ---------------------------------------------------------------------------
+# pillar 3: SLO metrics
+# ---------------------------------------------------------------------------
+def test_histogram_percentiles_vs_numpy():
+    rng = np.random.default_rng(0)
+    samples = rng.lognormal(mean=-6.0, sigma=1.0, size=5000)
+    h = LatencyHistogram("t")
+    for s in samples:
+        h.observe(s)
+    assert h.count == samples.size
+    ratio = h.edges[1] / h.edges[0]     # one-bucket geometric tolerance
+    for q in (0.5, 0.9, 0.99):
+        est = h.percentile(q)
+        exact = float(np.quantile(samples, q))
+        assert exact / ratio <= est <= exact * ratio, (q, est, exact)
+    # estimates never leave the observed range
+    assert h.min <= h.percentile(0.0) <= h.percentile(1.0) <= h.max
+
+
+def test_histogram_device_counts_agree():
+    rng = np.random.default_rng(1)
+    samples = rng.lognormal(mean=-6.0, sigma=1.5, size=512)
+    h = LatencyHistogram("host")
+    for s in samples:
+        h.observe(s)
+    counts = np.asarray(device_bucket_counts(samples, bucket_edges()))
+    np.testing.assert_array_equal(counts, h.counts)
+    d = LatencyHistogram("dev")
+    d.merge_counts(counts, total_seconds=float(samples.sum()))
+    np.testing.assert_array_equal(d.counts, h.counts)
+    assert d.count == h.count and d.sum == pytest.approx(h.sum)
+
+
+def test_registry_get_or_create_and_exports(tmp_path):
+    reg = MetricsRegistry()
+    c = reg.counter("reqs")
+    c.inc(3)
+    assert reg.counter("reqs") is c
+    with pytest.raises(TypeError):
+        reg.gauge("reqs")
+    reg.gauge("stale").set(1.5)
+    reg.histogram("lat").observe(0.01)
+    snap = reg.snapshot()
+    assert snap["metrics"]["reqs"]["value"] == 3
+    assert snap["metrics"]["lat"]["count"] == 1
+    path = os.path.join(str(tmp_path), "m.json")
+    reg.write_snapshot(path)
+    with open(path) as f:
+        assert json.load(f)["metrics"]["stale"]["value"] == 1.5
+    prom = reg.to_prometheus()
+    assert "# TYPE reqs counter" in prom and "reqs 3" in prom
+    assert 'lat_bucket{le="+Inf"} 1' in prom and "lat_count 1" in prom
+
+
+def test_server_slo_metrics(prob):
+    from repro.serve.mtl import MTLServer
+    reg = MetricsRegistry()
+    res = repro.solve(prob, method="proxgd", rounds=4, lam=0.05)
+    server = MTLServer(res.factorize(rank=2), batch_size=8, registry=reg)
+    rng = np.random.default_rng(0)
+    ids = rng.integers(0, prob.m, size=20).astype(np.int32)
+    X = rng.normal(size=(20, prob.p)).astype(np.float32)
+    server.score(ids, X)
+    assert reg.counter("serve_requests_total").value == 20
+    assert reg.counter("serve_waves_total").value == 3   # ceil(20/8)
+    assert reg.histogram("serve_latency_seconds").count == 1
+    assert reg.counter("serve_swaps_total").value == 1   # the install
+    with pytest.raises(ValueError):
+        server.score(np.array([prob.m + 5], np.int32), X[:1])
+    assert reg.counter("serve_invalid_batches_total").value == 1
+    # latency histogram untouched by the rejected batch
+    assert reg.histogram("serve_latency_seconds").count == 1
+
+
+def test_server_swap_log_ring(prob):
+    from repro.obs.tracing import default_tracer
+    from repro.serve.mtl import MTLServer
+    res = repro.solve(prob, method="proxgd", rounds=3, lam=0.05)
+    server = MTLServer(res.factorize(rank=2), registry=MetricsRegistry(),
+                       swap_log_limit=3)
+    tr = default_tracer()
+    tr.clear()
+    rng = np.random.default_rng(0)
+    for _ in range(4):                  # 1 install + 4 onboards = 5 > 3
+        server.onboard(None, rng.normal(size=(5, prob.p)),
+                       rng.normal(size=(5,)))
+    assert len(server.swap_log) == 3
+    evicted = [e for e in tr.events() if e["name"] == "serve.swap_evicted"]
+    assert len(evicted) == 2
+    # the ring's newest entry is the served version
+    assert server.swap_log[-1][1] == server.version
+    with pytest.raises(ValueError):
+        MTLServer(res.factorize(rank=2), swap_log_limit=0)
+
+
+def test_streaming_staleness_gauges(prob):
+    from repro.train.streaming import SampleStream, StreamingResolver
+    _, _, Wstar, Sigma = generate(jax.random.PRNGKey(0), SPEC)
+    reg = MetricsRegistry()
+    with tempfile.TemporaryDirectory() as d:
+        resolver = StreamingResolver(prob, None, d, method="proxgd",
+                                     rounds=2, solver_hp={"lam": 0.05},
+                                     registry=reg)
+        stream = SampleStream(Wstar, Sigma, seed=0)
+        report = resolver.step(stream, count=2)
+    assert reg.counter("streaming_refreshes_total").value == 1
+    g = reg.gauge("streaming_staleness_oldest_seconds")
+    assert g.value == pytest.approx(report["staleness_oldest_s"])
+    assert reg.gauge("streaming_solve_seconds").value \
+        == pytest.approx(report["solve_s"])
